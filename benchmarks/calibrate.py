@@ -1,0 +1,186 @@
+"""Calibrate the analytic comm model against the paper's quoted datapoints.
+
+Random-search fit of the MachineModel constants to the paper's measured
+speedups (Figs. 2-5).  The resulting constants are frozen into
+``repro/configs/comb_paper.py``; re-run this script to re-derive them.
+
+    PYTHONPATH=src python -m benchmarks.calibrate [--iters N] [--seed S]
+
+Targets are (figure, configuration, quoted speedup %).  The objective is a
+weighted relative least-squares; soft targets (paper datapoints that are noisy
+or internally inconsistent — see EXPERIMENTS.md §Paper) carry lower weight.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import random
+
+from repro.core.model_comm import MachineModel, StencilWorkload, simulate, speedup
+
+
+def _trio(m, wl, nprocs, rpn=32, threads=2, n_parts=None):
+    b = simulate("standard", m, wl, nprocs=nprocs, ranks_per_node=rpn, threads=threads)
+    p = simulate("persistent", m, wl, nprocs=nprocs, ranks_per_node=rpn, threads=threads)
+    q = simulate(
+        "partitioned", m, wl, nprocs=nprocs, ranks_per_node=rpn, threads=threads,
+        n_parts=n_parts,
+    )
+    return b, p, q
+
+
+def predictions(m: MachineModel) -> dict[str, float]:
+    out = {}
+    # Fig 2 (weak scaling, face msgs of 524288 doubles, 32 rpn, 2 thr/core)
+    wl = StencilWorkload.from_face_doubles(524288)
+    b, p, q = _trio(m, wl, 4096)
+    out["fig2_pers_4096"] = speedup(b, p)
+    out["fig2_part_4096"] = speedup(b, q)
+    # Fig 3 (strong scaling, 2048^3 mesh)
+    for n in (128, 1024, 2048, 4096):
+        wl = StencilWorkload.from_global_mesh((2048, 2048, 2048), n)
+        b, p, q = _trio(m, wl, n)
+        out[f"fig3_pers_{n}"] = speedup(b, p)
+        out[f"fig3_part_{n}"] = speedup(b, q)
+    # Fig 4 (message-size sweep at 4096 procs)
+    for doubles in (768, 196608):
+        wl = StencilWorkload.from_face_doubles(doubles)
+        b, p, q = _trio(m, wl, 4096)
+        out[f"fig4_pers_{doubles}"] = speedup(b, p)
+        out[f"fig4_part_{doubles}"] = speedup(b, q)
+    # Fig 5 (ranks-per-node sweep, 64 nodes, 64 threads/node)
+    for rpn in (1, 2, 8, 32):
+        n = 64 * rpn
+        threads = 64 // rpn
+        wl = StencilWorkload.from_global_mesh((2048, 4096, 4096), n)
+        b, p, q = _trio(m, wl, n, rpn=rpn, threads=threads)
+        out[f"fig5_pers_{rpn}"] = speedup(b, p)
+        out[f"fig5_part_{rpn}"] = speedup(b, q)
+    return out
+
+
+# (key, target %, weight) — weights reflect how load-bearing each quoted
+# number is for the paper's claims C1-C6 (see DESIGN.md §1).
+TARGETS = [
+    ("fig2_pers_4096", 12.5, 3.0),  # C1
+    ("fig2_part_4096", 27.0, 3.0),  # C2 (weak)
+    ("fig3_pers_128", 0.0, 0.25),  # soft: endpoint, tension with fig5 C1
+    ("fig3_part_128", 12.0, 1.5),
+    ("fig3_part_1024", 68.0, 1.0),  # C2 peak — soft: single-point outlier; a
+    #   flat NIC-share model cannot produce 68% here and 27% in fig2 with
+    #   comparable byte volumes (see EXPERIMENTS.md §Paper residuals)
+    ("fig3_pers_2048", 37.0, 3.0),  # C1 peak
+    ("fig3_pers_4096", 0.0, 0.25),  # soft: noisy endpoint
+    ("fig3_part_4096", 4.4, 1.5),
+    ("fig4_pers_768", 0.0, 1.0),  # "performed similarly to the baseline"
+    ("fig4_part_768", -42.2, 3.0),  # C3: baseline 73% faster => 1/1.73-1
+    ("fig4_pers_196608", 21.0, 2.5),  # C4
+    ("fig4_part_196608", 37.0, 3.0),  # C4
+    ("fig5_pers_1", 20.0, 1.5),  # C1: ~20% at every rpn
+    ("fig5_part_1", -25.0, 2.0),  # C5: "significantly worse" at 1 rpn
+    ("fig5_pers_8", 20.0, 1.5),
+    ("fig5_part_8", 25.0, 1.5),  # overtakes persistent at 8 rpn
+    ("fig5_pers_32", 20.0, 1.5),
+    ("fig5_part_32", 30.0, 1.0),
+]
+
+# search space: (field, low, high, log?)
+SPACE = [
+    ("alpha", 0.5e-6, 6e-6, True),
+    ("o_msg", 0.3e-6, 4e-6, True),
+    ("o_persist_msg", 0.05e-6, 1e-6, True),
+    ("o_part", 0.2e-6, 8e-6, True),
+    ("pack_bw", 0.8e9, 6e9, True),
+    ("mem_bw", 2e9, 12e9, True),
+    ("contention_coef", 0.0, 0.25, False),
+    ("on_node_fraction", 0.2, 0.8, False),
+    ("proto_frac", 0.0, 0.6, False),
+    ("rdv_rtt_factor", 0.0, 8.0, False),
+    ("burst_penalty", 0.0, 0.8, False),
+    ("burst_scale", 0.0, 1.2, False),
+    ("tm_coef", 0.0, 0.3, False),
+    ("socket_split_penalty", 1.0, 6.0, False),
+    ("ht_eff", 0.05, 0.6, False),
+]
+
+
+def loss(m: MachineModel) -> float:
+    pred = predictions(m)
+    total = 0.0
+    for key, target, w in TARGETS:
+        scale = max(abs(target), 10.0)
+        total += w * ((pred[key] - target) / scale) ** 2
+    # physical-consistency constraints
+    if m.o_persist_msg > m.o_msg:  # persistent posting must not cost more
+        total += 10.0 * (m.o_persist_msg / m.o_msg - 1.0)
+    return total
+
+
+def sample(rng: random.Random, base: MachineModel) -> MachineModel:
+    kw = {}
+    for field, lo, hi, log in SPACE:
+        if log:
+            kw[field] = math.exp(rng.uniform(math.log(lo), math.log(hi)))
+        else:
+            kw[field] = rng.uniform(lo, hi)
+    return dataclasses.replace(base, **kw)
+
+
+def perturb(rng: random.Random, m: MachineModel, temp: float) -> MachineModel:
+    kw = {}
+    for field, lo, hi, log in SPACE:
+        v = getattr(m, field)
+        if log:
+            v = math.exp(
+                min(math.log(hi), max(math.log(lo),
+                    math.log(v) + rng.gauss(0, temp * (math.log(hi) - math.log(lo)))))
+            )
+        else:
+            v = min(hi, max(lo, v + rng.gauss(0, temp * (hi - lo))))
+        kw[field] = v
+    return dataclasses.replace(m, **kw)
+
+
+def calibrate(iters: int = 4000, seed: int = 0, verbose: bool = True) -> MachineModel:
+    rng = random.Random(seed)
+    base = MachineModel()
+    best, best_loss = base, loss(base)
+    for i in range(iters):
+        if i < iters // 2:
+            cand = sample(rng, base)
+        else:
+            cand = perturb(rng, best, temp=0.08)
+        l = loss(cand)
+        if l < best_loss:
+            best, best_loss = cand, l
+            if verbose:
+                print(f"iter {i}: loss {l:.4f}")
+    return best
+
+
+def report(m: MachineModel) -> None:
+    pred = predictions(m)
+    print("\n# key                 paper     model    |err|")
+    for key, target, w in TARGETS:
+        p = pred[key]
+        print(f"{key:22s} {target:8.1f} {p:8.1f} {abs(p-target):8.1f}   (w={w})")
+    print("\n# calibrated MachineModel fields:")
+    for field, *_ in SPACE:
+        v = getattr(m, field)
+        print(f"    {field}={v:.6g},")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=4000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    m = calibrate(args.iters, args.seed)
+    report(m)
+    print(f"\nfinal loss: {loss(m):.4f}")
+
+
+if __name__ == "__main__":
+    main()

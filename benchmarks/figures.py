@@ -1,0 +1,114 @@
+"""Paper-figure benchmarks (Figs. 2-5): model-projected cluster-scale sweeps.
+
+Each function reproduces one figure of the paper using the calibrated
+Quartz-class machine model (configs/comb_paper.py).  Output rows are CSV:
+``name,us_per_call,derived`` where ``derived`` carries the paper-style
+speedup percentages.  Per-claim comparison against the paper's quoted numbers
+is appended (EXPERIMENTS.md §Paper mirrors it).
+"""
+
+from __future__ import annotations
+
+from repro.configs import comb_paper as cp
+from repro.core.model_comm import simulate, speedup
+
+
+def _trio(wl, nprocs, rpn, threads, n_parts=None):
+    b = simulate("standard", cp.QUARTZ, wl, nprocs=nprocs, ranks_per_node=rpn,
+                 threads=threads)
+    p = simulate("persistent", cp.QUARTZ, wl, nprocs=nprocs, ranks_per_node=rpn,
+                 threads=threads)
+    q = simulate("partitioned", cp.QUARTZ, wl, nprocs=nprocs, ranks_per_node=rpn,
+                 threads=threads, n_parts=n_parts)
+    return b, p, q
+
+
+def fig2_weak_scaling(emit) -> dict:
+    cfg = cp.FIG2_WEAK
+    wl = cp.fig2_workload()
+    out = {}
+    for n in cfg["procs"]:
+        b, p, q = _trio(wl, n, cfg["ranks_per_node"], cfg["threads"])
+        emit(f"fig2/weak/std/p{n}", b.total * 1e6, "")
+        emit(f"fig2/weak/pers/p{n}", p.total * 1e6,
+             f"speedup={speedup(b, p):.1f}%")
+        emit(f"fig2/weak/part/p{n}", q.total * 1e6,
+             f"speedup={speedup(b, q):.1f}%")
+        out[n] = (speedup(b, p), speedup(b, q))
+    return out
+
+
+def fig3_strong_scaling(emit) -> dict:
+    cfg = cp.FIG3_STRONG
+    out = {}
+    for n in cfg["procs"]:
+        wl = cp.fig3_workload(n)
+        b, p, q = _trio(wl, n, cfg["ranks_per_node"], cfg["threads"])
+        face = wl.messages()[0]
+        emit(f"fig3/strong/std/p{n}", b.total * 1e6, f"face_bytes={face}")
+        emit(f"fig3/strong/pers/p{n}", p.total * 1e6,
+             f"speedup={speedup(b, p):.1f}%")
+        emit(f"fig3/strong/part/p{n}", q.total * 1e6,
+             f"speedup={speedup(b, q):.1f}%")
+        out[n] = (speedup(b, p), speedup(b, q))
+    return out
+
+
+def fig4_message_size(emit) -> dict:
+    cfg = cp.FIG4_MSG_SIZE
+    out = {}
+    for doubles in cfg["doubles"]:
+        wl = cp.fig4_workload(doubles)
+        b, p, q = _trio(wl, cfg["procs"], cfg["ranks_per_node"], cfg["threads"])
+        emit(f"fig4/msgsize/std/d{doubles}", b.total * 1e6, "")
+        emit(f"fig4/msgsize/pers/d{doubles}", p.total * 1e6,
+             f"speedup={speedup(b, p):.1f}%")
+        emit(f"fig4/msgsize/part/d{doubles}", q.total * 1e6,
+             f"speedup={speedup(b, q):.1f}%")
+        out[doubles] = (speedup(b, p), speedup(b, q))
+    return out
+
+
+def fig5_ranks_per_node(emit) -> dict:
+    cfg = cp.FIG5_RANKS_PER_NODE
+    out = {}
+    for rpn in cfg["ranks_per_node"]:
+        n = cfg["nodes"] * rpn
+        threads = cfg["threads_per_node"] // rpn
+        wl = cp.fig5_workload(n)
+        b, p, q = _trio(wl, n, rpn, threads)
+        emit(f"fig5/rpn{rpn}/std", b.total * 1e6, f"threads={threads}")
+        emit(f"fig5/rpn{rpn}/pers", p.total * 1e6,
+             f"speedup={speedup(b, p):.1f}%")
+        emit(f"fig5/rpn{rpn}/part", q.total * 1e6,
+             f"speedup={speedup(b, q):.1f}%")
+        out[rpn] = (speedup(b, p), speedup(b, q))
+    return out
+
+
+# paper-claim validation table (C1-C6 of DESIGN.md §1)
+def claims_table(emit) -> list[tuple[str, str, float, float]]:
+    f2 = fig2_weak_scaling(lambda *a: None)
+    f3 = fig3_strong_scaling(lambda *a: None)
+    f4 = fig4_message_size(lambda *a: None)
+    f5 = fig5_ranks_per_node(lambda *a: None)
+    rows = [
+        ("C1", "pers>=base everywhere (weak@4096: paper 12.5%)", 12.5, f2[4096][0]),
+        ("C1", "pers peak (strong@2048: paper 37%)", 37.0, f3[2048][0]),
+        ("C2", "part total weak@4096 (paper 27%)", 27.0, f2[4096][1]),
+        ("C2", "part peak strong@1024 (paper 68%)", 68.0, f3[1024][1]),
+        ("C3", "part small-msg penalty (paper -42.2%)", -42.2, f4[768][1]),
+        ("C4", "pers large-msg (paper 21%)", 21.0, f4[196608][0]),
+        ("C4", "part large-msg (paper 37%)", 37.0, f4[196608][1]),
+        ("C5", "part @1 rank/node worse than base (<0)", -1.0, f5[1][1]),
+        ("C5", "part overtakes pers by 8 rpn", 0.0, f5[8][1] - f5[8][0]),
+        ("C6", "weak curves rise with scale (base@4096/base@64 > 1)", 1.0,
+         None),
+    ]
+    wl = cp.fig2_workload()
+    b64, _, _ = _trio(wl, 64, 32, 2)
+    b4096, _, _ = _trio(wl, 4096, 32, 2)
+    rows[-1] = (rows[-1][0], rows[-1][1], 1.0, b4096.total / b64.total)
+    for claim, desc, paper_val, model_val in rows:
+        emit(f"claims/{claim}", model_val, f"paper={paper_val} :: {desc}")
+    return rows

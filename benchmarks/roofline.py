@@ -1,0 +1,155 @@
+"""Roofline report: three terms per (arch x shape) cell from the dry-run.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--tag hillclimb-x] [--csv]
+
+Reads results/dryrun/<cell>.json (produced by repro.launch.dryrun), computes
+
+    compute term    = HLO_FLOPs_per_device / 197 TFLOP/s
+    memory term     = HLO_bytes_per_device / 819 GB/s
+    collective term = wire_bytes_per_device / 50 GB/s/link
+
+plus MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE, + attention quadratic term),
+the useful-compute ratio MODEL_FLOPS/HLO_FLOPs, the dominant bottleneck, and
+the roofline MFU bound.  Writes results/roofline.md and prints CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.hlo_analysis import V5E, roofline
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS for one step of this cell (global)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+        attn_ctx = shape.seq_len
+        causal_factor = 0.5
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+        attn_ctx = shape.seq_len
+        causal_factor = 0.5 if cfg.causal else 1.0
+    else:  # decode: one token against a seq_len cache
+        tokens = shape.global_batch * 1
+        mult = 2.0
+        attn_ctx = shape.seq_len
+        causal_factor = 1.0
+    flops = mult * n * tokens
+    if cfg.n_heads and cfg.family not in ("rwkv",):
+        d_attn = cfg.n_heads * cfg.resolved_head_dim
+        n_attn_layers = cfg.n_layers
+        if cfg.family == "hybrid":
+            n_attn_layers = max(1, cfg.n_layers // max(1, cfg.attn_every))
+        flops += (mult * 2 * d_attn * attn_ctx * causal_factor
+                  * n_attn_layers * tokens)
+    return flops
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> list[dict]:
+    suffix = f".{tag}" if tag else ""
+    out = []
+    # tagged variants are named <arch>.<shape>.<mesh>.<tag>.json, which the
+    # suffix-anchored glob already excludes when tag == "".
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                              f"*.{mesh}{suffix}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def cell_roofline(cell: dict):
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    mf = model_flops(cfg, shape)
+    full = cell["full"]
+    return roofline(
+        hlo_flops_per_device=full["flops"],
+        hlo_bytes_per_device=full["bytes"],
+        wire_bytes_per_device=full["wire_bytes"],
+        model_flops_global=mf,
+        n_chips=cell["n_devices"],
+    )
+
+
+_ACTIONS = {
+    "compute": "reduce recompute (remat policy) / raise useful-flop ratio",
+    "memory": "fuse attention score traffic (blockwise/flash) and cast "
+              "collectives+activations to bf16",
+    "collective": "cut TP all-reduces (seq-sharded RS+AG), overlap with "
+                  "partitioned collectives, hoist FSDP gathers",
+}
+
+
+def report(mesh: str = "single", tag: str = "", emit=None) -> str:
+    cells = load_cells(mesh, tag)
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | bottleneck "
+        f"| MFU bound | useful ratio | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for cell in cells:
+        t = cell_roofline(cell)
+        row = (f"| {cell['arch']} | {cell['shape']} | {t.compute_s:.3f} | "
+               f"{t.memory_s:.3f} | {t.collective_s:.3f} | {t.bottleneck} | "
+               f"{t.mfu_bound*100:.1f}% | {t.useful_flops_ratio:.2f} | "
+               f"{'y' if cell.get('fits_16gb') else 'N'} |")
+        lines.append(row)
+        if emit:
+            emit(f"roofline/{mesh}/{cell['arch']}/{cell['shape']}",
+                 t.step_time_s * 1e6,
+                 f"bottleneck={t.bottleneck};mfu_bound={t.mfu_bound*100:.1f}%;"
+                 f"useful={t.useful_flops_ratio:.2f}")
+    return "\n".join(lines)
+
+
+def detail(arch: str, shape: str, mesh: str = "single", tag: str = "") -> None:
+    suffix = f".{tag}" if tag else ""
+    path = os.path.join(RESULTS_DIR, f"{arch}.{shape}.{mesh}{suffix}.json")
+    with open(path) as f:
+        cell = json.load(f)
+    t = cell_roofline(cell)
+    full = cell["full"]
+    print(f"=== {arch} x {shape} x {mesh}{suffix} ===")
+    print(f"compute    {t.compute_s:9.3f}s   (HLO {full['flops']:.3e} flops/dev)")
+    print(f"memory     {t.memory_s:9.3f}s   (HLO {full['bytes']:.3e} B/dev)")
+    print(f"collective {t.collective_s:9.3f}s   ({full['wire_bytes']/1e9:.1f} GB/dev wire)")
+    print(f"bottleneck: {t.bottleneck} -> {_ACTIONS[t.bottleneck]}")
+    print(f"MODEL_FLOPS/dev {t.model_flops:.3e}; useful ratio "
+          f"{t.useful_flops_ratio:.3f}; MFU bound {t.mfu_bound*100:.1f}%")
+    print("wire by op:", {k: f"{v/1e9:.1f}GB"
+                          for k, v in full["wire_by_op"].items()})
+    print("memory:", {k: f"{v/1e9:.2f}GB" for k, v in full["memory"].items()})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--detail", nargs=2, metavar=("ARCH", "SHAPE"))
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+    if args.detail:
+        detail(args.detail[0], args.detail[1], args.mesh, args.tag)
+        return
+    table = report(args.mesh, args.tag)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(f"# Roofline table ({args.mesh}-pod"
+                    f"{', tag=' + args.tag if args.tag else ''})\n\n")
+            f.write(table + "\n")
+
+
+if __name__ == "__main__":
+    main()

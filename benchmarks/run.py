@@ -1,0 +1,61 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig2..fig5   — the paper's four figures, projected with the calibrated
+                 Quartz-class model (configs/comb_paper.py)
+  claims/*     — model vs the paper's quoted speedups (C1-C6)
+  measured/*   — REAL timings on this host: per-iteration dispatch/plan
+                 overhead of standard vs persistent vs partitioned (8 fake
+                 devices, subprocess)
+  overlap/*    — HLO structural verification that partitioned exchanges
+                 decompose into n_parts independent collectives
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def emit(name: str, us: float | None, derived: str = "") -> None:
+    us_s = f"{us:.2f}" if isinstance(us, (int, float)) and us is not None else ""
+    print(f"{name},{us_s},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="model-only (skip measured subprocess benchmarks)")
+    args = ap.parse_args()
+
+    from benchmarks import figures
+
+    print("# === paper figures (calibrated model projection) ===")
+    figures.fig2_weak_scaling(emit)
+    figures.fig3_strong_scaling(emit)
+    figures.fig4_message_size(emit)
+    figures.fig5_ranks_per_node(emit)
+    print("# === paper-claim validation (model vs quoted numbers) ===")
+    figures.claims_table(emit)
+
+    if not args.fast:
+        print("# === measured (real CPU timings, 8 fake devices) ===")
+        from benchmarks import measured_dispatch
+
+        measured_dispatch.main()
+        print("# === partitioned-overlap structure (HLO analysis) ===")
+        from benchmarks import overlap_analysis
+
+        overlap_analysis.main()
+
+        print("# === LM benchmarks (tiny configs, real step timings) ===")
+        from benchmarks import lm_bench
+
+        lm_bench.main()
+    print("# done")
+
+
+if __name__ == "__main__":
+    main()

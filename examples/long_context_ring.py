@@ -1,0 +1,77 @@
+"""Sequence parallelism demo: ring attention with partitioned KV exchange and
+SSM/RWKV state passing across sequence shards (8 fake CPU devices).
+
+The ring exchange is the paper's partitioned pipeline with attention as the
+consumer: each KV partition is sent as soon as available while the previous
+one is being attended to (MPI_Pready/Parrived -> ppermute chunk + early work).
+
+    PYTHONPATH=src python examples/long_context_ring.py [--seq 512]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.ring import ring_attention, state_passing
+from repro.models import build_model, concrete_batch
+from repro.parallel.context import ParallelContext
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--parts", type=int, default=4)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    B, H, Hkv, D = 2, 8, 4, 32
+    q = jnp.asarray(rng.normal(size=(B, args.seq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, args.seq, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, args.seq, Hkv, D)), jnp.float32)
+    spec = P(None, "model", None, None)
+
+    print(f"ring attention over seq={args.seq} on 8 sequence shards")
+    for n_parts, label in ((1, "fused (persistent-style)"),
+                           (args.parts, f"partitioned (n_parts={args.parts})")):
+        fn = jax.jit(jax.shard_map(
+            lambda a, b, c, n=n_parts: ring_attention(a, b, c, "model",
+                                                      causal=True, n_parts=n),
+            mesh=mesh, in_specs=(spec,) * 3, out_specs=spec, check_vma=False))
+        out = fn(q, k, v)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fn(q, k, v)
+        jax.block_until_ready(out)
+        print(f"  {label:32s} {(time.perf_counter()-t0)/5*1e3:7.2f} ms/call")
+
+    # full end-to-end: zamba2 (SSM + shared attention) with sequence-parallel
+    # prefill — conv ghost cells + associative state passing around the ring.
+    cfg = get_config("zamba2-1.2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    batch = concrete_batch(cfg, 4, args.seq // 4, seed=1)
+    local = ParallelContext(mesh=mesh, model_axis="model")
+    seqp = ParallelContext(mesh=mesh, model_axis="model", seq_parallel=True,
+                           n_parts=args.parts)
+    with jax.set_mesh(mesh):
+        want = jax.jit(lambda p, b: model.loss(p, b, ctx=local))(params, batch)
+        got = jax.jit(lambda p, b: model.loss(p, b, ctx=seqp))(params, batch)
+    print(f"zamba2 seq-parallel loss {float(got):.5f} vs local {float(want):.5f}")
+    np.testing.assert_allclose(float(got), float(want), rtol=2e-2)
+    print("sequence-parallel == local ✓")
+
+
+if __name__ == "__main__":
+    main()

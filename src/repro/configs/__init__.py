@@ -1,0 +1,43 @@
+"""Architecture registry: importing this package registers all assigned archs."""
+
+from repro.configs.base import (  # noqa: F401
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ModelConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+    register,
+)
+
+# one module per assigned architecture (imports register into the registry)
+from repro.configs import (  # noqa: F401
+    rwkv6_1_6b,
+    llama_3_2_vision_11b,
+    qwen2_5_14b,
+    llama3_8b,
+    granite_8b,
+    stablelm_1_6b,
+    phi3_5_moe_42b,
+    grok_1_314b,
+    hubert_xlarge,
+    zamba2_1_2b,
+)
+
+ARCH_IDS = [
+    "rwkv6-1.6b",
+    "llama-3.2-vision-11b",
+    "qwen2.5-14b",
+    "llama3-8b",
+    "granite-8b",
+    "stablelm-1.6b",
+    "phi3.5-moe-42b-a6.6b",
+    "grok-1-314b",
+    "hubert-xlarge",
+    "zamba2-1.2b",
+]

@@ -1,0 +1,88 @@
+"""Comb-paper experiment configuration: Quartz-class machine constants and the
+four figure workloads.
+
+``QUARTZ`` was calibrated against the paper's quoted speedups by
+``benchmarks/calibrate.py`` (random-search weighted least squares; seed 3,
+8000 iters — re-run that script to re-derive).  Per-claim residuals are
+reported in EXPERIMENTS.md §Paper: C1/C3/C5/C6 fit well; the paper's single
+68 % strong-scaling point (C2 peak) is under-predicted ~2x by any smooth
+NIC-share model and is discussed there.
+"""
+
+from __future__ import annotations
+
+from repro.core.model_comm import MachineModel, StencilWorkload
+
+# calibrated constants (benchmarks/calibrate.py, seed 3, loss 8.16)
+QUARTZ = MachineModel(
+    alpha=1.24193e-06,
+    o_msg=1.0175e-06,
+    o_persist_msg=1e-06,
+    o_part=2.71578e-06,
+    pack_bw=6e9,
+    mem_bw=2e9,
+    contention_coef=0.207763,
+    on_node_fraction=0.698488,
+    proto_frac=0.14907,
+    rdv_rtt_factor=5.84895,
+    burst_penalty=0.0,
+    burst_scale=0.791465,
+    tm_coef=0.0112673,
+    socket_split_penalty=2.15235,
+    ht_eff=0.571904,
+    nic_bw=12.5e9,
+    o_persist_init=25e-6,
+    eager_threshold=16384,
+    thread_launch=4.0e-6,
+    threads_per_socket=32,
+    contention_base=64,
+    cores=32,
+)
+
+# paper experiment grids ------------------------------------------------------
+
+FIG2_WEAK = dict(
+    procs=(64, 128, 256, 512, 1024, 2048, 4096),
+    face_doubles=524_288,
+    ranks_per_node=32,
+    threads=2,
+)
+
+FIG3_STRONG = dict(
+    procs=(128, 256, 512, 1024, 2048, 4096),
+    global_cells=(2048, 2048, 2048),
+    ranks_per_node=32,
+    threads=2,
+)
+
+FIG4_MSG_SIZE = dict(
+    procs=4096,
+    doubles=(768, 1536, 3072, 6144, 12288, 24576, 49152, 98304, 196_608),
+    ranks_per_node=32,
+    threads=2,
+)
+
+FIG5_RANKS_PER_NODE = dict(
+    nodes=64,
+    ranks_per_node=(1, 2, 4, 8, 16, 32),
+    threads_per_node=64,
+    global_cells=(2048, 4096, 4096),
+)
+
+
+def fig2_workload() -> StencilWorkload:
+    return StencilWorkload.from_face_doubles(FIG2_WEAK["face_doubles"])
+
+
+def fig3_workload(nprocs: int) -> StencilWorkload:
+    return StencilWorkload.from_global_mesh(FIG3_STRONG["global_cells"], nprocs)
+
+
+def fig4_workload(doubles: int) -> StencilWorkload:
+    return StencilWorkload.from_face_doubles(doubles)
+
+
+def fig5_workload(nprocs: int) -> StencilWorkload:
+    return StencilWorkload.from_global_mesh(
+        FIG5_RANKS_PER_NODE["global_cells"], nprocs
+    )

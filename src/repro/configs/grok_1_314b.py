@@ -1,0 +1,39 @@
+"""Grok-1 314B — 8 experts, top-2 routing, the largest assigned arch.
+
+[hf:xai-org/grok-1; unverified] 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+(per expert) vocab=131072, MoE 8e top-2.
+
+Memory note (256 chips, 16 GB HBM v5e):
+  params bf16           628 GB  -> 2.45 GB/chip
+  grads bf16            628 GB  -> 2.45 GB/chip (reduce-scattered over data)
+  Adam m+v bf16        1256 GB  -> 4.91 GB/chip (ZeRO-1 over data axis)
+  activations (full remat, microbatched) ~2 GB/chip
+  total ~12 GB/chip -> fits.  fp32 Adam states would NOT fit (see DESIGN.md),
+  hence ``opt_state_dtype='bfloat16'`` here.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="grok-1-314b",
+        family="moe",
+        n_layers=64,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=32768,
+        vocab_size=131072,
+        n_experts=8,
+        top_k=2,
+        ep_slots=16,
+        moe_seq_chunk=0,  # §Perf G1: chunking re-reads expert weights per chunk
+        fsdp_experts=True,
+        act="geglu",  # gated gelu (GeGLU)
+        remat="dots",  # §Perf G4: full-remat recompute is pure compute waste here
+        train_microbatches=8,  # §Perf G2: FSDP gather/reduce traffic scales with microbatches
+        grad_accum_dtype="bfloat16",
+        opt_state_dtype="bfloat16",
+        logits_chunk=8192,
+    )
+)

@@ -1,0 +1,36 @@
+# The paper's primary contribution, as composable JAX modules:
+#   plan         — persistent communication/step plans (MPI_Send_init analogue)
+#   partitioned  — chunked early-consume collectives (MPI partitioned analogue)
+#   halo         — N-D ghost-cell exchange with standard/persistent/partitioned
+#   ring         — ring attention + recurrent-state passing (LM integrations)
+#   model_comm   — analytic LogGP-style model of the paper's measurements
+#   hlo_analysis — collective wire-byte parsing + roofline terms
+
+from repro.core.plan import CommPlan, PlanCache, PLANS, persistent, dispatch_standard
+from repro.core.partitioned import (
+    Partitioner,
+    partitioned_ppermute,
+    partitioned_all_to_all,
+    partitioned_psum,
+    partitioned_psum_scatter,
+    ring_all_gather,
+    ring_all_gather_matmul,
+    ring_matmul_reduce_scatter,
+    bucketed_psum_tree,
+    ring_perm,
+)
+from repro.core.halo import HaloSpec, exchange, exchange_axis, build_exchange_step, seq_left_halo
+from repro.core.ring import ring_attention, state_passing
+from repro.core.model_comm import MachineModel, StencilWorkload, TimeBreakdown, simulate, speedup
+from repro.core.hlo_analysis import parse_collectives, roofline, RooflineTerms, Hardware, V5E
+
+__all__ = [
+    "CommPlan", "PlanCache", "PLANS", "persistent", "dispatch_standard",
+    "Partitioner", "partitioned_ppermute", "partitioned_all_to_all",
+    "partitioned_psum", "partitioned_psum_scatter", "ring_all_gather",
+    "ring_all_gather_matmul", "ring_matmul_reduce_scatter", "bucketed_psum_tree",
+    "ring_perm", "HaloSpec", "exchange", "exchange_axis", "build_exchange_step",
+    "seq_left_halo", "ring_attention", "state_passing",
+    "MachineModel", "StencilWorkload", "TimeBreakdown", "simulate", "speedup",
+    "parse_collectives", "roofline", "RooflineTerms", "Hardware", "V5E",
+]

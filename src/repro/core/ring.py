@@ -1,0 +1,211 @@
+"""Sequence-parallel ring primitives built on partitioned communication.
+
+Two LM-side incarnations of the paper's halo-exchange pipeline:
+
+* :func:`ring_attention` — blockwise attention where the KV shard circulates
+  around the mesh-axis ring.  The *partitioned* variant splits each KV block
+  into ``n_parts`` partitions so the permute of partition *k+1* overlaps the
+  attention compute consuming partition *k* (early work), exactly the paper's
+  ``Pready``/``Parrived`` pipeline with attention as the consumer.
+
+* :func:`state_passing` — the recurrent-state "ghost cell" exchange for
+  SSM/RWKV sequence parallelism.  Each device reduces its sequence shard to an
+  affine operator ``s -> D*s + C``; the incoming state for each shard is the
+  exclusive prefix-composition of its predecessors.  ``method='ring'`` is the
+  literal 1-D stencil neighbor pass (k-1 hops); ``method='tree'`` is the
+  beyond-paper log-step doubling scan.
+
+All functions run inside ``shard_map``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.partitioned import Partitioner, ring_perm
+
+_NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _attend_block(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, D)
+    m: jax.Array,  # (B, H, Sq) running max
+    l: jax.Array,  # (B, H, Sq) running denom
+    acc: jax.Array,  # (B, Sq, H, D) running numerator
+    q_off: jax.Array | int,
+    kv_off: jax.Array | int,
+    *,
+    causal: bool,
+    scale: float,
+):
+    """One online-softmax accumulation step over a KV block."""
+    n_rep = q.shape[2] // k.shape[2]
+    kf = _repeat_kv(k, n_rep)
+    vf = _repeat_kv(v, n_rep)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
+    if causal:
+        iq = q_off + jnp.arange(q.shape[1])
+        ik = kv_off + jnp.arange(k.shape[1])
+        mask = iq[:, None] >= ik[None, :]
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    # renormalize previous accumulation
+    corr = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * corr + p.sum(axis=-1)
+    acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(vf.dtype), vf
+    ).astype(acc.dtype)
+    return m_new, l, acc
+
+
+def ring_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    axis_name: str,
+    *,
+    causal: bool = True,
+    n_parts: int = 1,
+    scale: float | None = None,
+    block_fn: Callable | None = None,
+) -> jax.Array:
+    """Sequence-parallel attention with the KV shard circulating a ring.
+
+    q: (B, Sq_local, H, D); k, v: (B, Skv_local, Hkv, D), sequence sharded
+    over ``axis_name``.  Returns (B, Sq_local, H, D) with the same sharding
+    as ``q``.  ``n_parts > 1`` splits each circulating KV block into equal
+    partitions (paper's partitioned pipeline; partition transfer overlaps
+    block attention).  ``block_fn`` may override the per-block accumulation
+    (e.g. the Pallas flash kernel).
+    """
+    ksize = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    attend = block_fn or _attend_block
+
+    m = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
+    l = jnp.zeros((b, h, sq), jnp.float32)
+    acc = jnp.zeros((b, sq, h, d), jnp.float32)
+    q_off = idx * sq
+
+    perm = ring_perm(axis_name) if ksize > 1 else []
+    part = Partitioner(n_parts, 1) if n_parts > 1 else None
+    cur_k, cur_v = k, v
+    for s in range(ksize):
+        owner = (idx - s) % ksize
+        kv_off = owner * skv
+        if s < ksize - 1:
+            # start the next block's transfer (partitioned: n_parts hops)
+            if part is None:
+                nxt_k = lax.ppermute(cur_k, axis_name, perm)
+                nxt_v = lax.ppermute(cur_v, axis_name, perm)
+            else:
+                nxt_k_parts = [lax.ppermute(c, axis_name, perm) for c in part.split(cur_k)]
+                nxt_v_parts = [lax.ppermute(c, axis_name, perm) for c in part.split(cur_v)]
+        # consume the current block while the next one is in flight
+        if part is None:
+            m, l, acc = attend(
+                q, cur_k, cur_v, m, l, acc, q_off, kv_off, causal=causal, scale=scale
+            )
+        else:
+            csize = part.part_size(skv)
+            for ci, (kc, vc) in enumerate(zip(part.split(cur_k), part.split(cur_v))):
+                width = min(csize, skv - ci * csize)
+                if width <= 0:
+                    continue
+                kc = lax.slice_in_dim(kc, 0, width, axis=1)
+                vc = lax.slice_in_dim(vc, 0, width, axis=1)
+                m, l, acc = attend(
+                    q, kc, vc, m, l, acc, q_off, kv_off + ci * csize,
+                    causal=causal, scale=scale,
+                )
+        if s < ksize - 1:
+            if part is None:
+                cur_k, cur_v = nxt_k, nxt_v
+            else:
+                cur_k = part.merge(nxt_k_parts, skv)
+                cur_v = part.merge(nxt_v_parts, skv)
+
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# recurrent-state passing (SSM / RWKV sequence parallelism)
+# ---------------------------------------------------------------------------
+
+
+def state_passing(
+    C: jax.Array,
+    D: jax.Array,
+    axis_name: str,
+    *,
+    method: str = "ring",
+) -> jax.Array:
+    """Exclusive prefix of the affine state operators ``s -> D*s + C`` along a
+    mesh axis; returns the incoming state ``s_in`` for each shard.
+
+    ``C``: each shard's state contribution (state produced from a zero
+    incoming state).  ``D``: each shard's cumulative decay (elementwise,
+    broadcastable to ``C``).  Composition (later ∘ earlier):
+    ``(D2, C2) ∘ (D1, C1) = (D2*D1, D2*C1 + C2)``.
+
+    method='ring' — k-1 neighbor hops (the paper's 1-D stencil transport).
+    method='tree' — ceil(log2(k)) doubling hops + 1 shift (beyond-paper).
+    """
+    k = lax.axis_size(axis_name)
+    if k == 1:
+        return jnp.zeros_like(C)
+    idx = lax.axis_index(axis_name)
+    D = jnp.broadcast_to(D, C.shape).astype(C.dtype)
+
+    if method == "ring":
+        shift = [(i, i + 1) for i in range(k - 1)]  # causal: no wraparound
+        s = jnp.zeros_like(C)
+        for _ in range(k - 1):
+            s = lax.ppermute(D * s + C, axis_name, shift)  # rank 0 gets zeros
+        return s
+
+    if method == "tree":
+        return _tree_state_passing(C, D, axis_name)
+
+    raise ValueError(method)
+
+
+def _tree_state_passing(C: jax.Array, D: jax.Array, axis_name: str) -> jax.Array:
+    """Inclusive doubling scan over affine operators, then shift by one."""
+    k = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    Dc, Cc = D, C
+    hop = 1
+    while hop < k:
+        shift = [(i, i + hop) for i in range(k - hop)]
+        D_prev = lax.ppermute(Dc, axis_name, shift)
+        C_prev = lax.ppermute(Cc, axis_name, shift)
+        has_prev = idx >= hop
+        new_D = Dc * D_prev
+        new_C = Dc * C_prev + Cc
+        Dc = jnp.where(has_prev, new_D, Dc)
+        Cc = jnp.where(has_prev, new_C, Cc)
+        hop *= 2
+    return lax.ppermute(Cc, axis_name, [(i, i + 1) for i in range(k - 1)])

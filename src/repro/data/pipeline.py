@@ -1,0 +1,111 @@
+"""Deterministic synthetic data pipeline with host-side prefetch.
+
+Tokens follow a Zipf-like distribution with a deterministic per-(seed, step)
+stream, so a restarted run consumes byte-identical batches — the property the
+fault-tolerance tests rely on.  A background thread keeps ``prefetch`` batches
+ahead of the training loop and places them with the batch sharding.
+
+Multi-host note: each host would draw only its ``process_index`` slice of the
+global batch (the slicing is in ``_host_slice``); this container has one host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Iterator
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Deterministic synthetic LM/audio/vlm batches for a config."""
+
+    cfg: ModelConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, 0xC0FFEE]))
+        b, s, v = self.global_batch, self.seq_len, self.cfg.vocab_size
+        if self.cfg.family == "audio":
+            frames = rng.normal(size=(b, s, self.cfg.d_vision)).astype(np.float32)
+            labels = self._zipf(rng, (b, s), v)
+            mask = (rng.random((b, s)) < 0.3).astype(np.float32)
+            return {"frames": frames, "labels": labels, "mask": mask}
+        # zipf-ish heavy-tailed token stream + next-token labels
+        tokens = self._zipf(rng, (b, s + 1), v)
+        out = {"tokens": tokens[:, :-1].astype(np.int32),
+               "labels": tokens[:, 1:].astype(np.int32)}
+        if self.cfg.family == "vlm":
+            out["vision_emb"] = rng.normal(
+                size=(b, self.cfg.vision_tokens, self.cfg.d_vision)
+            ).astype(np.float32)
+        return out
+
+    @staticmethod
+    def _zipf(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+        u = rng.random(shape)
+        # inverse-CDF of a truncated zipf(1.1): heavy-tailed like real text
+        ranks = np.floor(np.exp(u * np.log(vocab))).astype(np.int64) - 1
+        return np.clip(ranks, 0, vocab - 1).astype(np.int32)
+
+    def _host_slice(self, batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        n = jax.process_count()
+        if n == 1:
+            return batch
+        i = jax.process_index()
+        return {k: v[i * v.shape[0] // n: (i + 1) * v.shape[0] // n]
+                for k, v in batch.items()}
+
+
+class Prefetcher:
+    """Background-thread prefetch + device placement."""
+
+    def __init__(self, dataset: SyntheticLM, shardings: Any | None = None,
+                 start_step: int = 0, depth: int = 2):
+        self.dataset = dataset
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: dict[str, np.ndarray]) -> dict[str, jax.Array]:
+        if self.shardings is None:
+            return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        return {
+            k: jax.device_put(v, self.shardings[k]) for k, v in batch.items()
+        }
+
+    def _work(self) -> None:
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.dataset.batch_at(step)
+            try:
+                self._q.put((step, self._place(batch)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        return self
+
+    def __next__(self) -> tuple[int, dict]:
+        return self._q.get()
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

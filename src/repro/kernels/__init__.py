@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots:
+#   pack            — halo pack/unpack (strided->contiguous + wire convert)
+#   stencil27       — 27-point stencil interior update
+#   flash_attention — blocked online-softmax attention (LM prefill / ring step)
+#   wkv             — RWKV-6 chunk scan with VMEM-resident recurrent state
+# Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with CPU fallback), and ref.py (pure-jnp oracle used by tests).

@@ -1,0 +1,8 @@
+from repro.kernels.pack.pack import pack_2d, unpack_2d
+from repro.kernels.pack.ops import pack_face, unpack_face
+from repro.kernels.pack.ref import pack_2d_ref, unpack_2d_ref, pack_face_ref
+
+__all__ = [
+    "pack_2d", "unpack_2d", "pack_face", "unpack_face",
+    "pack_2d_ref", "unpack_2d_ref", "pack_face_ref",
+]

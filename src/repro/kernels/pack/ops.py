@@ -1,0 +1,72 @@
+"""Public jit'd wrappers composing slice -> pack kernel -> (exchange) -> unpack.
+
+``pack_face`` / ``unpack_face`` are what the stencil substrate uses; on
+non-TPU backends they fall back to the jnp oracle so CPU tests and smoke runs
+exercise identical semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pack.pack import pack_2d, unpack_2d
+from repro.kernels.pack import ref as _ref
+
+
+def _to_2d(slab: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    shape = slab.shape
+    if slab.ndim == 1:
+        return slab.reshape(1, -1), shape
+    return slab.reshape(-1, shape[-1]), shape
+
+
+def pack_face(
+    x: jax.Array,
+    array_axis: int,
+    side: str,  # 'low' | 'high'
+    halo: int,
+    *,
+    out_dtype=None,
+    scale: float = 1.0,
+    force_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pack one interior boundary face into a contiguous (possibly
+    wire-compressed) 2-D buffer."""
+    size = x.shape[array_axis]
+    if side == "low":
+        slab = jax.lax.slice_in_dim(x, halo, 2 * halo, axis=array_axis)
+    elif side == "high":
+        slab = jax.lax.slice_in_dim(x, size - 2 * halo, size - halo, axis=array_axis)
+    else:
+        raise ValueError(side)
+    flat, _ = _to_2d(slab)
+    if force_kernel or jax.default_backend() == "tpu":
+        return pack_2d(flat, out_dtype=out_dtype, scale=scale, interpret=interpret)
+    return _ref.pack_2d_ref(flat, out_dtype=out_dtype, scale=scale)
+
+
+def unpack_face(
+    x: jax.Array,
+    buf: jax.Array,
+    array_axis: int,
+    side: str,  # ghost side to fill: 'low' | 'high'
+    halo: int,
+    *,
+    scale: float = 1.0,
+    force_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Unpack a received contiguous buffer into the ghost rim of ``x``."""
+    size = x.shape[array_axis]
+    ghost_shape = list(x.shape)
+    ghost_shape[array_axis] = halo
+    if force_kernel or jax.default_backend() == "tpu":
+        vals = unpack_2d(buf, out_dtype=x.dtype, scale=scale, interpret=interpret)
+    else:
+        vals = _ref.unpack_2d_ref(buf, out_dtype=x.dtype, scale=scale)
+    ghost = vals.reshape(ghost_shape)
+    starts = [0] * x.ndim
+    starts[array_axis] = 0 if side == "low" else size - halo
+    return jax.lax.dynamic_update_slice(x, ghost, tuple(starts))

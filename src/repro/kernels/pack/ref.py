@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the pack/unpack kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_2d_ref(slab: jax.Array, *, out_dtype=None, scale: float = 1.0) -> jax.Array:
+    out_dtype = out_dtype or slab.dtype
+    x = slab
+    if scale != 1.0:
+        x = x.astype(jnp.float32) * scale
+    return x.astype(out_dtype)
+
+
+def unpack_2d_ref(buf: jax.Array, *, out_dtype=None, scale: float = 1.0) -> jax.Array:
+    return pack_2d_ref(buf, out_dtype=out_dtype, scale=(1.0 / scale if scale != 1.0 else 1.0))
+
+
+def pack_face_ref(
+    x: jax.Array, array_axis: int, side: str, halo: int,
+    *, out_dtype=None, scale: float = 1.0,
+) -> jax.Array:
+    """Slice the interior boundary slab and pack it contiguously (jnp)."""
+    size = x.shape[array_axis]
+    if side == "low":
+        slab = jax.lax.slice_in_dim(x, halo, 2 * halo, axis=array_axis)
+    elif side == "high":
+        slab = jax.lax.slice_in_dim(x, size - 2 * halo, size - halo, axis=array_axis)
+    else:
+        raise ValueError(side)
+    flat = slab.reshape(-1, slab.shape[-1]) if slab.ndim > 1 else slab.reshape(1, -1)
+    return pack_2d_ref(flat, out_dtype=out_dtype, scale=scale)

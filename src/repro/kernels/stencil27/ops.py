@@ -1,0 +1,22 @@
+"""Public jit'd wrapper for the 27-point stencil update."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.stencil27.stencil27 import stencil27
+from repro.kernels.stencil27.ref import stencil27_ref, jacobi_weights
+
+
+def stencil_update(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    tile: tuple[int, int, int] = (8, 8, 128),
+    force_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """27-point stencil on a ghosted block; Pallas on TPU, jnp oracle on CPU."""
+    if force_kernel or jax.default_backend() == "tpu":
+        return stencil27(x, w, tile=tile, interpret=interpret)
+    return stencil27_ref(x, w)

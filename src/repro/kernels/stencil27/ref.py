@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the 27-point stencil kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil27_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: ghosted (Z+2, Y+2, X+2); w: (3,3,3).  Returns interior (Z, Y, X)."""
+    halo = 1
+    zi, yi, xi = (s - 2 * halo for s in x.shape)
+    acc = jnp.zeros((zi, yi, xi), jnp.float32)
+    for dz in range(3):
+        for dy in range(3):
+            for dx in range(3):
+                acc = acc + w[dz, dy, dx].astype(jnp.float32) * jax.lax.dynamic_slice(
+                    x, (dz, dy, dx), (zi, yi, xi)
+                ).astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def jacobi_weights(dtype=jnp.float32) -> jax.Array:
+    """27-point Jacobi smoothing weights (normalized box kernel)."""
+    w = jnp.ones((3, 3, 3), dtype)
+    return w / jnp.sum(w)

@@ -1,0 +1,5 @@
+from repro.kernels.wkv.wkv import wkv_chunked
+from repro.kernels.wkv.ops import wkv
+from repro.kernels.wkv.ref import wkv_chunked_ref
+
+__all__ = ["wkv_chunked", "wkv", "wkv_chunked_ref"]

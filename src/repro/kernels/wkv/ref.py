@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the WKV chunk-scan kernel (delegates to the validated
+chunked implementation in repro.models.rwkv)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv import wkv_scan
+
+
+def wkv_chunked_ref(r, k, v, lw, u, *, chunk: int = 16) -> jax.Array:
+    """r,k,v,lw: (BH, T, hd); u: (BH, 1, hd).  Returns (BH, T, hd).
+
+    Internal math in f32 (matching the kernel), output in the input dtype."""
+    out_dtype = r.dtype
+    r, k, v, lw, u = (x.astype(jnp.float32) for x in (r, k, v, lw, u))
+    bh, T, hd = r.shape
+    # models.rwkv.wkv_scan wants (B, T, H, hd) + u (H, hd); use B=bh, H=1
+    def to4(x):
+        return x.reshape(bh, T, 1, hd)
+
+    ys = []
+    for i in range(bh):  # per-row u (oracle clarity over speed)
+        y, _ = wkv_scan(to4(r)[i:i + 1], to4(k)[i:i + 1], to4(v)[i:i + 1],
+                        to4(lw)[i:i + 1], u[i, 0][None, :], chunk=chunk)
+        ys.append(y[0, :, 0])
+    return jnp.stack(ys).astype(out_dtype)

@@ -1,0 +1,105 @@
+"""RWKV-6 WKV chunk-scan Pallas TPU kernel.
+
+The rwkv6 train cell is memory-bound on the chunked WKV's pairwise decay
+tensor (c, c, hd), which the pure-jnp path materializes to HBM per chunk
+(EXPERIMENTS.md §Roofline: 23.6 s memory term).  This kernel keeps the
+pairwise tensor, the chunk state, and all intermediates resident in VMEM:
+
+  grid = (B*H, T/c), sequence dimension innermost ("arbitrary" semantics);
+  the (hd, hd) recurrent state lives in VMEM scratch and persists across the
+  chunk sweep of each (batch, head) row, exactly like the flash kernel's
+  running softmax statistics.
+
+Math identical to ``repro.models.rwkv._wkv_chunk`` (the ref oracle):
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T;   y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+with the numerically safe pairwise exponent cum[t-1] - cum[s] <= 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *, c: int,
+                hd: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)  # (c, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)  # log decay, < 0
+    u = u_ref[0].astype(jnp.float32)  # (1, hd) bonus
+    S = s_scr[...]  # (hd, hd)
+
+    cum = jnp.cumsum(lw, axis=0)  # (c, hd)
+    cum_prev = cum - lw
+
+    # state term: y_t += (r_t * exp(cum_{t-1})) . S
+    r_dec = r * jnp.exp(cum_prev)
+    y = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk pairwise term (exponent <= 0, masked strictly-lower)
+    pair = cum_prev[:, None, :] - cum[None, :, :]  # (t, s, hd)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+            > jax.lax.broadcasted_iota(jnp.int32, (c, c), 1))
+    D = jnp.where(mask[..., None], jnp.exp(jnp.minimum(pair, 0.0)), 0.0)
+    A = jnp.einsum("ti,si,tsi->ts", r, k, D)  # (c, c)
+    y = y + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # bonus (diagonal) term
+    y = y + jnp.sum(r * u * k, axis=1, keepdims=True) * v
+
+    o_ref[0, ...] = y.astype(o_ref.dtype)
+
+    # chunk state update: S' = diag(exp(cum_T)) S + sum_s exp(cum_T-cum_s) k_s v_s^T
+    total = cum[-1]  # (hd,)
+    k_dec = k * jnp.exp(total[None, :] - cum)
+    s_scr[...] = jnp.exp(total)[:, None] * S + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked(
+    r: jax.Array,  # (BH, T, hd)
+    k: jax.Array,
+    v: jax.Array,
+    lw: jax.Array,  # (BH, T, hd) log decays (< 0)
+    u: jax.Array,  # (BH, 1, hd) bonus (broadcast per head-row)
+    *,
+    chunk: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, T, hd = r.shape
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    grid = (bh, T // c)
+    kernel = functools.partial(_wkv_kernel, c=c, hd=hd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, hd), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, T, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(r, k, v, lw, u)

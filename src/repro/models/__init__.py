@@ -1,0 +1,3 @@
+from repro.models.api import Model, batch_spec, build_model, concrete_batch
+
+__all__ = ["Model", "batch_spec", "build_model", "concrete_batch"]

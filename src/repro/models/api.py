@@ -1,0 +1,145 @@
+"""Unified model API: every assigned architecture behind one interface.
+
+    model = build_model(get_config("llama3-8b"))
+    params = model.init(jax.random.key(0))
+    loss   = model.loss(params, batch, ctx=ctx)
+    cache  = model.init_cache(batch=8, max_len=1024)
+    logits, cache = model.prefill(params, tokens, cache, ctx=ctx)
+    logits, cache = model.decode_step(params, token, cache, ctx=ctx)
+
+``batch_spec``/``cache_spec`` produce ShapeDtypeStruct stand-ins for the
+dry-run (no allocation); the shapes follow the assigned (arch x shape) cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encoder, hybrid, moe, rwkv, transformer, vision
+from repro.parallel.context import LOCAL, ParallelContext
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": moe,
+    "rwkv": rwkv,
+    "ssm": hybrid,  # pure-ssm arch would use a mamba-only stack; zamba covers hybrid
+    "hybrid": hybrid,
+    "vlm": vision,
+    "audio": encoder,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    module: Any
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key) -> dict:
+        return self.module.init(self.cfg, key)
+
+    def init_shape(self) -> Any:
+        """Abstract params (ShapeDtypeStructs) — no allocation."""
+        return jax.eval_shape(lambda k: self.module.init(self.cfg, k),
+                              jax.random.key(0))
+
+    # -- steps ------------------------------------------------------------------
+    def loss(self, params, batch, *, ctx: ParallelContext = LOCAL):
+        return self.module.loss_fn(self.cfg, params, batch, ctx=ctx)
+
+    def logits(self, params, batch, *, ctx: ParallelContext = LOCAL):
+        if self.cfg.family == "vlm":
+            return self.module.logits_fn(self.cfg, params, batch["tokens"],
+                                         batch["vision_emb"], ctx=ctx)
+        if self.cfg.family == "audio":
+            return self.module.encode(self.cfg, params, batch["frames"], ctx=ctx)
+        return self.module.logits_fn(self.cfg, params, batch["tokens"], ctx=ctx)
+
+    @property
+    def has_decode(self) -> bool:
+        return not self.cfg.is_encoder_only
+
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> dict:
+        return self.module.init_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, batch, cache, *, ctx: ParallelContext = LOCAL):
+        if self.cfg.family == "vlm":
+            return self.module.prefill(self.cfg, params, batch["tokens"],
+                                       batch["vision_emb"], cache, ctx=ctx)
+        return self.module.prefill(self.cfg, params, batch["tokens"], cache,
+                                   ctx=ctx)
+
+    def decode_step(self, params, token, cache, *, ctx: ParallelContext = LOCAL):
+        return self.module.decode_step(self.cfg, params, token, cache, ctx=ctx)
+
+    # -- abstract inputs (dry-run) ------------------------------------------------
+    def batch_spec(self, shape: ShapeConfig) -> dict:
+        return batch_spec(self.cfg, shape)
+
+    def cache_spec(self, batch: int, max_len: int) -> dict:
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len)
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, module=_FAMILY_MODULES[cfg.family])
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one workload cell's inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        spec = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_vision), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+        return spec
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+    }
+    if cfg.family == "vlm":
+        spec["vision_emb"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_vision), jnp.bfloat16)
+    return spec
+
+
+def concrete_batch(cfg: ModelConfig, shape_or_bs, seq: int | None = None,
+                   seed: int = 0) -> dict[str, jax.Array]:
+    """Random concrete batch matching ``batch_spec`` (smoke tests, examples)."""
+    if isinstance(shape_or_bs, ShapeConfig):
+        b, s = shape_or_bs.global_batch, shape_or_bs.seq_len
+    else:
+        b, s = shape_or_bs, seq
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(k1, (b, s, cfg.d_vision), jnp.float32
+                                        ).astype(jnp.bfloat16),
+            "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size),
+            "mask": (jax.random.uniform(k3, (b, s)) < 0.3).astype(jnp.float32),
+        }
+    out = {
+        "tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        out["vision_emb"] = jax.random.normal(
+            k3, (b, cfg.vision_tokens, cfg.d_vision), jnp.float32
+        ).astype(jnp.bfloat16)
+    return out

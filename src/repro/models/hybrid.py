@@ -1,0 +1,252 @@
+"""Zamba2 hybrid: Mamba2 backbone + one shared attention block every N layers.
+
+Layer layout for n_layers=38, attn_every=6:
+    [6 x (6 mamba layers + shared attn block)] + [2 tail mamba layers]
+The shared block has ONE set of weights applied at every interval (zamba2's
+parameter-sharing trick); its input is ``concat(hidden, embeddings)`` through
+a down-projection.  Scan structure: outer scan over the 6 groups (params
+stacked per group) so compile time and cost analysis stay per-group.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as T
+from repro.parallel.context import LOCAL, ParallelContext
+
+Params = dict
+
+
+def group_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, n_tail)."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    return n_groups, g, cfg.n_layers - n_groups * g
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def shared_block_params(cfg: ModelConfig, key) -> Params:
+    k0, k1, k2 = jax.random.split(key, 3)
+    return {
+        "pre_proj": L.dense_init(k0, 2 * cfg.d_model, cfg.d_model,
+                                 jnp.dtype(cfg.param_dtype)),
+        "norm_attn": L.norm_params(cfg),
+        "attn": L.attention_params(cfg, k1),
+        "norm_mlp": L.norm_params(cfg),
+        "mlp": L.mlp_params(cfg, k2),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    n_groups, gsize, n_tail = group_layout(cfg)
+    ke, kg, kt, ks, ko = jax.random.split(key, 5)
+    gkeys = jax.random.split(kg, (n_groups, gsize))
+    groups = jax.vmap(
+        jax.vmap(lambda k: ssm.mamba_params(cfg, k))
+    )(gkeys)
+    p: Params = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model,
+                              jnp.dtype(cfg.param_dtype)),
+        "groups": groups,
+        "shared": shared_block_params(cfg, ks),
+        "norm_f": L.norm_params(cfg),
+        "lm_head": L.embed_init(ko, cfg.vocab_size, cfg.d_model,
+                                jnp.dtype(cfg.param_dtype)),
+    }
+    if n_tail:
+        tkeys = jax.random.split(kt, n_tail)
+        p["tail"] = jax.vmap(lambda k: ssm.mamba_params(cfg, k))(tkeys)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def shared_attn_block(cfg: ModelConfig, sp: Params, x: jax.Array,
+                      emb: jax.Array, positions: jax.Array,
+                      ctx: ParallelContext) -> jax.Array:
+    h = jnp.concatenate([x, emb], axis=-1) @ sp["pre_proj"].astype(x.dtype)
+    h2 = L.apply_norm(cfg, sp["norm_attn"], h)
+    h = h + L.self_attention(cfg, sp["attn"], h2, positions, ctx=ctx)
+    h2 = L.apply_norm(cfg, sp["norm_mlp"], h)
+    h = h + L.apply_mlp(cfg, sp["mlp"], h2)
+    return x + h
+
+
+def hidden_states(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    n_groups, gsize, n_tail = group_layout(cfg)
+    emb = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = emb
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mb = functools.partial(ssm.mamba_block, cfg, ctx=ctx)
+    if cfg.remat != "none":
+        mb = jax.checkpoint(mb)
+
+    def group_body(xc, gp):
+        def layer_body(xl, lp):
+            return mb(lp, xl), None
+
+        xc, _ = jax.lax.scan(layer_body, xc, gp)
+        xc = shared_attn_block(cfg, params["shared"], xc, emb, positions, ctx)
+        return xc, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if n_tail:
+        def tail_body(xl, lp):
+            return mb(lp, xl), None
+
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    return L.apply_norm(cfg, params["norm_f"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = hidden_states(cfg, params, batch["tokens"], ctx=ctx)
+    return L.chunked_lm_loss(x, params["lm_head"], batch["labels"],
+                             cfg.logits_chunk, mask=batch.get("mask"))
+
+
+def logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+              *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = hidden_states(cfg, params, tokens, ctx=ctx)
+    return x @ params["lm_head"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    n_groups, gsize, n_tail = group_layout(cfg)
+    di, nh, hd_s, ns = ssm.dims(cfg)
+    ch = ssm.conv_channels(cfg)
+    hd = cfg.resolved_head_dim
+    dt = dtype or jnp.dtype(cfg.dtype)
+    cache = {
+        "g_conv": jnp.zeros((n_groups, gsize, batch, cfg.conv_kernel - 1, ch), dt),
+        "g_ssd": jnp.zeros((n_groups, gsize, batch, nh, hd_s, ns), jnp.float32),
+        "shared_k": jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "shared_v": jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if n_tail:
+        cache["t_conv"] = jnp.zeros((n_tail, batch, cfg.conv_kernel - 1, ch), dt)
+        cache["t_ssd"] = jnp.zeros((n_tail, batch, nh, hd_s, ns), jnp.float32)
+    return cache
+
+
+def _shared_decode(cfg, sp, x, emb, ck, cv, pos):
+    h = jnp.concatenate([x, emb], axis=-1) @ sp["pre_proj"].astype(x.dtype)
+    h2 = L.apply_norm(cfg, sp["norm_attn"], h)
+    att, ck, cv = L.decode_attention(cfg, sp["attn"], h2, ck, cv, pos)
+    h = h + att
+    h2 = L.apply_norm(cfg, sp["norm_mlp"], h)
+    h = h + L.apply_mlp(cfg, sp["mlp"], h2)
+    return x + h, ck, cv
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array, cache: dict,
+                *, ctx: ParallelContext = LOCAL):
+    n_groups, gsize, n_tail = group_layout(cfg)
+    emb = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    x = emb
+    pos = cache["pos"]
+
+    def group_body(xc, per_group):
+        gp, conv_s, ssd_s, ck, cv = per_group
+
+        def layer_body(xl, per_layer):
+            lp, cs, hs = per_layer
+            out, cs2, hs2 = ssm.mamba_block(cfg, lp, xl, conv_state=cs,
+                                            ssd_state=hs, return_state=True)
+            return out, (cs2, hs2)
+
+        xc, (conv2, ssd2) = jax.lax.scan(layer_body, xc, (gp, conv_s, ssd_s))
+        xc, ck, cv = _shared_decode(cfg, params["shared"], xc, emb, ck, cv, pos)
+        return xc, (conv2, ssd2, ck, cv)
+
+    x, (gc, gs, sk, sv) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["g_conv"], cache["g_ssd"],
+         cache["shared_k"], cache["shared_v"]),
+    )
+    new = {"g_conv": gc, "g_ssd": gs, "shared_k": sk, "shared_v": sv,
+           "pos": pos + 1}
+    if n_tail:
+        def tail_body(xl, per_layer):
+            lp, cs, hs = per_layer
+            out, cs2, hs2 = ssm.mamba_block(cfg, lp, xl, conv_state=cs,
+                                            ssd_state=hs, return_state=True)
+            return out, (cs2, hs2)
+
+        x, (tc, ts) = jax.lax.scan(
+            tail_body, x, (params["tail"], cache["t_conv"], cache["t_ssd"]))
+        new["t_conv"], new["t_ssd"] = tc, ts
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x @ params["lm_head"].T.astype(x.dtype)
+    return logits, new
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: dict,
+            *, ctx: ParallelContext = LOCAL):
+    n_groups, gsize, n_tail = group_layout(cfg)
+    emb = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = emb
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def group_body(xc, gp):
+        def layer_body(xl, lp):
+            out, cs, hs = ssm.mamba_block(cfg, lp, xl, return_state=True)
+            return out, (cs, hs)
+
+        xc, (conv2, ssd2) = jax.lax.scan(layer_body, xc, gp)
+        # shared attn with cache capture
+        sp = params["shared"]
+        h = jnp.concatenate([xc, emb], axis=-1) @ sp["pre_proj"].astype(xc.dtype)
+        h2 = L.apply_norm(cfg, sp["norm_attn"], h)
+        q, k, v = L._project_qkv(cfg, sp["attn"], h2)
+        q = L.apply_rope(cfg, q, positions)
+        k = L.apply_rope(cfg, k, positions)
+        att = L.prefill_attention(cfg, q, k, v, ctx=ctx, causal=True)
+        att = att.reshape(b, s, -1) @ sp["attn"]["wo"].astype(xc.dtype)
+        h = h + att
+        h2 = L.apply_norm(cfg, sp["norm_mlp"], h)
+        h = h + L.apply_mlp(cfg, sp["mlp"], h2)
+        xc = xc + h
+        return xc, (conv2, ssd2, k, v)
+
+    x, (gc, gs, ks, vs) = jax.lax.scan(group_body, x, params["groups"])
+    new = dict(cache)
+    new["g_conv"], new["g_ssd"] = gc, gs
+    new["shared_k"] = jax.lax.dynamic_update_slice(
+        cache["shared_k"], ks.astype(cache["shared_k"].dtype), (0, 0, 0, 0, 0))
+    new["shared_v"] = jax.lax.dynamic_update_slice(
+        cache["shared_v"], vs.astype(cache["shared_v"].dtype), (0, 0, 0, 0, 0))
+    if n_tail:
+        def tail_body(xl, lp):
+            out, cs, hs = ssm.mamba_block(cfg, lp, xl, return_state=True)
+            return out, (cs, hs)
+
+        x, (tc, ts) = jax.lax.scan(tail_body, x, params["tail"])
+        new["t_conv"], new["t_ssd"] = tc, ts
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x[:, -1:] @ params["lm_head"].T.astype(x.dtype)
+    new["pos"] = jnp.full((b,), s, jnp.int32)
+    return logits, new

@@ -1,0 +1,476 @@
+"""Shared neural layers: norms, rotary embeddings, GQA attention (+cache),
+gated MLPs, embeddings.  Pure functions over nested-dict params.
+
+Attention comes in three execution modes, selected by the ParallelContext:
+  * local full attention (jnp oracle / Pallas flash kernel),
+  * ring attention over the model axis (sequence-parallel prefill — the
+    paper's partitioned halo pipeline with attention as the consumer),
+  * single-token decode against a KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.ring import ring_attention
+from repro.kernels.flash_attention import attention as flash_attention_op
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.parallel.context import LOCAL, ParallelContext
+
+Params = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_params(cfg: ModelConfig, dim: int | None = None) -> Params:
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), _pdtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _pdtype(cfg))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (partial-rotary supported: stablelm rope_pct)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(cfg: ModelConfig, head_dim: int) -> jax.Array:
+    rot = int(head_dim * cfg.rope_pct) // 2 * 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) absolute token positions."""
+    d = x.shape[-1]
+    rot = int(d * cfg.rope_pct) // 2 * 2
+    if rot == 0:
+        return x
+    inv = rope_frequencies(cfg, d)  # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_params(cfg: ModelConfig, key) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    pd = _pdtype(cfg)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, pd),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, pd),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, pd),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), pd)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), pd)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), pd)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+_BLOCKWISE_THRESHOLD = 8192  # above this, never materialize S^2 scores
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest block <= target dividing n (n itself for small primes, e.g.
+    the 1601 vision tokens of llama-3.2)."""
+    if n <= target:
+        return n
+    for d in range(target, 0, -1):
+        if n % d == 0:
+            if d >= 128:
+                return d
+            break
+    return n if n <= 8192 else math.gcd(n, target) or n
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    scale: float | None = None,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: double scan over (q, kv) blocks with
+    online-softmax accumulation.  O(q_block x kv_block) score memory — this is
+    what lets the 32k-sequence prefill cells compile within HBM on any
+    backend (the Pallas kernel is the TPU-runtime fast path; this is the
+    portable lowering)."""
+    from repro.core.ring import _attend_block
+
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    qb = _pick_block(sq, q_block)
+    kb = _pick_block(skv, kv_block)
+    scale = scale if scale is not None else d ** -0.5
+    nq, nk = sq // qb, skv // kb
+
+    kc = k.reshape(b, nk, kb, k.shape[2], d).swapaxes(0, 1)
+    vc = v.reshape(b, nk, kb, v.shape[2], d).swapaxes(0, 1)
+    qc = q.reshape(b, nq, qb, h, d).swapaxes(0, 1)
+
+    def q_body(_, qi_blk):
+        qi, qblk = qi_blk
+        m = jnp.full((b, h, qb), -1e30, jnp.float32)
+        l = jnp.zeros((b, h, qb), jnp.float32)
+        acc = jnp.zeros((b, qb, h, d), jnp.float32)
+
+        def kv_body(carry, ki_blk):
+            m_, l_, acc_ = carry
+            ki, kblk, vblk = ki_blk
+            m_, l_, acc_ = _attend_block(
+                qblk, kblk, vblk, m_, l_, acc_, qi * qb, ki * kb,
+                causal=causal, scale=scale)
+            return (m_, l_, acc_), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m, l, acc), (jnp.arange(nk), kc, vc))
+        l = jnp.maximum(l, 1e-30)
+        return None, (acc / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    return out.swapaxes(0, 1).reshape(b, sq, h, d)
+
+
+def _local_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool, ctx: ParallelContext
+) -> jax.Array:
+    """(B, S, H, D)-layout attention on local (unsharded-seq) blocks."""
+    if ctx.use_flash:
+        return flash_attention_op(q, k, v, causal=causal)
+    if max(q.shape[1], k.shape[1]) > _BLOCKWISE_THRESHOLD:
+        return blockwise_attention(q, k, v, causal=causal)
+    return jnp.swapaxes(
+        attention_ref(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            causal=causal,
+        ), 1, 2,
+    )
+
+
+def prefill_attention(
+    cfg: ModelConfig,
+    q: jax.Array,  # (B, S, H, D) post-rope
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    ctx: ParallelContext = LOCAL,
+    causal: bool | None = None,
+) -> jax.Array:
+    """Attention for prefill bodies: ring attention over the model axis when
+    sequence parallelism is on (explicit seq sharding + partitioned KV
+    exchange — the paper's pipeline), else local blockwise attention.
+
+    The explicit ring keeps heads unsharded inside the shard_map, which also
+    sidesteps GSPMD's pathological resharding when n_heads does not divide
+    the model axis (qwen: 40 heads on 16 shards — see EXPERIMENTS.md §Perf).
+    """
+    causal = cfg.causal if causal is None else causal
+    if ctx.seq_parallel and ctx.mesh is not None and ctx.model_axis:
+        def ring(qb, kb, vb):
+            return ring_attention(
+                qb, kb, vb, ctx.model_axis, causal=causal, n_parts=ctx.n_parts)
+
+        spec = P(ctx.data_axes, ctx.model_axis, None, None)
+        return jax.shard_map(
+            ring, mesh=ctx.mesh, in_specs=(spec, spec, spec), out_specs=spec,
+            check_vma=False,
+        )(q, k, v)
+    return _local_attention(q, k, v, causal=causal, ctx=ctx)
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S)
+    *,
+    ctx: ParallelContext = LOCAL,
+    causal: bool | None = None,
+) -> jax.Array:
+    """Full-sequence self attention (training / prefill)."""
+    causal = cfg.causal if causal is None else causal
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    if ctx.seq_parallel and ctx.mesh is not None and ctx.model_axis:
+        # sequence-parallel ring attention: KV shards circulate the model axis
+        # with partitioned (n_parts) exchange — the paper's pipeline.
+        def ring(qb, kb, vb):
+            return ring_attention(
+                qb, kb, vb, ctx.model_axis, causal=causal, n_parts=ctx.n_parts
+            )
+
+        spec = P(ctx.data_axes, ctx.model_axis, None, None)
+        out = jax.shard_map(
+            ring, mesh=ctx.mesh, in_specs=(spec, spec, spec), out_specs=spec,
+            check_vma=False,
+        )(q, k, v)
+    else:
+        out = _local_attention(q, k, v, causal=causal, ctx=ctx)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache_k: jax.Array,  # (B, Smax, Hkv, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,  # (B,) per-sequence positions (continuous batching)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode against a KV cache; returns (out, new_k, new_v).
+
+    ``pos`` is a per-row vector so slots in a shared batched cache may sit at
+    different depths (continuous batching)."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(pos, (b,))
+    positions = pos[:, None]
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    rows = jnp.arange(b)
+    cache_k = cache_k.at[rows, pos].set(k[:, 0].astype(cache_k.dtype),
+                                        mode="drop")
+    cache_v = cache_v.at[rows, pos].set(v[:, 0].astype(cache_v.dtype),
+                                        mode="drop")
+    smax = cache_k.shape[1]
+    hd = cfg.resolved_head_dim
+    group = cfg.n_heads // cfg.n_kv_heads
+    kf = jnp.repeat(cache_k, group, axis=2)
+    vf = jnp.repeat(cache_v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.arange(smax)[None, None, None, :] <= pos[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(b, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+def cross_attention_params(cfg: ModelConfig, key) -> Params:
+    p = attention_params(cfg, key)
+    p["gate_attn"] = jnp.zeros((1,), _pdtype(cfg))
+    p["gate_ffn"] = jnp.zeros((1,), _pdtype(cfg))
+    p["q_norm"] = jnp.ones((cfg.resolved_head_dim,), _pdtype(cfg))
+    p["k_norm"] = jnp.ones((cfg.resolved_head_dim,), _pdtype(cfg))
+    return p
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, S, d) text stream
+    kv_feats: jax.Array,  # (B, T_img, d) projected vision tokens
+) -> jax.Array:
+    """Gated cross attention (llama-3.2-vision image layers)."""
+    b, s, _ = x.shape
+    t = kv_feats.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (kv_feats @ p["wk"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads, hd)
+    v = (kv_feats @ p["wv"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads, hd)
+    # per-head rmsnorm on q/k (hf layout)
+    q = q * jax.lax.rsqrt(jnp.mean(q.astype(jnp.float32) ** 2, -1,
+                                   keepdims=True) + 1e-6).astype(q.dtype)
+    q = q * p["q_norm"].astype(q.dtype)
+    k = k * jax.lax.rsqrt(jnp.mean(k.astype(jnp.float32) ** 2, -1,
+                                   keepdims=True) + 1e-6).astype(k.dtype)
+    k = k * p["k_norm"].astype(k.dtype)
+    out = _local_attention(q, k, v, causal=False, ctx=LOCAL)
+    out = out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+    return jnp.tanh(p["gate_attn"].astype(x.dtype)) * out
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = _pdtype(cfg)
+    if cfg.act in ("silu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, d, f, pd),
+            "w_up": dense_init(k2, d, f, pd),
+            "w_down": dense_init(k3, f, d, pd),
+        }
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, d, f, pd), "w_down": dense_init(k2, f, d, pd)}
+
+
+def apply_mlp_ring(cfg: ModelConfig, p: Params, x: jax.Array,
+                   ctx: ParallelContext) -> jax.Array:
+    """Sequence-sharded Megatron-SP MLP on the partitioned ring primitives:
+    ring-AG(x) consumed by gate+up matmuls in flight, ring matmul-RS back to
+    the sequence shards.  Wire = AG + RS = half the column/row-TP all-reduce,
+    and every hop overlaps a chunk matmul (MPI_Parrived early work)."""
+    from repro.core.partitioned import (
+        ring_all_gather_matmul, ring_matmul_reduce_scatter,
+    )
+
+    b, s_len, d = x.shape
+    axis = ctx.model_axis
+
+    def inner(xl, wg, wu, wd):
+        bl, sl, _ = xl.shape
+        x2 = xl.reshape(bl * sl, d)
+        if cfg.act in ("silu", "geglu"):
+            act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+            hg, hu = ring_all_gather_matmul(
+                x2, [wg.astype(xl.dtype), wu.astype(xl.dtype)], axis)
+            h = act(hg) * hu
+        else:
+            h = jax.nn.gelu(ring_all_gather_matmul(
+                x2, wu.astype(xl.dtype), axis))
+        y = ring_matmul_reduce_scatter(h, wd.astype(xl.dtype), axis)
+        return y.reshape(bl, sl, d)
+
+    k = ctx.model_size
+    # rows must be seq-major for the gather/scatter blocks to be seq shards
+    specs_x = P(ctx.data_axes, ctx.model_axis, None)
+    wg = p.get("w_gate", p["w_up"])
+    out = jax.shard_map(
+        inner, mesh=ctx.mesh,
+        in_specs=(specs_x, P(None, ctx.model_axis), P(None, ctx.model_axis),
+                  P(ctx.model_axis, None)),
+        out_specs=specs_x, check_vma=False,
+    )(x, wg, p["w_up"], p["w_down"])
+    return out
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.act in ("silu", "geglu"):
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(x @ p["w_gate"].astype(x.dtype)) * (
+            x @ p["w_up"].astype(x.dtype)
+        )
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_lm_loss(
+    x: jax.Array,  # (B, S, d) final hidden states
+    emb: jax.Array,  # (V, d) output embedding (tied or head)
+    labels: jax.Array,  # (B, S)
+    chunk: int,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """CE loss with the (B, S, V) logits computed chunk-by-chunk over S —
+    avoids materializing huge-vocab logit tensors."""
+    b, s, d = x.shape
+    if chunk <= 0 or s <= chunk or s % chunk != 0:
+        logits = x @ emb.T.astype(x.dtype)
+        return cross_entropy(logits, labels, mask)
+    n = s // chunk
+    xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)  # (n, B, c, d)
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    ms = (mask.reshape(b, n, chunk).swapaxes(0, 1)
+          if mask is not None else jnp.ones_like(ls, jnp.float32))
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, lc, mc = inp
+        logits = xc @ emb.T.astype(xc.dtype)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, lc[..., None], axis=-1)[..., 0]
+        return (tot + jnp.sum(nll * mc), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

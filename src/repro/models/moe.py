@@ -1,0 +1,378 @@
+"""Mixture-of-Experts decoder (phi-3.5-moe, grok-1).
+
+Expert weights live in **slot layout**: ``ep_slots`` slots, each holding one
+expert's hidden shard of width ``d_ff * n_experts / ep_slots``.  With
+``ep_slots == n_experts`` (phi) a slot is a whole expert; grok stores 8
+experts as 16 slots (2-way hidden split) so the expert dimension exactly
+tiles the 16-way model axis.
+
+Two dispatch modes (ParallelContext.moe_mode):
+
+* ``dense`` — capacity-based scatter/gather on the local device (smoke tests,
+  single-device runs, decode).
+* ``ep``    — expert parallelism: routing + scatter inside ``shard_map``,
+  tokens exchanged with :func:`repro.core.partitioned.partitioned_all_to_all`
+  so expert compute on chunk *k* overlaps the transfer of chunk *k+1* — the
+  paper's partitioned pipeline with the expert FFN as the consumer.  Hidden-
+  split slots (grok) reduce partial outputs with a subgroup ``psum``.
+
+The router aux (load-balance) loss is accumulated through the layer scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.partitioned import partitioned_all_to_all
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.context import LOCAL, ParallelContext
+
+Params = dict
+
+
+def _slots(cfg: ModelConfig) -> int:
+    return cfg.ep_slots or cfg.n_experts
+
+
+def _spe(cfg: ModelConfig) -> int:
+    s = _slots(cfg)
+    assert s % cfg.n_experts == 0, (s, cfg.n_experts)
+    return s // cfg.n_experts
+
+
+def _f_shard(cfg: ModelConfig) -> int:
+    assert cfg.d_ff % _spe(cfg) == 0
+    return cfg.d_ff // _spe(cfg)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_params(cfg: ModelConfig, key) -> Params:
+    d, fs, s = cfg.d_model, _f_shard(cfg), _slots(cfg)
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": L.dense_init(ks[0], d, cfg.n_experts, pd),
+        "w_up": jax.vmap(lambda k: L.dense_init(k, d, fs, pd))(
+            jax.random.split(ks[1], s)
+        ),
+        "w_down": jax.vmap(lambda k: L.dense_init(k, fs, d, pd))(
+            jax.random.split(ks[2], s)
+        ),
+    }
+    if cfg.act in ("silu", "geglu"):
+        p["w_gate"] = jax.vmap(lambda k: L.dense_init(k, d, fs, pd))(
+            jax.random.split(ks[3], s)
+        )
+    return p
+
+
+def layer_params(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm_attn": L.norm_params(cfg),
+        "attn": L.attention_params(cfg, k1),
+        "norm_mlp": L.norm_params(cfg),
+        "moe": moe_ffn_params(cfg, k2),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.n_layers)
+    p: Params = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model,
+                              jnp.dtype(cfg.param_dtype)),
+        "layers": jax.vmap(lambda k: layer_params(cfg, k))(keys),
+        "norm_f": L.norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.embed_init(ko, cfg.vocab_size, cfg.d_model,
+                                    jnp.dtype(cfg.param_dtype))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def _route(cfg: ModelConfig, router_w: jax.Array, x: jax.Array):
+    """x: (T, d) -> (weights (T,k), experts (T,k), aux loss)."""
+    logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux: E * sum_e fraction_e * prob_e
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32).sum(1)  # (T,E)
+    frac = onehot.mean(0)
+    aux = cfg.n_experts * jnp.sum(frac * probs.mean(0))
+    return w.astype(x.dtype), idx, aux
+
+
+def _dispatch_indices(cfg: ModelConfig, idx: jax.Array, T: int, capacity: int):
+    """Capacity-based rank of every (token, choice) within its expert."""
+    tk = idx.reshape(-1)  # (T*k,)
+    oh = jax.nn.one_hot(tk, cfg.n_experts, dtype=jnp.int32)  # (T*k, E)
+    ranks = jnp.cumsum(oh, axis=0) - oh
+    rank_e = jnp.take_along_axis(ranks, tk[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = rank_e < capacity
+    return tk, rank_e, keep
+
+
+def _expert_ffn(cfg: ModelConfig, p: Params, slot_x: jax.Array) -> jax.Array:
+    """slot_x: (S_slots, C, d) -> per-slot FFN outputs (hidden shard)."""
+    if cfg.act in ("silu", "geglu"):
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("scd,sdf->scf", slot_x, p["w_gate"].astype(slot_x.dtype)))
+        h = h * jnp.einsum("scd,sdf->scf", slot_x, p["w_up"].astype(slot_x.dtype))
+    else:
+        h = jax.nn.gelu(jnp.einsum("scd,sdf->scf", slot_x, p["w_up"].astype(slot_x.dtype)))
+    return jnp.einsum("scf,sfd->scd", h, p["w_down"].astype(slot_x.dtype))
+
+
+def _moe_dense(cfg: ModelConfig, p: Params, x2d: jax.Array):
+    """Local capacity dispatch (T, d) -> (T, d), all slots resident."""
+    Tn = x2d.shape[0]
+    spe = _spe(cfg)
+    capacity = max(1, int(Tn * cfg.capacity_factor * cfg.top_k / cfg.n_experts))
+    w, idx, aux = _route(cfg, p["router"], x2d)
+    tk, rank_e, keep = _dispatch_indices(cfg, idx, Tn, capacity)
+    x_rep = jnp.repeat(x2d, cfg.top_k, axis=0)  # (T*k, d)
+    x_rep = jnp.where(keep[:, None], x_rep, 0)
+    buf = jnp.zeros((cfg.n_experts, capacity, x2d.shape[1]), x2d.dtype)
+    buf = buf.at[tk, jnp.where(keep, rank_e, 0)].add(x_rep, mode="drop")
+    # replicate expert buffer across its hidden-shard slots
+    slot_buf = jnp.repeat(buf, spe, axis=0)  # (S, C, d)
+    y_slots = _expert_ffn(cfg, p, slot_buf)  # (S, C, d) partial outputs
+    y_exp = y_slots.reshape(cfg.n_experts, spe, capacity, -1).sum(1)  # (E, C, d)
+    gathered = y_exp[tk, rank_e]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(Tn, cfg.top_k, -1)
+         * w[..., None]).sum(axis=1)
+    return y.astype(x2d.dtype), aux
+
+
+def _moe_dropless(cfg: ModelConfig, p: Params, x2d: jax.Array):
+    """Dropless all-slots MoE (decode path): every slot's FFN runs on every
+    token; outputs are combined with top-k router weights.  E/k x the active
+    FLOPs, but decode is memory-bound on the expert weights themselves, so
+    the roofline is unchanged — and no token is ever dropped."""
+    spe = _spe(cfg)
+    w, idx, aux = _route(cfg, p["router"], x2d)
+    slot_x = jnp.broadcast_to(x2d, (_slots(cfg),) + x2d.shape)  # (S, T, d)
+    y_slots = _expert_ffn(cfg, p, slot_x)  # (S, T, d)
+    y_exp = y_slots.reshape(cfg.n_experts, spe, *x2d.shape).sum(1)  # (E, T, d)
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=x2d.dtype)  # (T, k, E)
+    w_e = jnp.einsum("tk,tke->te", w, onehot)  # (T, E)
+    y = jnp.einsum("te,etd->td", w_e, y_exp)
+    return y.astype(x2d.dtype), aux
+
+
+def _moe_ep_local(cfg: ModelConfig, ctx: ParallelContext, p_local: Params,
+                  x_local: jax.Array):
+    """Inside shard_map: x_local (T_loc, d); expert slots sharded over the
+    model axis (one slot per device).  Paper-technique core."""
+    axis = ctx.model_axis
+    M = _slots(cfg)
+    spe = _spe(cfg)
+    Tn = x_local.shape[0]
+    capacity = max(1, int(Tn * cfg.capacity_factor * cfg.top_k / cfg.n_experts))
+    w, idx, aux = _route(cfg, p_local["router"], x_local)
+    tk, rank_e, keep = _dispatch_indices(cfg, idx, Tn, capacity)
+    x_rep = jnp.repeat(x_local, cfg.top_k, axis=0)
+    x_rep = jnp.where(keep[:, None], x_rep, 0)
+    safe_rank = jnp.where(keep, rank_e, 0)
+    # scatter into slot buffer; hidden-split experts receive duplicates
+    buf = jnp.zeros((M, capacity, x_local.shape[1]), x_local.dtype)
+    for j in range(spe):
+        buf = buf.at[tk * spe + j, safe_rank].add(x_rep, mode="drop")
+
+    def expert_consume(chunk):  # (M, c, d) arrived tokens -> early work
+        if cfg.act in ("silu", "geglu"):
+            act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+            h = act(chunk @ p_local["w_gate"][0].astype(chunk.dtype))
+            h = h * (chunk @ p_local["w_up"][0].astype(chunk.dtype))
+        else:
+            h = jax.nn.gelu(chunk @ p_local["w_up"][0].astype(chunk.dtype))
+        y = h @ p_local["w_down"][0].astype(chunk.dtype)
+        return y
+
+    # dispatch: partitioned all-to-all with the expert FFN as per-chunk
+    # consumer (MPI_Parrived early work).  Chunking axis = capacity.
+    y_slot = partitioned_all_to_all(
+        buf, axis, split_axis=0, concat_axis=0,
+        n_parts=max(1, ctx.n_parts), chunk_axis=1, consume_fn=expert_consume,
+    )  # (M, capacity, d): my expert's outputs for every source device
+    if spe > 1:
+        groups = [
+            [e * spe + j for j in range(spe)] for e in range(cfg.n_experts)
+        ]
+        y_slot = jax.lax.psum(y_slot, axis, axis_index_groups=groups)
+    # return: all-to-all back (chunked identically)
+    y_back = partitioned_all_to_all(
+        y_slot, axis, split_axis=0, concat_axis=0,
+        n_parts=max(1, ctx.n_parts), chunk_axis=1,
+    )  # (M, capacity, d): [s] = my tokens' outputs from slot s
+    gathered = y_back[tk * spe, safe_rank]  # j=0 copy carries the psum result
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(Tn, cfg.top_k, -1) * w[..., None]).sum(axis=1)
+    return y.astype(x_local.dtype), aux
+
+
+def apply_moe_ffn(
+    cfg: ModelConfig, p: Params, x: jax.Array, ctx: ParallelContext
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux). Dispatch mode per context."""
+    b, s, d = x.shape
+
+    def run(x_bsd: jax.Array) -> tuple[jax.Array, jax.Array]:
+        if ctx.moe_mode == "ep" and ctx.mesh is not None and ctx.model_axis:
+            def inner(xl, pl):
+                tl = xl.reshape(-1, xl.shape[-1])
+                y, aux = _moe_ep_local(cfg, ctx, pl, tl)
+                return y.reshape(xl.shape), aux[None, None]
+
+            specs_p = jax.tree.map(lambda _: P(None), p)
+            for name in ("w_gate", "w_up", "w_down"):
+                if name in p:
+                    specs_p[name] = P(ctx.model_axis, None, None)
+            # tokens are ALWAYS seq-sharded over the EP axis inside the MoE:
+            # routing is per-token, and replicating tokens across model ranks
+            # would make every rank dispatch identical buffers — each expert
+            # would compute its work |EP| times over (caught by the roofline
+            # useful-flops ratio; see EXPERIMENTS.md §Perf iteration 0).
+            x_spec = P(ctx.data_axes, ctx.model_axis, None)
+            y, aux = jax.shard_map(
+                inner,
+                mesh=ctx.mesh,
+                in_specs=(x_spec, specs_p),
+                out_specs=(x_spec, P(ctx.data_axes, ctx.model_axis)),
+                check_vma=False,
+            )(x_bsd, p)
+            return y, jnp.mean(aux)
+        y, aux = _moe_dense(cfg, p, x_bsd.reshape(-1, d))
+        return y.reshape(x_bsd.shape), aux
+
+    chunk = cfg.moe_seq_chunk
+    if chunk and s > chunk and s % chunk == 0:
+        n = s // chunk
+        xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)  # (n, B, c, d)
+
+        def body(aux_sum, xc):
+            y, aux = run(xc)
+            return aux_sum + aux, y
+
+        aux_sum, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        return ys.swapaxes(0, 1).reshape(b, s, d), aux_sum / n
+    return run(x)
+
+
+# ---------------------------------------------------------------------------
+# model assembly (mirrors transformer.py, MoE FFN + aux-loss carry)
+# ---------------------------------------------------------------------------
+
+
+def hidden_states(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  *, ctx: ParallelContext = LOCAL):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def block(lp, xc):
+        h = L.apply_norm(cfg, lp["norm_attn"], xc)
+        xc = xc + L.self_attention(cfg, lp["attn"], h, positions, ctx=ctx)
+        h = L.apply_norm(cfg, lp["norm_mlp"], xc)
+        y, aux = apply_moe_ffn(cfg, lp["moe"], h, ctx)
+        return xc + y, aux
+
+    block = T._remat(cfg, block)
+
+    def body(carry, lp):
+        xc, aux_sum = carry
+        xc, aux = block(lp, xc)
+        return (xc, aux_sum + aux), None
+
+    (x, aux_sum), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    return L.apply_norm(cfg, params["norm_f"], x), aux_sum / cfg.n_layers
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x, aux = hidden_states(cfg, params, batch["tokens"], ctx=ctx)
+    ce = L.chunked_lm_loss(
+        x, T.output_embedding(cfg, params), batch["labels"], cfg.logits_chunk,
+        mask=batch.get("mask"),
+    )
+    return ce + cfg.router_aux_coef * aux
+
+
+def logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+              *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x, _ = hidden_states(cfg, params, tokens, ctx=ctx)
+    return x @ T.output_embedding(cfg, params).T.astype(x.dtype)
+
+
+init_cache = T.init_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array, cache: dict,
+                *, ctx: ParallelContext = LOCAL):
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    pos = cache["pos"]
+
+    def body(xc, per_layer):
+        lp, ck, cv = per_layer
+        h = L.apply_norm(cfg, lp["norm_attn"], xc)
+        att, ck, cv = L.decode_attention(cfg, lp["attn"], h, ck, cv, pos)
+        xc = xc + att
+        h = L.apply_norm(cfg, lp["norm_mlp"], xc)
+        y, _ = _moe_dropless(cfg, lp["moe"], h.reshape(-1, h.shape[-1]))
+        xc = xc + y.reshape(h.shape)
+        return xc, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x @ T.output_embedding(cfg, params).T.astype(x.dtype)
+    return logits, {"k": nk, "v": nv, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: dict,
+            *, ctx: ParallelContext = LOCAL):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xc, lp):
+        h = L.apply_norm(cfg, lp["norm_attn"], xc)
+        q, k, v = L._project_qkv(cfg, lp["attn"], h)
+        q = L.apply_rope(cfg, q, positions)
+        k = L.apply_rope(cfg, k, positions)
+        att = L.prefill_attention(cfg, q, k, v, ctx=ctx)
+        att = att.reshape(b, s, -1) @ lp["attn"]["wo"].astype(xc.dtype)
+        xc = xc + att
+        h = L.apply_norm(cfg, lp["norm_mlp"], xc)
+        y, _ = apply_moe_ffn(cfg, lp["moe"], h, ctx)
+        xc = xc + y
+        return xc, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x[:, -1:] @ T.output_embedding(cfg, params).T.astype(x.dtype)
+    nk = jax.lax.dynamic_update_slice(cache["k"], ks.astype(cache["k"].dtype),
+                                      (0, 0, 0, 0, 0))
+    nv = jax.lax.dynamic_update_slice(cache["v"], vs.astype(cache["v"].dtype),
+                                      (0, 0, 0, 0, 0))
+    return logits, {"k": nk, "v": nv,
+                    "pos": jnp.full((b,), s, jnp.int32)}

@@ -1,0 +1,350 @@
+"""RWKV-6 (Finch): attention-free time-mix with data-dependent decay.
+
+WKV recurrence per head (state S in R^{hd x hd}):
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+with per-channel decays w_t = exp(-exp(w_base + lora(x_t))) in (0, 1).
+
+Training/prefill uses a chunked algorithm: within a chunk the pairwise decay
+exponent ``cum[t-1] - cum[s] <= 0`` is materialized per (t, s, channel) —
+numerically safe (never exponentiates a positive number) at the cost of a
+(c, c, hd) temporary, with chunk length c kept small.  Across chunks the
+state is carried by ``lax.scan``; across *devices* (sequence parallelism)
+the chunk states compose associatively and ride
+:func:`repro.core.ring.state_passing` — the paper's 1-D stencil transport.
+
+Decode is the exact recurrence (one step).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.ring import state_passing
+from repro.models import layers as L
+from repro.parallel.context import LOCAL, ParallelContext
+
+Params = dict
+CHUNK = 16  # intra-chunk length (keeps the (c, c, hd) temporary small)
+LORA_R = 32
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv_head_size
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def layer_params(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    lora_r = min(LORA_R, d)
+    return {
+        "ln1": L.norm_params(cfg),
+        "ln2": L.norm_params(cfg),
+        # time-mix
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(pd),
+        "wr": L.dense_init(ks[1], d, d, pd),
+        "wk": L.dense_init(ks[2], d, d, pd),
+        "wv": L.dense_init(ks[3], d, d, pd),
+        "wg": L.dense_init(ks[4], d, d, pd),
+        "wo": L.dense_init(ks[5], d, d, pd),
+        "w_base": (jax.random.normal(ks[6], (d,)) * 0.5 - 1.0).astype(pd),
+        "w_lora_a": L.dense_init(ks[7], d, lora_r, pd),
+        "w_lora_b": (jnp.zeros((lora_r, d))).astype(pd),
+        "u": (jax.random.normal(ks[8], (h, hd)) * 0.1).astype(pd),
+        # channel-mix
+        "mu_c": (jax.random.uniform(ks[9], (2, d)) * 0.5 + 0.25).astype(pd),
+        "ck": L.dense_init(jax.random.fold_in(key, 11), d, cfg.d_ff, pd),
+        "cv": L.dense_init(jax.random.fold_in(key, 12), cfg.d_ff, d, pd),
+        "cr": L.dense_init(jax.random.fold_in(key, 13), d, d, pd),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model,
+                              jnp.dtype(cfg.param_dtype)),
+        "ln_in": L.norm_params(cfg),
+        "layers": jax.vmap(lambda k: layer_params(cfg, k))(keys),
+        "norm_f": L.norm_params(cfg),
+        "lm_head": L.embed_init(ko, cfg.vocab_size, cfg.d_model,
+                                jnp.dtype(cfg.param_dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV chunked scan
+# ---------------------------------------------------------------------------
+
+
+def _wkv_chunk(r, k, v, lw, u, S_in):
+    """One chunk of the WKV recurrence.
+
+    r,k,v: (B, c, H, hd); lw: (B, c, H, hd) log-decay (<0); u: (H, hd);
+    S_in: (B, H, hd, hd).  Returns (y (B,c,H,hd), S_out).
+    """
+    B, c, H, hd = r.shape
+    cum = jnp.cumsum(lw, axis=1)  # (B,c,H,hd)
+    cum_prev = cum - lw  # decay through t-1
+
+    # state term: y_t += (r_t * exp(cum_{t-1})) . S_in
+    r_dec = r * jnp.exp(cum_prev)
+    y = jnp.einsum("bthi,bhij->bthj", r_dec, S_in)
+
+    # intra-chunk: pairwise exponent (<= 0) materialized per channel
+    pair = cum_prev[:, :, None] - cum[:, None, :, :]  # (B,t,s,H,hd)
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+    D = jnp.where(mask, jnp.exp(jnp.minimum(pair, 0.0)), 0.0)
+    A = jnp.einsum("bthi,bshi,btshi->bhts", r, k, D)
+    y = y + jnp.einsum("bhts,bshj->bthj", A, v)
+
+    # bonus (diagonal) term
+    y = y + jnp.einsum("bthi,hi,bthi,bthj->bthj", r, u, k, v)
+
+    # chunk state update: S_out = diag(exp(cum_T)) S_in + sum_s exp(cum_T-cum_s) k_s (x) v_s
+    total = cum[:, -1]  # (B,H,hd)
+    k_dec = k * jnp.exp(total[:, None] - cum)
+    S_out = jnp.exp(total)[..., None] * S_in + jnp.einsum(
+        "bshi,bshj->bhij", k_dec, v
+    )
+    return y, S_out
+
+
+def wkv_scan(r, k, v, lw, u, S0=None, chunk: int = CHUNK):
+    """Full-sequence WKV: (B,T,H,hd) inputs -> (y, S_final).
+
+    Also returns (C, D) of the whole segment — the affine state operator —
+    so callers can compose states across devices with ``state_passing``.
+    """
+    B, T, H, hd = r.shape
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    n = T // c
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def to_chunks(x):
+        return x.reshape(B, n, c, H, hd).swapaxes(0, 1)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+
+    def body(S, inp):
+        rr, kk, vv, ll = inp
+        y, S_next = _wkv_chunk(rr, kk, vv, ll, u, S)
+        return S_next, y
+
+    S_fin, ys = jax.lax.scan(body, S0, (rc, kc, vc, lwc))
+    y = ys.swapaxes(0, 1).reshape(B, T, H, hd)
+    return y, S_fin
+
+
+def wkv_segment_operator(k, v, lw, chunk: int = CHUNK):
+    """(C, D) of a sequence segment: S_out = D * S_in + C (for state_passing)."""
+    B, T, H, hd = k.shape
+    r0 = jnp.zeros_like(k)
+    _, C = wkv_scan(r0, k, v, lw, jnp.zeros((H, hd), k.dtype), None, chunk)
+    D = jnp.exp(jnp.sum(lw, axis=1))[..., None]  # (B,H,hd,1) broadcast over j
+    return C, D
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Previous-token features; ``prev`` is the carry for decode/segments."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix(cfg: ModelConfig, lp: Params, x: jax.Array,
+             *, ctx: ParallelContext = LOCAL, shift_prev=None, S0=None,
+             return_state: bool = False):
+    B, T, d = x.shape
+    H, hd = _heads(cfg)
+    xs = _token_shift(x, shift_prev)
+    mu = lp["mu"].astype(x.dtype)  # (5, d)
+    xr, xk, xv, xg, xw = (x + mu[i] * (xs - x) for i in range(5))
+    r = (xr @ lp["wr"].astype(x.dtype)).reshape(B, T, H, hd)
+    k = (xk @ lp["wk"].astype(x.dtype)).reshape(B, T, H, hd)
+    v = (xv @ lp["wv"].astype(x.dtype)).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ lp["wg"].astype(x.dtype))
+    # data-dependent decay (lora)
+    wl = jnp.tanh(xw @ lp["w_lora_a"].astype(x.dtype)) @ lp["w_lora_b"].astype(x.dtype)
+    lw = -jnp.exp(
+        jnp.clip(lp["w_base"].astype(jnp.float32) + wl.astype(jnp.float32), -8.0, 4.0)
+    ).reshape(B, T, H, hd)  # log w < 0
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = lp["u"].astype(jnp.float32)
+    chunk = cfg.scan_chunk or CHUNK
+
+    if ctx.seq_parallel and ctx.mesh is not None and ctx.model_axis:
+        # sequence parallel: local scan + cross-device state composition
+        def seq_par(rl, kl, vl, ll):
+            C, D = wkv_segment_operator(kl, vl, ll, chunk=chunk)
+            S_in = state_passing(C, D * jnp.ones_like(C), ctx.model_axis,
+                                 method=ctx.state_method)
+            y, _ = wkv_scan(rl, kl, vl, ll, u, S_in, chunk=chunk)
+            return y
+
+        spec = P(ctx.data_axes, ctx.model_axis, None, None)
+        y = jax.shard_map(seq_par, mesh=ctx.mesh,
+                          in_specs=(spec,) * 4, out_specs=spec,
+                          check_vma=False)(rf, kf, vf, lw)
+        S_fin = None
+    else:
+        y, S_fin = wkv_scan(rf, kf, vf, lw, u, S0, chunk=chunk)
+
+    y = y.reshape(B, T, d).astype(x.dtype) * g
+    out = y @ lp["wo"].astype(x.dtype)
+    if return_state:
+        return out, x[:, -1:], S_fin
+    return out
+
+
+def channel_mix(cfg: ModelConfig, lp: Params, x: jax.Array, shift_prev=None,
+                return_state: bool = False):
+    xs = _token_shift(x, shift_prev)
+    mu = lp["mu_c"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ lp["ck"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ lp["cr"].astype(x.dtype)) * (
+        k @ lp["cv"].astype(x.dtype)
+    )
+    if return_state:
+        return out, x[:, -1:]
+    return out
+
+
+def block(cfg: ModelConfig, lp: Params, x: jax.Array,
+          *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = x + time_mix(cfg, lp, L.apply_norm(cfg, lp["ln1"], x), ctx=ctx)
+    x = x + channel_mix(cfg, lp, L.apply_norm(cfg, lp["ln2"], x))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def hidden_states(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = L.apply_norm(cfg, params["ln_in"], x)
+
+    blk = functools.partial(block, cfg, ctx=ctx)
+    if cfg.remat != "none":
+        blk = jax.checkpoint(blk)
+
+    def body(xc, lp):
+        return blk(lp, xc), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.apply_norm(cfg, params["norm_f"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = hidden_states(cfg, params, batch["tokens"], ctx=ctx)
+    return L.chunked_lm_loss(x, params["lm_head"], batch["labels"],
+                             cfg.logits_chunk, mask=batch.get("mask"))
+
+
+def logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+              *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = hidden_states(cfg, params, tokens, ctx=ctx)
+    return x @ params["lm_head"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (exact recurrence; O(1) state per layer)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    H, hd = _heads(cfg)
+    d = cfg.d_model
+    L_ = cfg.n_layers
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "tm_shift": jnp.zeros((L_, batch, 1, d), dt),
+        "cm_shift": jnp.zeros((L_, batch, 1, d), dt),
+        "wkv": jnp.zeros((L_, batch, H, hd, hd), jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array, cache: dict,
+                *, ctx: ParallelContext = LOCAL):
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))  # (B,1,d)
+    x = L.apply_norm(cfg, params["ln_in"], x)
+
+    def body(xc, per_layer):
+        lp, tm_s, cm_s, S = per_layer
+        h = L.apply_norm(cfg, lp["ln1"], xc)
+        out, tm_new, S_new = time_mix(cfg, lp, h, shift_prev=tm_s, S0=S,
+                                      return_state=True)
+        xc = xc + out
+        h = L.apply_norm(cfg, lp["ln2"], xc)
+        out, cm_new = channel_mix(cfg, lp, h, shift_prev=cm_s, return_state=True)
+        xc = xc + out
+        return xc, (tm_new, cm_new, S_new)
+
+    x, (tm, cm, wkv) = jax.lax.scan(
+        body, x, (params["layers"], cache["tm_shift"], cache["cm_shift"],
+                  cache["wkv"]),
+    )
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x @ params["lm_head"].T.astype(x.dtype)
+    return logits, {
+        "tm_shift": tm.astype(cache["tm_shift"].dtype),
+        "cm_shift": cm.astype(cache["cm_shift"].dtype),
+        "wkv": wkv,
+        "pos": cache["pos"] + 1,
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: dict,
+            *, ctx: ParallelContext = LOCAL):
+    """Fill recurrent states from a prompt (chunked scan per layer)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = L.apply_norm(cfg, params["ln_in"], x)
+
+    def body(xc, lp):
+        h = L.apply_norm(cfg, lp["ln1"], xc)
+        out, tm_new, S_new = time_mix(cfg, lp, h, return_state=True)
+        xc = xc + out
+        h = L.apply_norm(cfg, lp["ln2"], xc)
+        out, cm_new = channel_mix(cfg, lp, h, return_state=True)
+        xc = xc + out
+        return xc, (tm_new, cm_new, S_new)
+
+    x, (tm, cm, wkv) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x[:, -1:] @ params["lm_head"].T.astype(x.dtype)
+    return logits, {
+        "tm_shift": tm.astype(cache["tm_shift"].dtype),
+        "cm_shift": cm.astype(cache["cm_shift"].dtype),
+        "wkv": wkv,
+        "pos": jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32),
+    }

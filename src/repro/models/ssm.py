@@ -1,0 +1,226 @@
+"""Mamba2 (SSD) block — the state-space backbone of zamba2.
+
+Selective state space with scalar-per-head decay:
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * x_t (x) B_t
+    y_t = C_t . h_t + D_h x_t
+Chunked "SSD" algorithm: intra-chunk attention-like matrix (scalar decay per
+head keeps the (c, c) pairwise tensor head-wise, no channel blowup), state
+carried across chunks by scan and across *devices* by
+:func:`repro.core.ring.state_passing`.  The causal depthwise conv1d takes its
+left context from the previous sequence shard via
+:func:`repro.core.halo.seq_left_halo` — ghost cells, literally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.halo import seq_left_halo
+from repro.core.ring import state_passing
+from repro.models import layers as L
+from repro.parallel.context import LOCAL, ParallelContext
+
+Params = dict
+CHUNK = 32
+
+
+def dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim, n_state)."""
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    assert di % nh == 0
+    return di, nh, di // nh, cfg.ssm_state
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    di, _, _, ns = dims(cfg)
+    return di + 2 * ns
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def mamba_params(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    di, nh, hd, ns = dims(cfg)
+    ch = conv_channels(cfg)
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": L.norm_params(cfg),
+        "in_proj": L.dense_init(ks[0], d, di + ch + nh, pd),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, ch)) * 0.2).astype(pd),
+        "conv_b": jnp.zeros((ch,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 8.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_y": L.norm_params(cfg, di),
+        "out_proj": L.dense_init(ks[2], di, d, pd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# conv1d (causal, depthwise) with optional cross-shard halo
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(cfg: ModelConfig, lp: Params, x: jax.Array,
+                left: jax.Array | None = None) -> jax.Array:
+    """x: (B, T, ch). ``left``: (B, k-1, ch) context (ghost cells) or None."""
+    kk = cfg.conv_kernel
+    if left is None:
+        left = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([left, x], axis=1)
+    w = lp["conv_w"].astype(x.dtype)
+    out = sum(
+        xp[:, j: j + x.shape[1]] * w[j] for j in range(kk)
+    ) + lp["conv_b"].astype(x.dtype)
+    return jax.nn.silu(out)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def _ssd_chunk(xh, Bm, Cm, dt, la, h_in):
+    """xh: (B,c,nh,hd); Bm,Cm: (B,c,ns); dt,la: (B,c,nh); h_in: (B,nh,hd,ns)."""
+    Bsz, c, nh, hd = xh.shape
+    cum = jnp.cumsum(la, axis=1)  # (B,c,nh), <= 0
+    # intra-chunk: y_t = sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t.B_s) x_s
+    pair = cum[:, :, None, :] - cum[:, None, :, :]  # (B,t,s,nh)
+    mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, :, :, None]
+    M = jnp.where(mask, jnp.exp(jnp.minimum(pair, 0.0)), 0.0)  # (B,t,s,nh)
+    G = jnp.einsum("btn,bsn->bts", Cm, Bm)  # (B,t,s)
+    W = M * G[..., None] * dt[:, None, :, :]  # (B,t,s,nh)
+    y = jnp.einsum("btsh,bshp->bthp", W, xh)
+    # state term: y_t += exp(cum_t) C_t . h_in
+    y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+        "btn,bhpn->bthp", Cm, h_in
+    )
+    # chunk state: h_out = exp(cum_T) h_in + sum_s exp(cum_T-cum_s) dt_s x_s (x) B_s
+    total = cum[:, -1]  # (B,nh)
+    wdec = dt * jnp.exp(total[:, None] - cum)  # (B,c,nh)
+    h_out = jnp.exp(total)[..., None, None] * h_in + jnp.einsum(
+        "bshp,bsn,bsh->bhpn", xh, Bm, wdec
+    )
+    return y, h_out
+
+
+def ssd_scan(xh, Bm, Cm, dt, la, h0=None, chunk: int = CHUNK):
+    """Full sequence SSD: returns (y (B,T,nh,hd), h_final)."""
+    Bsz, T, nh, hd = xh.shape
+    ns = Bm.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    n = T // c
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hd, ns), jnp.float32)
+
+    xc = xh.reshape(Bsz, n, c, nh, hd).swapaxes(0, 1)
+    Bc = Bm.reshape(Bsz, n, c, ns).swapaxes(0, 1)
+    Cc = Cm.reshape(Bsz, n, c, ns).swapaxes(0, 1)
+    dc = dt.reshape(Bsz, n, c, nh).swapaxes(0, 1)
+    lc = la.reshape(Bsz, n, c, nh).swapaxes(0, 1)
+
+    def body(h, inp):
+        xx, bb, cc2, dd, ll = inp
+        y, h2 = _ssd_chunk(xx, bb, cc2, dd, ll, h)
+        return h2, y
+
+    h_fin, ys = jax.lax.scan(body, h0, (xc, Bc, Cc, dc, lc))
+    return ys.swapaxes(0, 1).reshape(Bsz, T, nh, hd), h_fin
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(
+    cfg: ModelConfig,
+    lp: Params,
+    x: jax.Array,  # (B, T, d)
+    *,
+    ctx: ParallelContext = LOCAL,
+    conv_state: jax.Array | None = None,  # (B, k-1, ch) decode carry
+    ssd_state: jax.Array | None = None,  # (B, nh, hd, ns)
+    return_state: bool = False,
+):
+    Bsz, T, d = x.shape
+    di, nh, hd, ns = dims(cfg)
+    ch = conv_channels(cfg)
+    h = L.apply_norm(cfg, lp["norm"], x)
+    proj = h @ lp["in_proj"].astype(x.dtype)  # (B,T,di+ch+nh)
+    z, xBC, dt_raw = jnp.split(proj, [di, di + ch], axis=-1)
+
+    seq_par = ctx.seq_parallel and ctx.mesh is not None and ctx.model_axis
+
+    if seq_par:
+        spec3 = P(ctx.data_axes, ctx.model_axis, None)
+
+        def conv_shard(xl):
+            left = seq_left_halo(xl, ctx.model_axis, cfg.conv_kernel - 1,
+                                 seq_axis=1, n_parts=ctx.n_parts)
+            return causal_conv(cfg, lp, xl, left=left[:, : cfg.conv_kernel - 1])
+
+        xBC = jax.shard_map(conv_shard, mesh=ctx.mesh, in_specs=spec3,
+                            out_specs=spec3, check_vma=False)(xBC)
+    else:
+        xBC = causal_conv(cfg, lp, xBC, left=conv_state)
+    new_conv_state = None
+    if return_state:
+        # keep last k-1 *pre-conv* inputs for the next step
+        pre_xBC = proj[..., di: di + ch]
+        if conv_state is not None:
+            hist = jnp.concatenate([conv_state, pre_xBC], axis=1)
+        else:
+            hist = jnp.concatenate(
+                [jnp.zeros((Bsz, cfg.conv_kernel - 1, ch), x.dtype), pre_xBC], 1)
+        new_conv_state = hist[:, -(cfg.conv_kernel - 1):]
+
+    xh = xBC[..., :di].reshape(Bsz, T, nh, hd).astype(jnp.float32)
+    Bm = xBC[..., di: di + ns].astype(jnp.float32)
+    Cm = xBC[..., di + ns:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])  # (B,T,nh)
+    la = -dt * jnp.exp(lp["A_log"])  # log decay, < 0
+
+    if seq_par:
+        spec4 = P(ctx.data_axes, ctx.model_axis, None, None)
+        spec3f = P(ctx.data_axes, ctx.model_axis, None)
+
+        chunk = cfg.scan_chunk or CHUNK
+
+        def ssd_shard(xl, bl, cl, dl, ll):
+            _, C_seg = ssd_scan(xl, bl, cl, dl, ll, None, chunk=chunk)
+            D_seg = jnp.exp(jnp.sum(ll, axis=1))[..., None, None]  # (B,nh,1,1)
+            h_in = state_passing(C_seg, D_seg * jnp.ones_like(C_seg),
+                                 ctx.model_axis, method=ctx.state_method)
+            y, _ = ssd_scan(xl, bl, cl, dl, ll, h_in, chunk=chunk)
+            return y
+
+        y = jax.shard_map(
+            ssd_shard, mesh=ctx.mesh,
+            in_specs=(spec4, spec3f, spec3f, spec3f, spec3f),
+            out_specs=spec4, check_vma=False,
+        )(xh, Bm, Cm, dt, la)
+        h_fin = None
+    else:
+        y, h_fin = ssd_scan(xh, Bm, Cm, dt, la, ssd_state,
+                            chunk=cfg.scan_chunk or CHUNK)
+
+    y = y + lp["D"][None, None, :, None] * xh  # skip connection
+    y = y.reshape(Bsz, T, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.apply_norm(cfg, lp["norm_y"], y)
+    out = x + y @ lp["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, new_conv_state, h_fin
+    return out

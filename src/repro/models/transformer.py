@@ -1,0 +1,206 @@
+"""Dense decoder-only transformer (llama3 / qwen2.5 / granite / stablelm).
+
+Layers are stacked along a leading axis and executed with ``lax.scan`` (one
+compiled body regardless of depth — essential for the 40-cell dry-run on one
+CPU core).  Remat policy per config: none | dots | full.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.context import LOCAL, ParallelContext
+
+Params = dict
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def layer_params(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm_attn": L.norm_params(cfg),
+        "attn": L.attention_params(cfg, k1),
+        "norm_mlp": L.norm_params(cfg),
+        "mlp": L.mlp_params(cfg, k2),
+    }
+
+
+def stacked_layer_params(cfg: ModelConfig, key, n: int) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: layer_params(cfg, k))(keys)
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    p: Params = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, jnp.dtype(cfg.param_dtype)),
+        "layers": stacked_layer_params(cfg, kl, cfg.n_layers),
+        "norm_f": L.norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.embed_init(ko, cfg.vocab_size, cfg.d_model,
+                                    jnp.dtype(cfg.param_dtype))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def decoder_block(
+    cfg: ModelConfig,
+    lp: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    ctx: ParallelContext,
+) -> jax.Array:
+    h = L.apply_norm(cfg, lp["norm_attn"], x)
+    x = x + L.self_attention(cfg, lp["attn"], h, positions, ctx=ctx)
+    h = L.apply_norm(cfg, lp["norm_mlp"], x)
+    if ctx.tp_mode == "ring" and ctx.mesh is not None and ctx.model_axis:
+        x = x + L.apply_mlp_ring(cfg, lp["mlp"], h, ctx)
+    else:
+        x = x + L.apply_mlp(cfg, lp["mlp"], h)
+    return x
+
+
+def hidden_states(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, S)
+    *,
+    ctx: ParallelContext = LOCAL,
+) -> jax.Array:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    block = _remat(cfg, functools.partial(decoder_block, cfg, ctx=ctx))
+
+    def body(xc, lp):
+        return block(lp, xc, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.apply_norm(cfg, params["norm_f"], x)
+
+
+def output_embedding(cfg: ModelConfig, params: Params) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+              *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = hidden_states(cfg, params, tokens, ctx=ctx)
+    return x @ output_embedding(cfg, params).T.astype(x.dtype)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            *, ctx: ParallelContext = LOCAL) -> jax.Array:
+    x = hidden_states(cfg, params, batch["tokens"], ctx=ctx)
+    return L.chunked_lm_loss(
+        x, output_embedding(cfg, params), batch["labels"], cfg.logits_chunk,
+        mask=batch.get("mask"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode (KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),  # per-slot (continuous batching)
+    }
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,  # (B, 1)
+    cache: dict,
+    *,
+    ctx: ParallelContext = LOCAL,
+) -> tuple[jax.Array, dict]:
+    """One decode step; returns (logits (B, 1, V), updated cache)."""
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    pos = cache["pos"]
+
+    def body(xc, per_layer):
+        lp, ck, cv = per_layer
+        h = L.apply_norm(cfg, lp["norm_attn"], xc)
+        att, ck, cv = L.decode_attention(cfg, lp["attn"], h, ck, cv, pos)
+        xc = xc + att
+        h = L.apply_norm(cfg, lp["norm_mlp"], xc)
+        xc = xc + L.apply_mlp(cfg, lp["mlp"], h)
+        return xc, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x @ output_embedding(cfg, params).T.astype(x.dtype)
+    return logits, {"k": new_k, "v": new_v, "pos": pos + 1}
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, S)
+    cache: dict,
+    *,
+    ctx: ParallelContext = LOCAL,
+) -> tuple[jax.Array, dict]:
+    """Fill the cache from a full prompt; returns (last-position logits, cache)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xc, lp):
+        h = L.apply_norm(cfg, lp["norm_attn"], xc)
+        hd = cfg.resolved_head_dim
+        q, k, v = L._project_qkv(cfg, lp["attn"], h)
+        q = L.apply_rope(cfg, q, positions)
+        k = L.apply_rope(cfg, k, positions)
+        att = L.prefill_attention(cfg, q, k, v, ctx=ctx)
+        att = att.reshape(b, s, -1) @ lp["attn"]["wo"].astype(xc.dtype)
+        xc = xc + att
+        h2 = L.apply_norm(cfg, lp["norm_mlp"], xc)
+        xc = xc + L.apply_mlp(cfg, lp["mlp"], h2)
+        return xc, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, params["norm_f"], x)
+    logits = x[:, -1:] @ output_embedding(cfg, params).T.astype(x.dtype)
+    smax = cache["k"].shape[2]
+    new_k = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    return logits, {"k": new_k, "v": new_v,
+                    "pos": jnp.full((b,), s, jnp.int32)}

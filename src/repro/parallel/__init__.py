@@ -1,0 +1,3 @@
+from repro.parallel.context import LOCAL, ParallelContext
+
+__all__ = ["LOCAL", "ParallelContext"]

@@ -1,0 +1,54 @@
+"""Parallel execution context threaded through model code.
+
+Models are written as GSPMD (pjit + sharding-constraint) programs; specific
+blocks opt into ``shard_map`` sub-programs when the context enables them:
+
+* ``seq_shards > 1``  — prefill attention runs as ring attention over
+  ``model_axis`` (sequence parallelism with partitioned KV exchange);
+  SSM/RWKV blocks pass recurrent state across sequence shards.
+* ``moe_mode='ep'``   — MoE dispatch uses all-to-all expert parallelism over
+  ``model_axis`` (partitioned variant when ``a2a_parts > 1``).
+* ``n_parts``         — partition count for partitioned collectives (the
+  paper's knob; 1 = fused/persistent-style whole messages).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Mesh | None = None
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str | None = "model"
+    # paper technique knobs
+    seq_parallel: bool = False  # ring attention / state passing for prefill
+    moe_mode: str = "dense"  # dense | ep
+    n_parts: int = 1  # partitions per message (1 = fused)
+    state_method: str = "ring"  # ring | tree (SSM/RWKV state passing)
+    # tensor-parallel MLP mode: 'gspmd' (column/row TP, GSPMD inserts the
+    # all-reduce) or 'ring' (sequence-sharded Megatron-SP via the partitioned
+    # ring collective-matmuls — half the wire bytes, overlap-friendly)
+    tp_mode: str = "gspmd"
+    # numerics
+    use_flash: bool = False  # Pallas flash kernel for local attention blocks
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        return self.data_axes
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def batch_spec(self, *trailing: str | None) -> P:
+        return P(self.data_axes, *trailing)
+
+
+LOCAL = ParallelContext(mesh=None, model_axis=None)

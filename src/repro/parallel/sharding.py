@@ -1,0 +1,197 @@
+"""Sharding rules: parameter/optimizer/batch PartitionSpecs per family.
+
+Rules are name-based over the param tree paths (stable across families since
+all modules share the layers.py naming).  Leading stack dimensions (layer
+scans) are skipped automatically.  ZeRO-1: optimizer moments additionally
+shard their first divisible replicated dim over the data axis, so the update
+runs on 1/data_size of each tensor (GSPMD inserts the reduce-scatter /
+all-gather pair — the paper's partitioned gradient pipeline applies on top
+via bucketing, see train/optimizer.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param-name -> (which dim gets the model axis, counted from the END)
+# col-parallel: last dim; row-parallel: second-to-last dim.
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "wg", "wr", "w_gate", "w_up", "in_proj", "ck", "cr",
+    "head", "w_lora_a",
+}
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "cv"}
+_VOCAB_SHARDED = {"embed", "lm_head"}
+_SLOT_SHARDED = {"moe/w_gate", "moe/w_up", "moe/w_down"}  # slot dim = model
+_REPLICATED_HINTS = {"norm", "ln", "mu", "bias", "scale", "gate", "u",
+                     "conv", "A_log", "D", "dt_bias", "router", "mask_emb",
+                     "pre_proj", "vision_proj", "frame_proj", "w_base",
+                     "w_lora_b", "q_norm", "k_norm"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return str(k.key)
+    return ""
+
+
+def _spec_for(path, leaf, model_axis: str, model_size: int,
+              fsdp_stacks: tuple | None = None) -> P:
+    name = _leaf_name(path)
+    pstr = _path_str(path)
+    ndim = leaf.ndim
+    spec: list[Any] = [None] * ndim
+
+    def fits(dim_idx: int) -> bool:
+        return 0 <= dim_idx < ndim and leaf.shape[dim_idx] % model_size == 0
+
+    if any(f"moe/{name}" in s for s in _SLOT_SHARDED) and "moe" in pstr:
+        # slot-stacked expert weights: (.., S_slots, d, f) — slot dim = model
+        dim = ndim - 3
+        if fits(dim):
+            spec[dim] = model_axis
+            # FSDP option (grok): layer-stack dim over the data axes too
+            if fsdp_stacks is not None and dim > 0:
+                data_axes, data_size = fsdp_stacks
+                if leaf.shape[0] % data_size == 0 and leaf.shape[0] >= data_size:
+                    spec[0] = (data_axes if len(data_axes) > 1
+                               else data_axes[0])
+            return P(*spec)
+    if name in _VOCAB_SHARDED:
+        if fits(ndim - 2):
+            spec[ndim - 2] = model_axis
+        return P(*spec)
+    if name in _COL_PARALLEL and ndim >= 2:
+        if fits(ndim - 1):
+            spec[ndim - 1] = model_axis
+        return P(*spec)
+    if name in _ROW_PARALLEL and ndim >= 2:
+        if fits(ndim - 2):
+            spec[ndim - 2] = model_axis
+        return P(*spec)
+    return P(*spec)  # replicated (norms, biases, small projections)
+
+
+def param_pspecs(params: Any, *, model_axis: str = "model",
+                 model_size: int = 1,
+                 fsdp_experts: bool = False,
+                 data_axes: tuple[str, ...] = ("data",),
+                 mesh: Mesh | None = None) -> Any:
+    """PartitionSpec tree matching ``params`` (works on ShapeDtypeStructs)."""
+    fsdp_stacks = None
+    if fsdp_experts and mesh is not None:
+        dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+        fsdp_stacks = (data_axes, dsize)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, model_axis, model_size,
+                                     fsdp_stacks), params
+    )
+
+
+def zero1_pspecs(params: Any, pspecs: Any, *, data_axes: tuple[str, ...],
+                 mesh: Mesh) -> Any:
+    """Optimizer-moment specs: param spec + first divisible replicated dim
+    sharded over the (flattened) data axes."""
+    data_size = int(np.prod([mesh.shape[a] for a in data_axes]))
+
+    def upgrade(leaf, spec: P) -> P:
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # already data-sharded (e.g. FSDP expert stacks): nothing to add
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a is not None:
+                    used.add(a)
+        if used.intersection(data_axes):
+            return P(*entries)
+        for i in range(leaf.ndim):
+            if entries[i] is None and leaf.shape[i] % data_size == 0 and \
+                    leaf.shape[i] >= data_size:
+                entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                break
+        return P(*entries)
+
+    return jax.tree.map(upgrade, params, pspecs)
+
+
+def batch_pspecs(batch: Any, *, data_axes: tuple[str, ...],
+                 mesh: Mesh | None = None) -> Any:
+    """Batch dim over the data axes (when divisible), else replicated."""
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    dsize = (int(np.prod([mesh.shape[a] for a in data_axes]))
+             if mesh is not None else 1)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if mesh is not None and leaf.shape[0] % dsize != 0:
+            return P(*([None] * leaf.ndim))  # e.g. batch-1 long-context cells
+        return P(da, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(cache: Any, *, data_axes: tuple[str, ...],
+                 model_axis: str = "model", model_size: int = 1,
+                 mesh: Mesh | None = None) -> Any:
+    """KV/state caches: batch dim over data, head/feature dims over model.
+
+    Cache layouts are (L, B, S, Hkv, hd) / (L, B, ...state) / scalars; the
+    batch dim is the dim right after the leading stack dims.  Head or channel
+    dims take the model axis when divisible.
+    """
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    dsize = (int(np.prod([mesh.shape[a] for a in data_axes]))
+             if mesh is not None else 1)
+
+    def spec(leaf):
+        if leaf.ndim <= 1:
+            return P()
+        entries: list[Any] = [None] * leaf.ndim
+        # find the batch dim: first dim whose size is not a tiny stack dim —
+        # heuristic: caches are built as (stack..., B, ...); mark dim index
+        # (ndim>=3 -> dim 1 for (L,B,...) layouts, dim 2 for (G,gs,B,...)).
+        bdim = 1
+        if leaf.ndim >= 5 and leaf.shape[0] <= 16 and leaf.shape[1] <= 16:
+            bdim = 2
+        if mesh is None or leaf.shape[bdim] % dsize == 0:
+            entries[bdim] = da
+        # model axis preference: head_dim (last), then heads, then seq —
+        # decode writes scatter along seq, so sharding seq would force the
+        # partitioner into full rematerialization on every cache update.
+        for i in list(range(leaf.ndim - 1, bdim, -1)):
+            if leaf.shape[i] % model_size == 0 and leaf.shape[i] >= model_size:
+                entries[i] = model_axis
+                break
+        return P(*entries)
+
+    out = jax.tree.map(spec, cache)
+    # scalars (pos) replicated
+    return out
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def shaped_with_sharding(shapes: Any, mesh: Mesh, specs: Any) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs,
+    )

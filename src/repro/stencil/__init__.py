@@ -1,0 +1,8 @@
+from repro.stencil.domain import Domain, periodic_oracle_step
+from repro.stencil.exchange import ExchangeDriver
+from repro.stencil.comb import CycleResult, comb_measure, run_cycles
+
+__all__ = [
+    "Domain", "periodic_oracle_step", "ExchangeDriver",
+    "CycleResult", "comb_measure", "run_cycles",
+]

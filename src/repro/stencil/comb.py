@@ -1,0 +1,105 @@
+"""Comb-style benchmark driver: barriered, multi-cycle halo-exchange timing.
+
+Follows the paper's measurement protocol (§V): synchronize before timing, run
+many exchange cycles, extract the average per-cycle cost, repeat the whole
+measurement several times and average.  On this CPU container the *measured*
+numbers capture real pack/update compute and the python/dispatch overhead gap
+between standard and persistent; the network projection for cluster scales
+comes from ``repro.core.model_comm`` (benchmarks/fig*.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.stencil.domain import Domain
+from repro.stencil.exchange import ExchangeDriver
+
+
+@dataclasses.dataclass
+class CycleResult:
+    strategy: str
+    us_per_cycle: float
+    init_us: float
+    n_cycles: int
+    repeats: int
+    checksum: float
+
+
+def run_cycles(
+    driver: ExchangeDriver,
+    x: jax.Array,
+    *,
+    n_cycles: int = 50,
+    warmup: int = 3,
+    repeats: int = 3,
+) -> CycleResult:
+    """Time ``n_cycles`` exchange(+update) iterations, paper-style."""
+    init_us = 0.0
+    if driver.strategy != "standard":
+        t0 = time.perf_counter()
+        driver.init(x)
+        init_us = (time.perf_counter() - t0) * 1e6
+
+    for _ in range(warmup):
+        x = driver.step(x)
+    driver.wait(x)
+
+    times = []
+    for _ in range(repeats):
+        driver.wait(x)  # the paper's pre-timing barrier
+        t0 = time.perf_counter()
+        for _ in range(n_cycles):
+            x = driver.step(x)
+        driver.wait(x)  # Waitall before stopping the clock
+        times.append((time.perf_counter() - t0) / n_cycles * 1e6)
+    checksum = float(np.asarray(jax.numpy.mean(x)))
+    return CycleResult(
+        strategy=driver.strategy,
+        us_per_cycle=float(np.mean(times)),
+        init_us=init_us,
+        n_cycles=n_cycles,
+        repeats=repeats,
+        checksum=checksum,
+    )
+
+
+def comb_measure(
+    domain: Domain,
+    *,
+    strategies: tuple[str, ...] = ("standard", "persistent", "partitioned"),
+    n_parts: int = 4,
+    update_fn: Callable[[jax.Array], jax.Array] | None = None,
+    n_cycles: int = 50,
+    repeats: int = 3,
+    seed: int = 0,
+) -> dict[str, CycleResult]:
+    """Measure all strategies on one domain; checksums must agree."""
+    results: dict[str, CycleResult] = {}
+    for strategy in strategies:
+        x = domain.random(seed)
+        driver = ExchangeDriver(
+            domain.mesh,
+            lambda s=strategy: domain.halo_spec(
+                s, n_parts if s == "partitioned" else 1
+            ),
+            ndim=len(domain.global_interior),
+            strategy=strategy,
+            update_fn=update_fn,
+        )
+        results[strategy] = run_cycles(
+            driver, x, n_cycles=n_cycles, repeats=repeats
+        )
+        driver.free()
+    sums = {s: r.checksum for s, r in results.items()}
+    ref = next(iter(sums.values()))
+    for s, c in sums.items():
+        assert abs(c - ref) < 1e-3 + 1e-3 * abs(ref), (
+            f"strategy {s} diverged: {sums}"
+        )
+    return results

@@ -1,0 +1,145 @@
+"""Cartesian domain decomposition for stencil workloads (Comb's mesh layer).
+
+A :class:`Domain` splits a global interior mesh across named mesh axes; every
+shard carries ghost rims of width ``halo`` on each decomposed axis.  The
+*stored* global array is therefore ``(interior/procs + 2*halo) * procs`` per
+decomposed axis — the per-shard ghosted block layout that
+``repro.core.halo.exchange`` operates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.halo import HaloSpec, ghost_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """A periodic structured mesh decomposed over ``mesh_axes``.
+
+    ``global_interior[i]`` cells along array axis ``i``; axis ``i`` is
+    decomposed over mesh axis ``mesh_axes[i]`` (None = not decomposed).
+    """
+
+    mesh: Mesh
+    global_interior: tuple[int, ...]
+    mesh_axes: tuple[str | None, ...]
+    halo: int = 1
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.global_interior) == len(self.mesh_axes)
+        for size, name in zip(self.global_interior, self.mesh_axes):
+            if name is not None:
+                procs = self.mesh.shape[name]
+                assert size % procs == 0, (size, name, procs)
+                assert size // procs >= self.halo, "shard thinner than halo"
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def decomposed(self) -> list[tuple[int, str]]:
+        return [
+            (i, name) for i, name in enumerate(self.mesh_axes) if name is not None
+        ]
+
+    @property
+    def local_interior(self) -> tuple[int, ...]:
+        out = []
+        for size, name in zip(self.global_interior, self.mesh_axes):
+            out.append(size // self.mesh.shape[name] if name else size)
+        return tuple(out)
+
+    @property
+    def local_ghosted(self) -> tuple[int, ...]:
+        return tuple(
+            s + (2 * self.halo if name else 0)
+            for s, name in zip(self.local_interior, self.mesh_axes)
+        )
+
+    @property
+    def stored_global(self) -> tuple[int, ...]:
+        """Shape of the stored (ghost-carrying) global array."""
+        out = []
+        for s, name in zip(self.local_ghosted, self.mesh_axes):
+            out.append(s * self.mesh.shape[name] if name else s)
+        return tuple(out)
+
+    def pspec(self) -> P:
+        return P(*self.mesh_axes)
+
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec())
+
+    def halo_spec(self, strategy: str = "standard", n_parts: int = 1) -> HaloSpec:
+        idxs, names = [], []
+        for i, name in self.decomposed:
+            idxs.append(i)
+            names.append(name)
+        return HaloSpec(
+            mesh_axes=tuple(names),
+            array_axes=tuple(idxs),
+            halo=self.halo,
+            periodic=True,
+            strategy=strategy,
+            n_parts=n_parts,
+        )
+
+    # -- data ---------------------------------------------------------------
+    def from_global_interior(self, interior: np.ndarray) -> jax.Array:
+        """Scatter a dense global interior into the ghosted sharded layout
+        (ghosts zeroed; call an exchange to fill them)."""
+        assert interior.shape == self.global_interior, interior.shape
+        h = self.halo
+        blocks = interior
+        # carve into per-shard blocks and pad each with ghost rims
+        for axis, name in reversed(self.decomposed):
+            procs = self.mesh.shape[name]
+            pieces = np.split(blocks, procs, axis=axis)
+            widths = [(0, 0)] * blocks.ndim
+            widths[axis] = (h, h)
+            pieces = [np.pad(p, widths) for p in pieces]
+            blocks = np.concatenate(pieces, axis=axis)
+        return jax.device_put(jnp.asarray(blocks, self.dtype), self.sharding())
+
+    def to_global_interior(self, x: jax.Array) -> np.ndarray:
+        """Strip ghosts and reassemble the dense global interior."""
+        h = self.halo
+        arr = np.asarray(x)
+        for axis, name in self.decomposed:
+            procs = self.mesh.shape[name]
+            pieces = np.split(arr, procs, axis=axis)
+            pieces = [
+                p[tuple(
+                    slice(h, -h) if a == axis else slice(None)
+                    for a in range(p.ndim)
+                )]
+                for p in pieces
+            ]
+            arr = np.concatenate(pieces, axis=axis)
+        return arr
+
+    def random(self, seed: int = 0) -> jax.Array:
+        rng = np.random.default_rng(seed)
+        return self.from_global_interior(
+            rng.normal(size=self.global_interior).astype(self.dtype)
+        )
+
+
+def periodic_oracle_step(interior: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    """NumPy oracle: one 27-point (or 9-point in 2-D) periodic stencil update."""
+    pad = np.pad(interior, 1, mode="wrap")
+    out = np.zeros_like(interior, dtype=np.float32)
+    ranges = [range(3)] * interior.ndim
+    import itertools
+
+    for offs in itertools.product(*ranges):
+        sl = tuple(slice(o, o + s) for o, s in zip(offs, interior.shape))
+        out += weights[offs].astype(np.float32) * pad[sl].astype(np.float32)
+    return out.astype(interior.dtype)

@@ -1,0 +1,137 @@
+"""AdamW optimizer with ZeRO-friendly state, LR schedule, clipping, and
+gradient-compression / bucketed-collective hooks.
+
+Built from scratch (no optax in this container).  Moments can be stored in
+bf16 for very large models (grok: see configs/grok_1_314b.py memory note);
+the update math always runs in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+Params = Any
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> tuple[Params, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (beyond-paper distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+
+def compress_grads(tree: Params, mode: str, key: jax.Array | None = None) -> Params:
+    """Wire-format compression applied before the gradient collectives.
+
+    'bf16'            — cast to bf16 (halves gradient all-reduce bytes)
+    'int8_stochastic' — per-tensor scale + stochastic rounding to int8,
+                        immediately dequantized (simulates the wire format
+                        end-to-end so training quality effects are real).
+    """
+    if mode == "none":
+        return tree
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), tree)
+    if mode == "int8_stochastic":
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(key if key is not None else jax.random.key(0),
+                                len(leaves))
+        out = []
+        for g, k in zip(leaves, keys):
+            gf = g.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            scaled = gf / scale
+            noise = jax.random.uniform(k, g.shape, jnp.float32, -0.5, 0.5)
+            q = jnp.clip(jnp.round(scaled + noise), -127, 127)
+            out.append((q * scale).astype(g.dtype))
+        return jax.tree.unflatten(treedef, out)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params: Params, cfg: OptimizerConfig,
+                   state_dtype: str = "float32") -> dict:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on >=2-D weights (not norms/biases/gains)."""
+    return True
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    opt: dict,
+    cfg: OptimizerConfig,
+) -> tuple[Params, dict, dict]:
+    """One AdamW step; returns (params, opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in new])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in new])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,227 @@
+"""Training loop: step factory + fault-tolerant driver.
+
+The train step is executed through a persistent plan (``repro.core.plan``) —
+compile once at init, bare dispatch per iteration — exactly the paper's
+persistent-communication lifecycle applied to the whole SPMD step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OptimizerConfig, RunConfig
+from repro.core.plan import CommPlan
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.models.api import Model
+from repro.parallel import sharding as shd
+from repro.parallel.context import LOCAL, ParallelContext
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import (
+    FailureInjector, SimulatedFailure, StragglerMonitor,
+)
+from repro.train.optimizer import adamw_update, compress_grads, init_opt_state
+
+log = logging.getLogger("repro.train")
+
+TrainState = dict  # {"params": ..., "opt": {...}}
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    ctx: ParallelContext = LOCAL,
+                    microbatches: int = 1) -> Callable:
+    """(state, batch) -> (state, metrics); pure, jit/AOT-compilable.
+
+    ``microbatches > 1`` scans gradient accumulation over equal batch slices
+    (accumulator dtype per ``model.cfg.grad_accum_dtype``), bounding the
+    per-layer activation carry — the memory lever that lets grok-scale train
+    cells fit 16 GB/chip (see configs/grok_1_314b.py).
+    """
+    accum_dtype = jnp.dtype(model.cfg.grad_accum_dtype)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: model.loss(p, batch, ctx=ctx))(params)
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if microbatches <= 1:
+            loss, grads = grad_fn(state["params"], batch)
+        else:
+            def split(x):
+                y = x.reshape((microbatches, x.shape[0] // microbatches)
+                              + x.shape[1:])
+                if ctx.mesh is not None:
+                    # keep the per-microbatch batch dim on the data axes —
+                    # without this GSPMD may shard the microbatch dim instead
+                    # and every microbatch gathers the others' rows.
+                    from jax.sharding import NamedSharding, PartitionSpec as P
+
+                    da = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+                    spec = P(None, da, *([None] * (y.ndim - 2)))
+                    y = jax.lax.with_sharding_constraint(
+                        y, NamedSharding(ctx.mesh, spec))
+                return y
+
+            micro = jax.tree.map(split, batch)
+            params = state["params"]
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def accum(carry, mb):
+                g_sum, l_sum = carry
+                l, g = grad_fn(params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_sum, g)
+                return (g_sum, l_sum + l), None
+
+            (g_sum, l_sum), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(
+                lambda g, p: (g / microbatches).astype(p.dtype), g_sum,
+                state["params"])
+            loss = l_sum / microbatches
+        grads = compress_grads(grads, opt_cfg.grad_compression)
+        params, opt, metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics["loss"] = loss
+        return {"params": params, "opt": opt}, metrics
+
+    return step
+
+
+def init_state(model: Model, opt_cfg: OptimizerConfig, key) -> TrainState:
+    params = model.init(key)
+    return {"params": params,
+            "opt": init_opt_state(params, opt_cfg, model.cfg.opt_state_dtype)}
+
+
+def state_pspecs(model: Model, state_shapes: TrainState, mesh,
+                 ctx: ParallelContext) -> TrainState:
+    """Sharding specs for a train state (params TP + ZeRO-1 moments)."""
+    pspec = shd.param_pspecs(state_shapes["params"],
+                             model_axis=ctx.model_axis or "model",
+                             model_size=ctx.model_size)
+    mspec = shd.zero1_pspecs(state_shapes["opt"]["m"],
+                             shd.param_pspecs(state_shapes["opt"]["m"],
+                                              model_axis=ctx.model_axis or "model",
+                                              model_size=ctx.model_size),
+                             data_axes=ctx.data_axes, mesh=mesh)
+    from jax.sharding import PartitionSpec as P
+
+    return {"params": pspec,
+            "opt": {"m": mspec, "v": mspec, "step": P()}}
+
+
+@dataclasses.dataclass
+class TrainResult:
+    steps_done: int
+    losses: list
+    restarts: int
+    straggler_flags: int
+    checksum: float
+
+
+class Trainer:
+    """Fault-tolerant training driver.
+
+    init -> [restore latest checkpoint] -> prefetch -> persistent step plan ->
+    loop { step; observe straggler; periodic async checkpoint; injected
+    failures trigger restart-from-checkpoint }.
+    """
+
+    def __init__(self, model: Model, run_cfg: RunConfig,
+                 ctx: ParallelContext = LOCAL,
+                 injector: FailureInjector | None = None,
+                 shardings: Any | None = None):
+        self.model = model
+        self.run_cfg = run_cfg
+        self.ctx = ctx
+        self.injector = injector or FailureInjector(enabled=False)
+        self.monitor = StragglerMonitor(ewma=run_cfg.straggler_ewma,
+                                        factor=run_cfg.straggler_factor)
+        self.step_fn = make_train_step(model, run_cfg.optimizer, ctx)
+        self.shardings = shardings
+        self.checkpointer = (
+            ckpt.AsyncCheckpointer(run_cfg.checkpoint_dir,
+                                   keep=run_cfg.keep_checkpoints)
+            if run_cfg.checkpoint_dir and run_cfg.async_checkpoint else None)
+        self.restarts = 0
+
+    # -- state ------------------------------------------------------------------
+    def _fresh_state(self) -> tuple[TrainState, int]:
+        state = init_state(self.model, self.run_cfg.optimizer,
+                           jax.random.key(self.run_cfg.seed))
+        return state, 0
+
+    def _load_or_init(self) -> tuple[TrainState, int]:
+        d = self.run_cfg.checkpoint_dir
+        if self.run_cfg.resume and d and ckpt.latest_step(d) is not None:
+            like = jax.eval_shape(
+                lambda: init_state(self.model, self.run_cfg.optimizer,
+                                   jax.random.key(self.run_cfg.seed)))
+            state, step = ckpt.restore(d, like=like, shardings=self.shardings)
+            log.info("restored checkpoint at step %d", step)
+            return state, step
+        return self._fresh_state()
+
+    # -- loop -------------------------------------------------------------------
+    def run(self) -> TrainResult:
+        losses: list[float] = []
+        while True:
+            try:
+                return self._run_once(losses)
+            except SimulatedFailure as e:
+                self.restarts += 1
+                log.warning("%s -> restart %d", e, self.restarts)
+                if self.restarts > 5:
+                    raise
+
+    def _run_once(self, losses: list) -> TrainResult:
+        cfg = self.run_cfg
+        state, start_step = self._load_or_init()
+        dataset = SyntheticLM(self.model.cfg, cfg.shape.global_batch,
+                              cfg.shape.seq_len, seed=cfg.seed)
+        batch_sh = None
+        if self.shardings is not None and "batch" in (self.shardings or {}):
+            batch_sh = self.shardings["batch"]
+        prefetch = Prefetcher(dataset, batch_sh, start_step=start_step)
+        jitted = jax.jit(self.step_fn, donate_argnums=(0,))
+        try:
+            for step, batch in prefetch:
+                if step >= cfg.steps:
+                    break
+                self.injector.check(step)
+                t0 = time.perf_counter()
+                state, metrics = jitted(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.monitor.observe(step, dt)
+                losses.append(loss)
+                if cfg.log_every and step % cfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.0f ms)", step, loss, dt * 1e3)
+                if (cfg.checkpoint_dir and cfg.checkpoint_every
+                        and (step + 1) % cfg.checkpoint_every == 0):
+                    if self.checkpointer is not None:
+                        self.checkpointer.save(state, step + 1)
+                    else:
+                        ckpt.save(state, cfg.checkpoint_dir, step + 1,
+                                  keep=cfg.keep_checkpoints)
+        finally:
+            prefetch.stop()
+        if self.checkpointer is not None:
+            self.checkpointer.wait()
+        checksum = float(jnp.mean(jax.tree.leaves(state["params"])[0]
+                                  .astype(jnp.float32)))
+        return TrainResult(
+            steps_done=min(cfg.steps, cfg.steps),
+            losses=losses,
+            restarts=self.restarts,
+            straggler_flags=len(self.monitor.flagged),
+            checksum=checksum,
+        )

@@ -1,0 +1,105 @@
+"""Analytic comm model: paper-claim directions + hypothesis invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.comb_paper import QUARTZ
+from repro.core.model_comm import (
+    MachineModel, StencilWorkload, _near_cubic_grid, simulate, speedup,
+)
+
+
+def _trio(wl, n, rpn=32, threads=2, parts=None):
+    b = simulate("standard", QUARTZ, wl, nprocs=n, ranks_per_node=rpn,
+                 threads=threads)
+    p = simulate("persistent", QUARTZ, wl, nprocs=n, ranks_per_node=rpn,
+                 threads=threads)
+    q = simulate("partitioned", QUARTZ, wl, nprocs=n, ranks_per_node=rpn,
+                 threads=threads, n_parts=parts)
+    return b, p, q
+
+
+def test_c1_persistent_never_slower():
+    """C1: persistent >= baseline at every tested scale."""
+    for n in (64, 256, 1024, 4096):
+        wl = StencilWorkload.from_face_doubles(524_288)
+        b, p, _ = _trio(wl, n)
+        assert speedup(b, p) > 0, n
+
+
+def test_c3_partitioned_loses_small_messages():
+    wl = StencilWorkload.from_face_doubles(768)
+    b, _, q = _trio(wl, 4096)
+    assert speedup(b, q) < -20
+
+
+def test_c4_crossover_with_message_size():
+    small = StencilWorkload.from_face_doubles(768)
+    large = StencilWorkload.from_face_doubles(196_608)
+    _, _, q_small = _trio(small, 4096)
+    b_small, _, _ = _trio(small, 4096)
+    b_large, _, q_large = _trio(large, 4096)
+    assert speedup(b_small, q_small) < 0 < speedup(b_large, q_large)
+
+
+def test_c5_partition_count_cliff():
+    """C5: partitioned loses at 1 rank/node (64 threads), wins at 32 rpn."""
+    wl = StencilWorkload.from_global_mesh((2048, 4096, 4096), 64)
+    b1, _, q1 = _trio(wl, 64, rpn=1, threads=64)
+    wl32 = StencilWorkload.from_global_mesh((2048, 4096, 4096), 2048)
+    b32, _, q32 = _trio(wl32, 2048, rpn=32, threads=2)
+    assert speedup(b1, q1) < 0 < speedup(b32, q32)
+
+
+def test_c6_weak_scaling_rises():
+    wl = StencilWorkload.from_face_doubles(524_288)
+    b64, _, _ = _trio(wl, 64)
+    b4096, _, _ = _trio(wl, 4096)
+    assert b4096.total > b64.total
+
+
+def test_workload_messages():
+    wl = StencilWorkload((64, 64, 64), vars_per_cell=3)
+    msgs = wl.messages()
+    assert len(msgs) == 26  # 6 faces + 12 edges + 8 corners
+    assert msgs[0] == 64 * 64 * 3 * 8
+    assert msgs[-1] == 3 * 8
+
+
+def test_near_cubic_grid():
+    assert _near_cubic_grid(64) == (4, 4, 4)
+    a, b, c = _near_cubic_grid(128)
+    assert a * b * c == 128 and max(a, b, c) / min(a, b, c) <= 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    doubles=st.sampled_from([768, 12288, 196_608, 524_288]),
+    n=st.sampled_from([64, 512, 4096]),
+    threads=st.sampled_from([1, 2, 8]),
+)
+def test_times_positive_and_finite(doubles, n, threads):
+    wl = StencilWorkload.from_face_doubles(doubles)
+    for strategy in ("standard", "persistent", "partitioned"):
+        tb = simulate(strategy, QUARTZ, wl, nprocs=n, ranks_per_node=32,
+                      threads=threads)
+        assert 0 < tb.total < 10.0, (strategy, tb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(doubles=st.integers(256, 1_000_000))
+def test_monotone_in_message_size(doubles):
+    """Bigger messages never get cheaper (fixed everything else)."""
+    wl1 = StencilWorkload.from_face_doubles(doubles)
+    wl2 = StencilWorkload.from_face_doubles(doubles * 2)
+    for strategy in ("standard", "persistent"):
+        t1 = simulate(strategy, QUARTZ, wl1, nprocs=1024, threads=2).total
+        t2 = simulate(strategy, QUARTZ, wl2, nprocs=1024, threads=2).total
+        assert t2 >= t1 * 0.99
+
+
+def test_persistent_init_amortization():
+    wl = StencilWorkload.from_face_doubles(12288)
+    t1 = simulate("persistent", QUARTZ, wl, nprocs=256, threads=2, iters=1)
+    t1000 = simulate("persistent", QUARTZ, wl, nprocs=256, threads=2, iters=1000)
+    assert t1.init_amortized > 100 * t1000.init_amortized

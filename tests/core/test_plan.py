@@ -1,0 +1,71 @@
+"""Persistent CommPlan lifecycle + PlanCache amortization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import CommPlan, PlanCache, dispatch_standard, persistent
+
+
+def test_plan_lifecycle():
+    def step(x):
+        return x * 2 + 1
+
+    x = jnp.arange(8.0)
+    plan = CommPlan(step, example_args=(jax.ShapeDtypeStruct(x.shape, x.dtype),))
+    assert plan.init_seconds > 0
+    out = plan.wait(plan.start(x))
+    np.testing.assert_array_equal(np.asarray(out), np.arange(8.0) * 2 + 1)
+    assert "HloModule" in plan.as_text()
+    assert plan.cost_analysis() is not None
+    plan.free()
+    with pytest.raises(RuntimeError, match="after free"):
+        plan.start(x)
+
+
+def test_plan_cache_amortizes():
+    cache = PlanCache()
+
+    def f(x):
+        return x + 1
+
+    x = jnp.ones((4,))
+    p1 = cache.get_or_init(f, (x,))
+    p2 = cache.get_or_init(f, (x,))
+    assert p1 is p2
+    assert cache.stats.inits == 1 and cache.stats.cache_hits == 1
+    # different signature -> new plan
+    cache.get_or_init(f, (jnp.ones((8,)),))
+    assert cache.stats.inits == 2
+    cache.free_all()
+    assert len(cache) == 0 and cache.stats.frees == 2
+
+
+def test_persistent_decorator():
+    cache = PlanCache()
+    calls = []
+
+    @persistent(cache=cache)
+    def step(x):
+        calls.append(1)
+        return x * 3
+
+    x = jnp.arange(4.0)
+    for _ in range(5):
+        out = step(x)
+    np.testing.assert_array_equal(np.asarray(out), np.arange(4.0) * 3)
+    assert cache.stats.inits == 1
+    assert cache.stats.starts == 5
+    assert len(calls) == 1  # traced exactly once (init)
+
+
+def test_standard_vs_persistent_numerics():
+    def step(x):
+        return jnp.tanh(x) @ x.T
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)), jnp.float32)
+    a = dispatch_standard(step, x)
+    plan = CommPlan(step, example_args=(jax.ShapeDtypeStruct(x.shape, x.dtype),))
+    b = plan.start(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

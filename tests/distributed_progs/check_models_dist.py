@@ -1,0 +1,129 @@
+"""Multi-device model checks (8 fake CPU devices): the distributed execution
+paths must match their single-device references.
+
+* EP MoE (partitioned all-to-all dispatch)  == dense-dispatch MoE
+* sequence-parallel prefill (ring attention) == local attention
+* sequence-parallel SSM / RWKV (state passing + conv halo) == local scan
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model, concrete_batch
+from repro.parallel.context import ParallelContext
+
+PASS = []
+
+
+def ok(name):
+    print(f"OK {name}")
+    PASS.append(name)
+
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+# --- EP MoE == dense MoE ------------------------------------------------------
+cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+# 4 experts on a 4-way model axis; capacity factor high => no drops => paths equal
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+batch = concrete_batch(cfg, 4, 32)
+
+ctx_dense = ParallelContext(mesh=mesh, moe_mode="dense")
+ctx_ep = ParallelContext(mesh=mesh, moe_mode="ep", n_parts=1)
+ctx_ep_part = ParallelContext(mesh=mesh, moe_mode="ep", n_parts=3)
+
+with jax.set_mesh(mesh):
+    want = jax.jit(lambda p, b: model.loss(p, b, ctx=ctx_dense))(params, batch)
+    got = jax.jit(lambda p, b: model.loss(p, b, ctx=ctx_ep))(params, batch)
+    got_part = jax.jit(lambda p, b: model.loss(p, b, ctx=ctx_ep_part))(params, batch)
+np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2)
+np.testing.assert_allclose(float(got_part), float(got), rtol=2e-3, atol=2e-3)
+ok("EP MoE (a2a, partitioned a2a) == dense dispatch")
+
+# grok-style hidden-split slots (spe=2): 2 experts as 4 slots on 4 devices
+cfg_g = get_config("grok-1-314b").reduced().with_updates(
+    n_experts=2, top_k=1, ep_slots=4, capacity_factor=8.0, d_ff=64)
+model_g = build_model(cfg_g)
+params_g = model_g.init(jax.random.key(1))
+batch_g = concrete_batch(cfg_g, 4, 16, seed=1)
+with jax.set_mesh(mesh):
+    want = jax.jit(lambda p, b: model_g.loss(p, b, ctx=ctx_dense))(params_g, batch_g)
+    got = jax.jit(lambda p, b: model_g.loss(p, b, ctx=ctx_ep))(params_g, batch_g)
+np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2)
+ok("EP MoE hidden-split slots (spe=2, subgroup psum) == dense")
+
+# --- sequence-parallel dense prefill (ring attention) -------------------------
+cfg_d = get_config("llama3-8b").reduced()
+model_d = build_model(cfg_d)
+params_d = model_d.init(jax.random.key(2))
+batch_d = concrete_batch(cfg_d, 4, 64, seed=2)
+ctx_local = ParallelContext(mesh=mesh)
+ctx_ring = ParallelContext(mesh=mesh, seq_parallel=True, n_parts=1)
+ctx_ring_part = ParallelContext(mesh=mesh, seq_parallel=True, n_parts=2)
+with jax.set_mesh(mesh):
+    want = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_local))(params_d, batch_d)
+    got = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_ring))(params_d, batch_d)
+    got2 = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_ring_part))(params_d, batch_d)
+np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2)
+np.testing.assert_allclose(float(got2), float(want), rtol=2e-2, atol=2e-2)
+ok("ring-attention prefill (fused + partitioned) == local attention")
+
+# --- sequence-parallel zamba2 (conv halo + SSD state passing) -----------------
+cfg_z = get_config("zamba2-1.2b").reduced()
+model_z = build_model(cfg_z)
+params_z = model_z.init(jax.random.key(3))
+batch_z = concrete_batch(cfg_z, 4, 64, seed=3)
+for method in ("ring", "tree"):
+    ctx_sp = ParallelContext(mesh=mesh, seq_parallel=True, n_parts=2,
+                             state_method=method)
+    with jax.set_mesh(mesh):
+        want = jax.jit(lambda p, b: model_z.loss(p, b, ctx=ctx_local))(params_z, batch_z)
+        got = jax.jit(lambda p, b: model_z.loss(p, b, ctx=ctx_sp))(params_z, batch_z)
+    np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2,
+                               err_msg=method)
+ok("seq-parallel zamba2 (conv halo + state passing ring/tree) == local")
+
+# --- sequence-parallel rwkv6 ---------------------------------------------------
+cfg_r = get_config("rwkv6-1.6b").reduced()
+model_r = build_model(cfg_r)
+params_r = model_r.init(jax.random.key(4))
+batch_r = concrete_batch(cfg_r, 4, 64, seed=4)
+ctx_sp = ParallelContext(mesh=mesh, seq_parallel=True)
+with jax.set_mesh(mesh):
+    want = jax.jit(lambda p, b: model_r.loss(p, b, ctx=ctx_local))(params_r, batch_r)
+    got = jax.jit(lambda p, b: model_r.loss(p, b, ctx=ctx_sp))(params_r, batch_r)
+np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2)
+ok("seq-parallel rwkv6 (WKV state passing) == local scan")
+
+# --- ring-TP (Megatron-SP on partitioned ring matmuls) == gspmd TP -----------
+ctx_ringtp = ParallelContext(mesh=mesh, tp_mode="ring")
+with jax.set_mesh(mesh):
+    want = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_local))(params_d, batch_d)
+    got = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_ringtp))(params_d, batch_d)
+    g = jax.jit(jax.grad(lambda p, b: model_d.loss(p, b, ctx=ctx_ringtp)))(
+        params_d, batch_d)
+np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2)
+for leaf in jax.tree.leaves(g):
+    assert np.isfinite(np.asarray(leaf, np.float32)).all()
+ok("ring-TP MLP (ring AG-matmul + matmul-RS) == gspmd TP, grads finite")
+
+# --- grad flow under distributed contexts --------------------------------------
+with jax.set_mesh(mesh):
+    g = jax.jit(jax.grad(lambda p, b: model_d.loss(p, b, ctx=ctx_ring)))(
+        params_d, batch_d)
+for leaf in jax.tree.leaves(g):
+    assert np.isfinite(np.asarray(leaf, np.float32)).all()
+ok("gradients finite through ring attention")
+
+print(f"ALL {len(PASS)} MODEL-DIST CHECKS PASSED")

@@ -1,0 +1,78 @@
+"""Flash attention kernel vs pure-jnp oracle (interpret mode, shape/dtype sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention, attention_ref, flash_attention
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _mk(b, hq, hkv, sq, skv, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,bq,bkv",
+    [
+        (1, 2, 2, 32, 32, 16, 16, 16),  # MHA square
+        (2, 4, 2, 64, 64, 32, 32, 16),  # GQA
+        (1, 8, 1, 32, 64, 16, 16, 32),  # MQA, rectangular
+        (1, 2, 2, 16, 16, 8, 16, 16),  # single block
+        (2, 2, 2, 48, 96, 16, 16, 32),  # non-pow2 q blocks
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(dtype, b, hq, hkv, sq, skv, d, bq, bkv, causal):
+    q, k, v = _mk(b, hq, hkv, sq, skv, d, dtype)
+    got = flash_attention(
+        q, k, v, causal=causal, block_q=bq, block_kv=bkv, interpret=True
+    )
+    want = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_ops_wrapper_layout():
+    """ops.attention takes (B,S,H,D) and matches the oracle."""
+    q, k, v = _mk(2, 4, 2, 32, 32, 16, jnp.float32)
+    qs, ks, vs = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    got = attention(qs, ks, vs, causal=True, force_kernel=True, interpret=True,
+                    block_q=16, block_kv=16)
+    want = jnp.swapaxes(attention_ref(q, k, v, causal=True), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_fully_masked_rows_are_finite():
+    """Cross-block causal boundaries must not produce NaNs (masked-block guard)."""
+    q, k, v = _mk(1, 1, 1, 64, 64, 16, jnp.float32, seed=3)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_kv=32, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sq_blocks=st.integers(1, 3),
+    skv_blocks=st.integers(1, 3),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_property(sq_blocks, skv_blocks, d, causal, seed):
+    """Property: kernel == oracle for arbitrary block-multiple shapes."""
+    bq = bkv = 16
+    q, k, v = _mk(1, 2, 1, sq_blocks * bq, skv_blocks * bkv, d, jnp.float32, seed)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bkv,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)

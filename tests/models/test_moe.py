@@ -1,0 +1,102 @@
+"""MoE internals: routing, capacity drops, slot layouts, dropless decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe
+from repro.models.moe import (
+    _dispatch_indices, _moe_dense, _moe_dropless, _route, moe_ffn_params,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("phi3.5-moe-42b-a6.6b").reduced()
+
+
+def test_route_topk_normalized(cfg):
+    p = moe_ffn_params(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (32, cfg.d_model), jnp.float32)
+    w, idx, aux = _route(cfg, p["router"], x)
+    assert w.shape == (32, cfg.top_k) and idx.shape == (32, cfg.top_k)
+    np.testing.assert_allclose(np.asarray(w.sum(-1), np.float32), 1.0, rtol=1e-3)
+    assert float(aux) > 0
+    # top-k indices are distinct per token
+    assert (np.asarray(idx)[:, 0] != np.asarray(idx)[:, 1]).all()
+
+
+def test_capacity_ranks_and_drops(cfg):
+    # all tokens pick expert 0 -> ranks 0..T-1, keeps = first `capacity`
+    idx = jnp.zeros((10, 1), jnp.int32)
+    tk, rank, keep = _dispatch_indices(cfg.with_updates(top_k=1), idx, 10, 4)
+    np.testing.assert_array_equal(np.asarray(rank), np.arange(10))
+    np.testing.assert_array_equal(np.asarray(keep), np.arange(10) < 4)
+
+
+def test_dense_vs_dropless_no_drops(cfg):
+    """With capacity >= tokens, capacity dispatch == dropless all-slots."""
+    c = cfg.with_updates(capacity_factor=16.0)
+    p = moe_ffn_params(c, jax.random.key(2))
+    x = jax.random.normal(jax.random.key(3), (16, c.d_model), jnp.bfloat16)
+    y1, _ = _moe_dense(c, p, x)
+    y2, _ = _moe_dropless(c, p, x)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_capacity_drop_reduces_output_norm(cfg):
+    """Tiny capacity must drop tokens (outputs zeroed for dropped ones)."""
+    c_tight = cfg.with_updates(capacity_factor=0.1)
+    c_loose = cfg.with_updates(capacity_factor=16.0)
+    p = moe_ffn_params(cfg, jax.random.key(4))
+    x = jax.random.normal(jax.random.key(5), (64, cfg.d_model), jnp.bfloat16)
+    y_tight, _ = _moe_dense(c_tight, p, x)
+    y_loose, _ = _moe_dropless(c_loose, p, x)
+    n_zero_tight = int((np.abs(np.asarray(y_tight, np.float32)).sum(-1) < 1e-6).sum())
+    n_zero_loose = int((np.abs(np.asarray(y_loose, np.float32)).sum(-1) < 1e-6).sum())
+    assert n_zero_tight > n_zero_loose
+
+
+def test_hidden_split_slot_layout():
+    """grok-style: 2 experts as 4 slots of half-width hidden shards."""
+    cfg = get_config("grok-1-314b").reduced().with_updates(
+        n_experts=2, top_k=1, ep_slots=4, d_ff=64, capacity_factor=16.0)
+    p = moe_ffn_params(cfg, jax.random.key(6))
+    assert p["w_up"].shape == (4, cfg.d_model, 32)  # 4 slots x half hidden
+    x = jax.random.normal(jax.random.key(7), (8, cfg.d_model), jnp.bfloat16)
+    y, _ = _moe_dense(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    # reference: full-width experts assembled from the slot shards
+    w_up_full = jnp.concatenate([p["w_up"][0::2], p["w_up"][1::2]], axis=-1)
+    w_gate_full = jnp.concatenate([p["w_gate"][0::2], p["w_gate"][1::2]], axis=-1)
+    w_down_full = jnp.concatenate([p["w_down"][0::2], p["w_down"][1::2]], axis=1)
+    wgt, idx, _ = _route(cfg, p["router"], x)
+    acts = []
+    for t in range(8):
+        e = int(idx[t, 0])
+        h = jax.nn.gelu(x[t] @ w_gate_full[e].astype(x.dtype)) * (
+            x[t] @ w_up_full[e].astype(x.dtype))
+        acts.append((h @ w_down_full[e].astype(x.dtype)) * wgt[t, 0])
+    want = jnp.stack(acts)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_aux_loss_balanced_router_lower():
+    """A perfectly uniform router has lower aux loss than a collapsed one."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    T, E = 256, cfg.n_experts
+    uniform = jnp.zeros((T, E))
+    collapsed = jnp.zeros((T, E)).at[:, 0].set(10.0)
+
+    def aux_of(logits):
+        probs = jax.nn.softmax(logits, -1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        onehot = jax.nn.one_hot(idx, E).sum(1)
+        return float(E * jnp.sum(onehot.mean(0) * probs.mean(0)))
+
+    assert aux_of(uniform) < aux_of(collapsed)

@@ -1,0 +1,92 @@
+"""Config registry: all 10 assigned archs, shape cells, skip rules."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_configs, get_config
+
+
+def test_all_ten_archs_registered():
+    cfgs = all_configs()
+    for arch in ARCH_IDS:
+        assert arch in cfgs, arch
+    assert len(ARCH_IDS) == 10
+
+
+def test_shape_cells_and_skips():
+    """DESIGN.md §4: 31 live cells of the 40 (9 skips per assignment)."""
+    live = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = {s.name for s in cfg.shapes()}
+        skips = dict(cfg.skipped_shapes())
+        assert shapes.isdisjoint(skips)
+        assert len(shapes) + len(skips) == 4
+        live += len(shapes)
+        if cfg.is_encoder_only:
+            assert "decode_32k" in skips and "long_500k" in skips
+        elif not cfg.supports_long_context:
+            assert "long_500k" in skips
+        else:
+            assert "long_500k" in shapes
+    assert live == 31
+
+
+def test_long_context_archs():
+    assert get_config("rwkv6-1.6b").supports_long_context
+    assert get_config("zamba2-1.2b").supports_long_context
+    assert not get_config("llama3-8b").supports_long_context
+
+
+def test_assigned_dimensions_exact():
+    """Spot-check the assigned architecture dimensions (from the pool)."""
+    spec = {
+        "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168, vocab_size=65536),
+        "llama-3.2-vision-11b": dict(n_layers=40, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, d_ff=14336, vocab_size=128256),
+        "qwen2.5-14b": dict(n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+                            d_ff=13824, vocab_size=152064, qkv_bias=True),
+        "llama3-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+                          d_ff=14336, vocab_size=128256),
+        "granite-8b": dict(n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+                           d_ff=14336, vocab_size=49152),
+        "stablelm-1.6b": dict(n_layers=24, d_model=2048, n_heads=32,
+                              n_kv_heads=32, d_ff=5632, vocab_size=100352),
+        "phi3.5-moe-42b-a6.6b": dict(n_layers=32, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, d_ff=6400, vocab_size=32064,
+                                     n_experts=16, top_k=2),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+                            d_ff=32768, vocab_size=131072, n_experts=8, top_k=2),
+        "hubert-xlarge": dict(n_layers=48, d_model=1280, n_heads=16,
+                              n_kv_heads=16, d_ff=5120, vocab_size=504),
+        "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32,
+                            n_kv_heads=32, d_ff=8192, vocab_size=32000,
+                            ssm_state=64),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_shape_set():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_reduced_configs_small():
+    for arch in ARCH_IDS:
+        r = get_config(arch).reduced()
+        assert r.d_model <= 64 and r.vocab_size <= 128
+        assert r.param_count() < 5e6
+
+
+def test_config_hashable_and_frozen():
+    cfg = get_config("llama3-8b")
+    hash(cfg)
+    with pytest.raises(Exception):
+        cfg.n_layers = 1  # type: ignore[misc]

@@ -1,0 +1,39 @@
+"""Runs the multi-device check programs in subprocesses with 8 fake devices.
+
+The device count is fixed at first jax init, so multi-device tests cannot
+share this process (and the project convention forbids forcing a global
+device count in conftest).  Each program prints ``ALL <n> ... PASSED`` on
+success and exits nonzero on failure.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+PROGS = [
+    ("check_core.py", "CORE"),
+    ("check_stencil.py", "STENCIL"),
+    ("check_models_dist.py", "MODEL-DIST"),
+    ("check_elastic.py", "ELASTIC"),
+]
+
+_DIR = os.path.join(os.path.dirname(__file__), "distributed_progs")
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.mark.parametrize("prog,tag", PROGS, ids=[p for p, _ in PROGS])
+def test_distributed_program(prog, tag):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(_DIR, prog)],
+        env=env, capture_output=True, text=True, timeout=1500,
+    )
+    if out.returncode != 0:
+        sys.stderr.write(out.stdout[-4000:])
+        sys.stderr.write(out.stderr[-4000:])
+    assert out.returncode == 0, f"{prog} failed"
+    assert f"CHECKS PASSED" in out.stdout, out.stdout[-2000:]

@@ -1,0 +1,91 @@
+"""AdamW vs numpy reference; schedule, clipping, compression properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import OptimizerConfig
+from repro.train.optimizer import (
+    adamw_update, clip_by_global_norm, compress_grads, global_norm,
+    init_opt_state, lr_schedule,
+)
+
+
+def _np_adamw(p, g, m, v, step, cfg):
+    m = cfg.beta1 * m + (1 - cfg.beta1) * g
+    v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+    mhat = m / (1 - cfg.beta1 ** step)
+    vhat = v / (1 - cfg.beta2 ** step)
+    lr = float(lr_schedule(cfg, jnp.asarray(step)))
+    delta = mhat / (np.sqrt(vhat) + cfg.eps)
+    if p.ndim >= 2:
+        delta = delta + cfg.weight_decay * p
+    return p - lr * delta, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = OptimizerConfig(lr=1e-2, grad_clip=1e9, warmup_steps=0, total_steps=100)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    opt = init_opt_state(params, cfg)
+    np_p = {k: np.asarray(v) for k, v in params.items()}
+    np_m = {k: np.zeros_like(v) for k, v in np_p.items()}
+    np_v = {k: np.zeros_like(v) for k, v in np_p.items()}
+    for step in range(1, 4):
+        grads = {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+                 "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+        params, opt, metrics = adamw_update(params, grads, opt, cfg)
+        for k in np_p:
+            np_p[k], np_m[k], np_v[k] = _np_adamw(
+                np_p[k], np.asarray(grads[k]), np_m[k], np_v[k], step, cfg)
+        for k in np_p:
+            np.testing.assert_allclose(np.asarray(params[k]), np_p[k],
+                                       rtol=1e-5, atol=1e-6, err_msg=f"{k}@{step}")
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((6,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_schedule(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_schedule(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    end = float(lr_schedule(cfg, jnp.asarray(100)))
+    assert abs(end - 0.1) < 1e-5
+    mid = float(lr_schedule(cfg, jnp.asarray(55)))
+    assert 0.1 < mid < 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_int8_compression_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    out = compress_grads(g, "int8_stochastic", jax.random.key(seed))
+    scale = np.abs(np.asarray(g["w"])).max() / 127.0
+    err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"]))
+    assert err.max() <= scale + 1e-6  # one quantization bin
+
+
+def test_bf16_compression_halves_width():
+    g = {"w": jnp.ones((8,), jnp.float32)}
+    out = compress_grads(g, "bf16")
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_bf16_opt_state():
+    cfg = OptimizerConfig()
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    opt = init_opt_state(params, cfg, "bfloat16")
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    params2, opt2, _ = adamw_update(params, {"w": jnp.ones((4, 4), jnp.bfloat16)},
+                                    opt, cfg)
+    assert opt2["v"]["w"].dtype == jnp.bfloat16
+    assert params2["w"].dtype == jnp.bfloat16
