@@ -18,6 +18,8 @@ def _run_inner() -> None:
     import jax
     import numpy as np
 
+    from repro.core.compat import make_mesh
+
     from repro.configs import get_config
     from repro.configs.base import OptimizerConfig
     from repro.core.plan import CommPlan, PlanCache
@@ -26,8 +28,7 @@ def _run_inner() -> None:
     from repro.train.optimizer import init_opt_state
     from repro.train.train_loop import make_train_step
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     # --- train-step dispatch: persistent plan vs per-call jit path ----------
     cfg = get_config("llama3-8b").reduced()

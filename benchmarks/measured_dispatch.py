@@ -22,11 +22,11 @@ def _run_inner() -> None:
     import jax
     import numpy as np
 
+    from repro.core.compat import make_mesh
     from repro.kernels.stencil27 import jacobi_weights, stencil27_ref
     from repro.stencil import Domain, comb_measure
 
-    mesh = jax.make_mesh((4, 2), ("pz", "py"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("pz", "py"))
     w = jacobi_weights()
 
     def update(xl):

@@ -26,11 +26,11 @@ import sys
 def _run_inner() -> None:
     import jax
 
+    from repro.core.compat import make_mesh
     from repro.core.hlo_analysis import parse_collectives
     from repro.stencil import Domain, ExchangeDriver
 
-    mesh = jax.make_mesh((4, 2), ("pz", "py"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("pz", "py"))
     dom = Domain(mesh, global_interior=(64, 32, 16),
                  mesh_axes=("pz", "py", None))
 

@@ -28,7 +28,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="model-only (skip measured subprocess benchmarks)")
+    ap.add_argument("--sweep-out", default="BENCH_stencil_sweep.json",
+                    help="where the §VI sweep writes its BENCH_*.json records")
     args = ap.parse_args()
+    from repro.stencil.sweep import is_bench_path
+
+    if not is_bench_path(args.sweep_out):
+        # fail before minutes of sweep subprocesses, not at write time
+        ap.error(f"--sweep-out must be named BENCH_*.json, got {args.sweep_out!r}")
 
     from benchmarks import figures
 
@@ -49,6 +56,18 @@ def main() -> None:
         from benchmarks import overlap_analysis
 
         overlap_analysis.main()
+
+        print("# === §VI sweep: devices x partitions x message size ===")
+        from repro.stencil.sweep import SweepConfig, run_sweep, summarize, \
+            write_bench_json
+
+        config = SweepConfig(device_counts=(2, 4, 8), part_counts=(1, 2, 4),
+                             sizes=((32, 16), (64, 32)))
+        records = run_sweep(config)
+        write_bench_json(records, args.sweep_out)
+        for row in summarize(records):
+            print(row)
+        print(f"# sweep: {len(records)} records -> {args.sweep_out}")
 
         print("# === LM benchmarks (tiny configs, real step timings) ===")
         from benchmarks import lm_bench

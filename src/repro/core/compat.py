@@ -1,0 +1,146 @@
+"""Version-compatibility shims over drifting jax APIs.
+
+The repo targets the pinned container environment but must survive the API
+drift between jax 0.4.x and 0.8.x that hits exactly the surfaces this
+codebase leans on:
+
+* ``jax.shard_map``           — top-level alias + ``check_vma`` kwarg are new;
+  older releases only have ``jax.experimental.shard_map.shard_map`` with the
+  ``check_rep`` kwarg.
+* ``jax.sharding.AxisType``   — introduced with the explicit-sharding work;
+  absent on 0.4.x (where every mesh axis is implicitly "auto").
+* ``jax.make_mesh(axis_types=...)`` — the kwarg follows ``AxisType``.
+* ``Compiled.cost_analysis()``  — returns a dict on new jax, a one-element
+  list of dicts on 0.4.x.
+
+Every call site in src/, tests/ and benchmarks/ goes through these wrappers
+instead of feature-testing jax inline.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = [
+    "shard_map",
+    "make_mesh",
+    "axis_type_auto",
+    "axis_size",
+    "cost_analysis_dict",
+]
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, inside ``shard_map``.
+
+    ``lax.axis_size`` is new jax; on 0.4.x ``jax.core.axis_frame(name)``
+    returns the size (an int, or a frame carrying ``.size`` on some
+    releases).  Must stay a *python int* — the halo code unrolls loops and
+    builds permutation tables from it at trace time.
+    """
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    size = getattr(frame, "size", frame)
+    return int(size)
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check: bool = False,
+) -> Callable:
+    """``jax.shard_map`` with the replication/VMA check disabled by default.
+
+    ``check`` maps to ``check_vma`` (new jax) or ``check_rep`` (old jax) —
+    the manual collectives in :mod:`repro.core.halo` and the models are not
+    expressible under either checker.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check,
+            )
+        except TypeError:  # jax with top-level alias but pre-VMA kwarg
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check,
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
+
+
+def axis_type_auto() -> Any | None:
+    """``jax.sharding.AxisType.Auto`` where it exists, else ``None``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return None if axis_type is None else axis_type.Auto
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Sequence[Any] | None = None,
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with auto axis types when the installed jax has them.
+
+    On jax without ``AxisType`` every axis is already auto-typed, so the
+    kwarg is simply dropped.
+    """
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    auto = axis_type_auto()
+    if auto is not None and "axis_types" in inspect.signature(
+        jax.make_mesh
+    ).parameters:
+        kwargs["axis_types"] = (auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh: jax.sharding.Mesh) -> Any:
+    """Context manager installing ``mesh`` as the ambient mesh for ``jit``.
+
+    ``jax.set_mesh`` is new jax; on 0.4.x a ``Mesh`` is itself the context
+    manager with the same sharding-resolution effect for these programs.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def pallas_tpu_compiler_params(**kwargs: Any) -> Any:
+    """``pltpu.CompilerParams`` (new name) / ``pltpu.TPUCompilerParams`` (old).
+
+    Same kwargs (``dimension_semantics`` etc.); only the class name drifted.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def cost_analysis_dict(compiled: Any) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` to a flat dict.
+
+    jax 0.4.x returns ``[{...}]`` (one entry per program); newer jax returns
+    the dict directly.  An empty analysis normalizes to ``{}``.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

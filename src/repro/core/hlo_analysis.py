@@ -257,18 +257,38 @@ def _op_traffic(comp: Comp, name: str, op: str, type_str: str, args: str) -> flo
     return result_b + sum(operand_b)
 
 
+def _split_top_level(args: str) -> list[str]:
+    """Split an operand list on commas *outside* ``[]``/``{}``/``()`` — HLO
+    operand types (``f32[16,16]{1,0}``) and tuple types contain commas."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 def _operand_names(args: str) -> list[str]:
     out = []
-    depth = 0
-    for token in args.split(","):
+    for token in _split_top_level(args):
         token = token.strip()
-        m = re.match(r"^(?:\(?[a-z0-9_]+\[[\d,]*\]\{[^\}]*\}\s+)?%([\w\.\-]+)", token)
+        # typed reference: the %name is the last %-token (tuple types may
+        # embed other %refs only in comments, which HLO does not emit here).
+        refs = re.findall(r"%([\w\.\-]+)", token)
+        if refs:
+            out.append(refs[-1])
+            continue
+        m = re.match(r"^(?:[a-z0-9_]+\[[\d,]*\]\{[^\}]*\}\s+)?([\w\.\-]+)$", token)
         if m:
             out.append(m.group(1))
-        else:
-            m2 = re.match(r"^%?([\w\.\-]+)$", token)
-            if m2:
-                out.append(m2.group(1))
     return out
 
 

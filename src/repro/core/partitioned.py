@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat
+
 
 # ---------------------------------------------------------------------------
 # Partitioner: the equal-partition (+padding) rule from the paper
@@ -65,6 +67,14 @@ class Partitioner:
             x = lax.slice_in_dim(x, 0, orig_size, axis=self.axis)
         return x
 
+    def slices(self, size: int) -> list[tuple[int, int]]:
+        """(offset, valid width) of each partition within the *un-padded*
+        axis; the tail partition's width is clipped (0 when fully padding)."""
+        c = self.part_size(size)
+        return [
+            (i * c, max(0, min(c, size - i * c))) for i in range(self.n_parts)
+        ]
+
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -72,7 +82,7 @@ class Partitioner:
 
 
 def ring_perm(axis_name: str, shift: int = 1) -> list[tuple[int, int]]:
-    k = lax.axis_size(axis_name)
+    k = compat.axis_size(axis_name)
     return [(i, (i + shift) % k) for i in range(k)]
 
 
@@ -135,7 +145,7 @@ def ring_all_gather(
     With ``n_parts > 1`` each ring hop moves ``n_parts`` sub-chunks
     independently (finer overlap granularity — partitioned communication).
     """
-    k = lax.axis_size(axis_name)
+    k = compat.axis_size(axis_name)
     if k == 1:
         return x
     idx = lax.axis_index(axis_name)
@@ -182,7 +192,7 @@ def ring_all_gather_matmul(
     with the next chunk's transfer — partition count == ring size.
     """
     ws = list(w) if isinstance(w, (list, tuple)) else [w]
-    k = lax.axis_size(axis_name)
+    k = compat.axis_size(axis_name)
     dtype = accum_dtype or x.dtype
     if k == 1:
         outs = [jnp.dot(x, wi, precision=precision).astype(dtype) for wi in ws]
@@ -219,7 +229,7 @@ def ring_matmul_reduce_scatter(
     full sum.  Equivalent to ``lax.psum_scatter(x @ w, axis_name,
     scatter_dimension=0, tiled=True)``.
     """
-    k = lax.axis_size(axis_name)
+    k = compat.axis_size(axis_name)
     dtype = accum_dtype or x.dtype
     full = jnp.dot(x, w, precision=precision).astype(dtype) if k == 1 else None
     if k == 1:

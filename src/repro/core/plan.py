@@ -117,7 +117,9 @@ class CommPlan:
         return self.compiled.memory_analysis()
 
     def cost_analysis(self) -> dict:
-        return self.compiled.cost_analysis()
+        from repro.core.compat import cost_analysis_dict
+
+        return cost_analysis_dict(self.compiled)
 
     def as_text(self) -> str:
         return self.compiled.as_text()
@@ -162,15 +164,26 @@ class PlanCache:
         args: Sequence[Any],
         *,
         extra_key: Hashable = (),
+        key: Hashable | None = None,
+        lazy_fn: bool = False,
         **plan_kwargs: Any,
     ) -> CommPlan:
-        key = self.key_for(fn, args, extra_key)
+        """``key`` overrides the default (qualname + fn identity + abstract
+        args) cache key entirely — for callers whose ``fn`` is a fresh
+        closure each time (e.g. exchange strategies rebuilding their step)
+        but whose plan identity is structural.  With ``lazy_fn``, ``fn`` is
+        a zero-arg *factory* for the real function, only invoked on a miss
+        (a hit skips plan assembly entirely, as MPI_Start skips setup)."""
+        if key is None:
+            assert not lazy_fn, "lazy_fn requires an explicit structural key"
+            key = self.key_for(fn, args, extra_key)
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
                 self.stats.cache_hits += 1
                 return plan
-        plan = CommPlan(fn, example_args=args, **plan_kwargs)
+        plan = CommPlan(fn() if lazy_fn else fn, example_args=args,
+                        **plan_kwargs)
         with self._lock:
             self._plans[key] = plan
             self.stats.inits += 1

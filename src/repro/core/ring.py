@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat
 from repro.core.partitioned import Partitioner, ring_perm
 
 _NEG_INF = -1e30
@@ -95,7 +96,7 @@ def ring_attention(
     block attention).  ``block_fn`` may override the per-block accumulation
     (e.g. the Pallas flash kernel).
     """
-    ksize = lax.axis_size(axis_name)
+    ksize = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     b, sq, h, d = q.shape
     skv = k.shape[1]
@@ -173,7 +174,7 @@ def state_passing(
     method='ring' — k-1 neighbor hops (the paper's 1-D stencil transport).
     method='tree' — ceil(log2(k)) doubling hops + 1 shift (beyond-paper).
     """
-    k = lax.axis_size(axis_name)
+    k = compat.axis_size(axis_name)
     if k == 1:
         return jnp.zeros_like(C)
     idx = lax.axis_index(axis_name)
@@ -194,7 +195,7 @@ def state_passing(
 
 def _tree_state_passing(C: jax.Array, D: jax.Array, axis_name: str) -> jax.Array:
     """Inclusive doubling scan over affine operators, then shift by one."""
-    k = lax.axis_size(axis_name)
+    k = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     Dc, Cc = D, C
     hop = 1

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import pallas_tpu_compiler_params
+
 
 def _copy_convert_kernel(x_ref, o_ref, *, scale: float):
     x = x_ref[...]
@@ -61,7 +63,7 @@ def pack_2d(
         in_specs=[pl.BlockSpec((bl, bn), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((bl, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(padded.shape, out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

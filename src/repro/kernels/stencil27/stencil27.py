@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import pallas_tpu_compiler_params
+
 
 def _stencil_kernel(x_ref, w_ref, o_ref, *, tz: int, ty: int, tx: int, halo: int):
     i = pl.program_id(0)
@@ -72,7 +74,7 @@ def stencil27(
         ],
         out_specs=pl.BlockSpec((tz, ty, tx), lambda i, j, k: (i, j, k)),
         out_shape=jax.ShapeDtypeStruct((zi, yi, xi), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -36,6 +36,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ModelConfig, OptimizerConfig, ShapeConfig
+from repro.core.compat import set_mesh
 from repro.core.hlo_analysis import analyze_hlo
 from repro.launch.mesh import data_axes_of, make_production_mesh
 from repro.models import batch_spec, build_model
@@ -217,7 +218,9 @@ def _stats_dict(text: str, trip_default: int) -> dict:
 
 def _analyze(compiled, cfg: ModelConfig, trip_default: int) -> dict:
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    from repro.core.compat import cost_analysis_dict
+
+    ca = cost_analysis_dict(compiled)
     text = compiled.as_text()
     stats = analyze_hlo(text, default_group=1, default_trip=trip_default)
     return {
@@ -265,7 +268,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     t0 = time.time()
     step, args, donate = build_cell(cfg, shape, mesh, overrides)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(step, donate_argnums=donate).lower(*args)
         compiled = lowered.compile()
     result["compile_s"] = round(time.time() - t0, 1)
@@ -285,7 +288,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         for units in (1, 2):
             cfg_u, full_units = reduced_depth(cfg, units)
             step_u, args_u, donate_u = build_cell(cfg_u, shape, mesh, overrides)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 comp_u = jax.jit(step_u, donate_argnums=donate_u).lower(
                     *args_u).compile()
             result[f"depth{units}"] = _analyze(comp_u, cfg_u, units)

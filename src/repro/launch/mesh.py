@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.core.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
@@ -23,10 +25,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax (launch/dryrun.py does this)"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def data_axes_of(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.configs.base import ModelConfig
 from repro.core.ring import ring_attention
 from repro.kernels.flash_attention import attention as flash_attention_op
@@ -248,9 +249,8 @@ def prefill_attention(
                 qb, kb, vb, ctx.model_axis, causal=causal, n_parts=ctx.n_parts)
 
         spec = P(ctx.data_axes, ctx.model_axis, None, None)
-        return jax.shard_map(
-            ring, mesh=ctx.mesh, in_specs=(spec, spec, spec), out_specs=spec,
-            check_vma=False,
+        return compat.shard_map(
+            ring, mesh=ctx.mesh, in_specs=(spec, spec, spec), out_specs=spec
         )(q, k, v)
     return _local_attention(q, k, v, causal=causal, ctx=ctx)
 
@@ -278,9 +278,8 @@ def self_attention(
             )
 
         spec = P(ctx.data_axes, ctx.model_axis, None, None)
-        out = jax.shard_map(
-            ring, mesh=ctx.mesh, in_specs=(spec, spec, spec), out_specs=spec,
-            check_vma=False,
+        out = compat.shard_map(
+            ring, mesh=ctx.mesh, in_specs=(spec, spec, spec), out_specs=spec
         )(q, k, v)
     else:
         out = _local_attention(q, k, v, causal=causal, ctx=ctx)
@@ -410,11 +409,11 @@ def apply_mlp_ring(cfg: ModelConfig, p: Params, x: jax.Array,
     # rows must be seq-major for the gather/scatter blocks to be seq shards
     specs_x = P(ctx.data_axes, ctx.model_axis, None)
     wg = p.get("w_gate", p["w_up"])
-    out = jax.shard_map(
+    out = compat.shard_map(
         inner, mesh=ctx.mesh,
         in_specs=(specs_x, P(None, ctx.model_axis), P(None, ctx.model_axis),
                   P(ctx.model_axis, None)),
-        out_specs=specs_x, check_vma=False,
+        out_specs=specs_x
     )(x, wg, p["w_up"], p["w_down"])
     return out
 

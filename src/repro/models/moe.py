@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.configs.base import ModelConfig
 from repro.core.partitioned import partitioned_all_to_all
 from repro.models import layers as L
@@ -253,12 +254,11 @@ def apply_moe_ffn(
             # would compute its work |EP| times over (caught by the roofline
             # useful-flops ratio; see EXPERIMENTS.md §Perf iteration 0).
             x_spec = P(ctx.data_axes, ctx.model_axis, None)
-            y, aux = jax.shard_map(
+            y, aux = compat.shard_map(
                 inner,
                 mesh=ctx.mesh,
                 in_specs=(x_spec, specs_p),
-                out_specs=(x_spec, P(ctx.data_axes, ctx.model_axis)),
-                check_vma=False,
+                out_specs=(x_spec, P(ctx.data_axes, ctx.model_axis))
             )(x_bsd, p)
             return y, jnp.mean(aux)
         y, aux = _moe_dense(cfg, p, x_bsd.reshape(-1, d))

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.configs.base import ModelConfig
 from repro.core.ring import state_passing
 from repro.models import layers as L
@@ -206,9 +207,8 @@ def time_mix(cfg: ModelConfig, lp: Params, x: jax.Array,
             return y
 
         spec = P(ctx.data_axes, ctx.model_axis, None, None)
-        y = jax.shard_map(seq_par, mesh=ctx.mesh,
-                          in_specs=(spec,) * 4, out_specs=spec,
-                          check_vma=False)(rf, kf, vf, lw)
+        y = compat.shard_map(seq_par, mesh=ctx.mesh,
+                          in_specs=(spec,) * 4, out_specs=spec)(rf, kf, vf, lw)
         S_fin = None
     else:
         y, S_fin = wkv_scan(rf, kf, vf, lw, u, S0, chunk=chunk)

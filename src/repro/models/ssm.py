@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.configs.base import ModelConfig
 from repro.core.halo import seq_left_halo
 from repro.core.ring import state_passing
@@ -171,8 +172,8 @@ def mamba_block(
                                  seq_axis=1, n_parts=ctx.n_parts)
             return causal_conv(cfg, lp, xl, left=left[:, : cfg.conv_kernel - 1])
 
-        xBC = jax.shard_map(conv_shard, mesh=ctx.mesh, in_specs=spec3,
-                            out_specs=spec3, check_vma=False)(xBC)
+        xBC = compat.shard_map(conv_shard, mesh=ctx.mesh, in_specs=spec3,
+                            out_specs=spec3)(xBC)
     else:
         xBC = causal_conv(cfg, lp, xBC, left=conv_state)
     new_conv_state = None
@@ -206,10 +207,10 @@ def mamba_block(
             y, _ = ssd_scan(xl, bl, cl, dl, ll, h_in, chunk=chunk)
             return y
 
-        y = jax.shard_map(
+        y = compat.shard_map(
             ssd_shard, mesh=ctx.mesh,
             in_specs=(spec4, spec3f, spec3f, spec3f, spec3f),
-            out_specs=spec4, check_vma=False,
+            out_specs=spec4
         )(xh, Bm, Cm, dt, la)
         h_fin = None
     else:

@@ -6,6 +6,11 @@ measurement several times and average.  On this CPU container the *measured*
 numbers capture real pack/update compute and the python/dispatch overhead gap
 between standard and persistent; the network projection for cluster scales
 comes from ``repro.core.model_comm`` (benchmarks/fig*.py).
+
+Strategies are resolved through the registry in
+:mod:`repro.stencil.strategies`; ``comb_measure`` accepts either names or
+fully-typed :class:`~repro.stencil.strategies.StrategyConfig` values, so a
+newly registered strategy is benchmarkable without touching this module.
 """
 
 from __future__ import annotations
@@ -18,7 +23,11 @@ import jax
 import numpy as np
 
 from repro.stencil.domain import Domain
-from repro.stencil.exchange import ExchangeDriver
+from repro.stencil.strategies import (
+    ExchangeStrategy,
+    StrategyConfig,
+    make_driver,
+)
 
 
 @dataclasses.dataclass
@@ -29,22 +38,32 @@ class CycleResult:
     n_cycles: int
     repeats: int
     checksum: float
+    n_parts: int = 1
+
+    def record(self) -> dict:
+        """Flat, json-serializable form (the BENCH_*.json row body)."""
+        return dataclasses.asdict(self)
 
 
 def run_cycles(
-    driver: ExchangeDriver,
+    driver: ExchangeStrategy,
     x: jax.Array,
     *,
     n_cycles: int = 50,
     warmup: int = 3,
     repeats: int = 3,
 ) -> CycleResult:
-    """Time ``n_cycles`` exchange(+update) iterations, paper-style."""
-    init_us = 0.0
-    if driver.strategy != "standard":
-        t0 = time.perf_counter()
-        driver.init(x)
-        init_us = (time.perf_counter() - t0) * 1e6
+    """Time ``n_cycles`` exchange(+update) iterations, paper-style.
+
+    ``init_us`` is the measured one-time setup (trace+lower+compile) and is
+    only charged to strategies declaring ``amortizes_init`` (no-op inits
+    would otherwise record timer noise).
+    """
+    t0 = time.perf_counter()
+    driver.init(x)
+    init_us = (time.perf_counter() - t0) * 1e6
+    if not driver.amortizes_init:
+        init_us = 0.0
 
     for _ in range(warmup):
         x = driver.step(x)
@@ -66,33 +85,56 @@ def run_cycles(
         n_cycles=n_cycles,
         repeats=repeats,
         checksum=checksum,
+        n_parts=driver.n_parts,
     )
+
+
+def _as_config(
+    strategy: str | StrategyConfig, default_n_parts: int
+) -> StrategyConfig:
+    if isinstance(strategy, StrategyConfig):
+        return strategy
+    n_parts = default_n_parts if strategy == "partitioned" else 1
+    return StrategyConfig(name=strategy, n_parts=n_parts)
 
 
 def comb_measure(
     domain: Domain,
     *,
-    strategies: tuple[str, ...] = ("standard", "persistent", "partitioned"),
+    strategies: tuple[str | StrategyConfig, ...] = (
+        "standard", "persistent", "partitioned",
+    ),
     n_parts: int = 4,
     update_fn: Callable[[jax.Array], jax.Array] | None = None,
     n_cycles: int = 50,
     repeats: int = 3,
     seed: int = 0,
 ) -> dict[str, CycleResult]:
-    """Measure all strategies on one domain; checksums must agree."""
+    """Measure all strategies on one domain; checksums must agree.
+
+    ``n_parts`` is the default partition count applied to strategies named
+    ``"partitioned"``; pass explicit :class:`StrategyConfig` values to pin
+    per-strategy knobs (partition count, plan-cache policy).  Results are
+    keyed by strategy name; when the same name is swept more than once
+    (e.g. partitioned at several partition counts) later entries get a
+    ``name#pN`` key so no measurement is silently dropped.
+    """
     results: dict[str, CycleResult] = {}
     for strategy in strategies:
+        config = _as_config(strategy, n_parts)
+        label = config.name
+        if label in results:
+            label = f"{config.name}#p{config.n_parts}"
+        assert label not in results, f"duplicate strategy sweep: {label}"
         x = domain.random(seed)
-        driver = ExchangeDriver(
+        driver = make_driver(
+            config,
             domain.mesh,
-            lambda s=strategy: domain.halo_spec(
-                s, n_parts if s == "partitioned" else 1
-            ),
+            domain.halo_spec,
             ndim=len(domain.global_interior),
-            strategy=strategy,
             update_fn=update_fn,
         )
-        results[strategy] = run_cycles(
+        results[label] = run_cycles(
             driver, x, n_cycles=n_cycles, repeats=repeats
         )
         driver.free()
@@ -103,3 +145,11 @@ def comb_measure(
             f"strategy {s} diverged: {sums}"
         )
     return results
+
+
+def speedup_vs_baseline(
+    results: dict[str, CycleResult], baseline: str = "standard"
+) -> dict[str, float]:
+    """Per-strategy speedup multiplier vs the baseline (1.0 = parity)."""
+    base = results[baseline].us_per_cycle
+    return {s: base / r.us_per_cycle for s, r in results.items()}

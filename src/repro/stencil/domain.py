@@ -71,6 +71,22 @@ class Domain:
             out.append(s * self.mesh.shape[name] if name else s)
         return tuple(out)
 
+    def face_bytes(self) -> dict[str, int]:
+        """Per decomposed mesh axis: bytes of one face message (the paper's
+        *message size* axis — a full-extent ghost slab of width ``halo``)."""
+        itemsize = np.dtype(self.dtype).itemsize
+        out = {}
+        for axis, name in self.decomposed:
+            slab = 1
+            for a, s in enumerate(self.local_ghosted):
+                slab *= self.halo if a == axis else s
+            out[name] = slab * itemsize
+        return out
+
+    def max_face_bytes(self) -> int:
+        """Largest single face message — the sweep's message-size coordinate."""
+        return max(self.face_bytes().values(), default=0)
+
     def pspec(self) -> P:
         return P(*self.mesh_axes)
 

@@ -1,23 +1,15 @@
-"""The three exchange strategies as runnable step drivers (Comb's comm layer).
+"""Back-compat facade over the exchange-strategy registry.
 
-:class:`ExchangeDriver` owns one iteration of the paper's Algorithm 1/3/6 on a
-device mesh:
+The three strategies (standard / persistent / partitioned) used to be
+string-dispatched branches inside one ``ExchangeDriver`` class; they now live
+as registered drivers in :mod:`repro.stencil.strategies`.  This module keeps
+the historical entry point: ``ExchangeDriver(mesh, spec_builder, ndim,
+strategy=...)`` constructs the registered driver for ``strategy`` via the
+factory and exposes the same lifecycle (``init`` / ``step`` / ``wait`` /
+``free`` / ``compiled_text``).
 
-* ``standard``    — Alg. 1: the exchange *plan* (HaloSpec, neighbor permutation
-  tables, slab geometry) is re-assembled in python and the step dispatched
-  through the normal jit python path **every call**, like posting fresh
-  Isend/Irecv envelopes each iteration.  The compiled executable is reused
-  (as MPI reuses its connection state) — only the per-iteration setup differs.
-* ``persistent``  — Alg. 2/3/4: ``init()`` AOT-compiles the step once into a
-  :class:`~repro.core.plan.CommPlan` (permutation tables baked in);
-  ``step()`` is bare executable dispatch; ``free()`` releases it.
-* ``partitioned`` — Alg. 5/6/7: same persistent lifecycle, but every face is
-  split into ``n_parts`` partitions, each packed -> sent -> unpacked
-  independently (early work).
-
-The measurable difference between standard and persistent on any backend is
-the per-iteration plan-assembly + dispatch overhead — exactly the overhead
-class the paper's persistent MPI amortizes (benchmarks/measured_dispatch.py).
+New code should call :func:`repro.stencil.strategies.make_driver` directly
+with a :class:`~repro.stencil.strategies.StrategyConfig`.
 """
 
 from __future__ import annotations
@@ -27,95 +19,38 @@ from typing import Callable
 import jax
 from jax.sharding import Mesh
 
-from repro.core.halo import HaloSpec, exchange, ghost_pspec
-from repro.core.plan import CommPlan, PlanCache
+from repro.core.halo import HaloSpec
+from repro.core.plan import PlanCache
+from repro.stencil.strategies import (
+    ExchangeStrategy,
+    StrategyConfig,
+    make_driver,
+)
 
 
-class ExchangeDriver:
-    """One halo-exchange (+ optional local update) iteration, per strategy."""
+def ExchangeDriver(
+    mesh: Mesh,
+    spec_builder: Callable[[], HaloSpec],
+    ndim: int,
+    *,
+    strategy: str | None = None,
+    update_fn: Callable[[jax.Array], jax.Array] | None = None,
+    plan_cache: PlanCache | None = None,
+) -> ExchangeStrategy:
+    """One halo-exchange (+ optional local update) iteration, per strategy.
 
-    def __init__(
-        self,
-        mesh: Mesh,
-        spec_builder: Callable[[], HaloSpec],
-        ndim: int,
-        *,
-        strategy: str | None = None,
-        update_fn: Callable[[jax.Array], jax.Array] | None = None,
-        plan_cache: PlanCache | None = None,
-    ):
-        self.mesh = mesh
-        self.ndim = ndim
-        self._spec_builder = spec_builder
-        self.strategy = strategy or spec_builder().strategy
-        self.update_fn = update_fn
-        self._plan: CommPlan | None = None
-        self._cache = plan_cache
-        self._jitted = None  # standard-path jit handle (compiled state reused)
-
-    # -- plan assembly (this work is per-call for standard, once for others) --
-    def _build_step(self) -> Callable[[jax.Array], jax.Array]:
-        spec = self._spec_builder()  # neighbor tables, slabs, partitions
-        pspec = ghost_pspec(spec, self.ndim)
-        update = self.update_fn
-
-        def step(x: jax.Array) -> jax.Array:
-            x = exchange(x, spec)
-            if update is not None:
-                x = update(x)
-            return x
-
-        return jax.shard_map(
-            step, mesh=self.mesh, in_specs=pspec, out_specs=pspec, check_vma=False
-        )
-
-    # -- lifecycle ------------------------------------------------------------
-    def init(self, example: jax.Array) -> None:
-        """Persistent/partitioned: pay trace+lower+compile once (MPI *_init)."""
-        if self.strategy == "standard":
-            return  # nothing to amortize: baseline sets up per iteration
-        step = self._build_step()  # plan assembled exactly once
-        self._plan = CommPlan(
-            step,
-            example_args=(jax.ShapeDtypeStruct(example.shape, example.dtype,
-                                               sharding=example.sharding),),
-            donate_argnums=(0,),
-            name=f"halo_{self.strategy}",
-        )
-        # dispatch handle: the per-iteration fast path (jax's optimized
-        # dispatch), with no per-iteration plan assembly in front of it.
-        self._jitted = jax.jit(step, donate_argnums=(0,))
-
-    def step(self, x: jax.Array) -> jax.Array:
-        if self.strategy == "standard":
-            # Alg. 1: re-derive the plan in python every iteration (neighbor
-            # tables, slab geometry, partition layout) — the envelope-posting
-            # work persistent MPI amortizes — then dispatch via the jit
-            # python path.  The compiled executable itself is reused.
-            spec = self._spec_builder()
-            for name in spec.mesh_axes:  # envelope assembly per neighbor pair
-                k = self.mesh.shape[name]
-                _ = [(i, (i - 1) % k) for i in range(k)]
-                _ = [(i, (i + 1) % k) for i in range(k)]
-            if self._jitted is None:
-                self._jitted = jax.jit(self._build_step(), donate_argnums=(0,))
-            return self._jitted(x)
-        if self._plan is None:
-            self.init(x)
-        return self._jitted(x)  # MPI_Startall; async, zero plan assembly
-
-    @staticmethod
-    def wait(x: jax.Array) -> jax.Array:
-        return jax.block_until_ready(x)  # MPI_Waitall
-
-    def free(self) -> None:
-        if self._plan is not None:
-            self._plan.free()
-            self._plan = None
-
-    # -- introspection ----------------------------------------------------------
-    def compiled_text(self, example: jax.Array) -> str:
-        if self._plan is None:
-            self.init(example)
-        assert self._plan is not None
-        return self._plan.as_text()
+    Factory function (historically a class): resolves ``strategy`` — by
+    explicit name, else from the spec builder's ``strategy`` field — through
+    the registry.  ``n_parts`` is likewise lifted from the built spec so
+    legacy callers that baked partition counts into ``Domain.halo_spec``
+    keep their meaning.
+    """
+    spec = spec_builder()
+    config = StrategyConfig(
+        name=strategy or spec.strategy,
+        n_parts=max(1, spec.n_parts),
+        plan_cache=plan_cache if plan_cache is not None else "private",
+    )
+    return make_driver(
+        config, mesh, spec_builder, ndim, update_fn=update_fn
+    )

@@ -1,0 +1,357 @@
+"""Pluggable exchange-strategy registry (Comb's comm-method table).
+
+The paper benchmarks three MPI communication methods over one stencil
+workload; Comb selects them by name on the command line.  This module is the
+equivalent seam for the JAX port: every strategy is a registered
+:class:`ExchangeStrategy` subclass selected through :func:`make_driver`, and
+all strategy-specific knobs travel in a typed :class:`StrategyConfig` instead
+of positional arguments threaded through the benchmark drivers.
+
+Built-in strategies (the paper's three):
+
+* ``standard``     — Alg. 1: per-iteration plan assembly + jit python
+  dispatch (fresh Isend/Irecv envelopes each iteration).
+* ``persistent``   — Alg. 2/3/4: AOT-compiled :class:`~repro.core.plan.
+  CommPlan`, bare executable dispatch per iteration (``MPI_Start``).
+* ``partitioned``  — Alg. 5/6/7: persistent lifecycle + every face split
+  into ``n_parts`` partitions packed/sent/unpacked independently
+  (``n_parts`` is the thread-count analogue of the paper's §VI sweep).
+
+Adding a strategy::
+
+    @register_strategy
+    class MyStrategy(ExchangeStrategy):
+        name = "mine"
+        def init(self, example): ...
+        def step(self, x): ...
+
+and it is immediately sweepable by ``repro.stencil.sweep`` and selectable in
+``comb_measure(strategies=("standard", "mine"))``.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable, ClassVar
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import compat
+from repro.core.halo import HaloSpec, exchange, ghost_pspec
+from repro.core.plan import PLANS, CommPlan, PlanCache
+
+
+# ---------------------------------------------------------------------------
+# typed configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyConfig:
+    """Strategy-specific knobs, carried as one typed value.
+
+    ``n_parts``      — partition count per face (partitioned only; the
+                       thread-count analogue in the paper's §VI study).
+    ``plan_cache``   — where persistent plans live: ``"private"`` (one fresh
+                       plan per driver, freed with it), ``"shared"`` (the
+                       process-wide :data:`~repro.core.plan.PLANS` table of
+                       initialized requests), or an explicit
+                       :class:`~repro.core.plan.PlanCache` instance.
+    ``donate``       — donate the input buffer to the step executable
+                       (in-place ghost update, the MPI buffer-reuse analogue).
+    """
+
+    name: str = "standard"
+    n_parts: int = 1
+    plan_cache: str | PlanCache = "private"
+    donate: bool = True
+
+    def __post_init__(self):
+        assert self.n_parts >= 1, self.n_parts
+        if isinstance(self.plan_cache, str):
+            assert self.plan_cache in ("private", "shared"), self.plan_cache
+
+    def resolve_cache(self) -> PlanCache | None:
+        """``None`` means un-cached private plans (freed by the driver)."""
+        if isinstance(self.plan_cache, PlanCache):
+            return self.plan_cache
+        if self.plan_cache == "shared":
+            return PLANS
+        return None
+
+    def with_(self, **kw) -> "StrategyConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# strategy base class
+# ---------------------------------------------------------------------------
+
+
+class ExchangeStrategy(abc.ABC):
+    """One halo-exchange (+ optional local update) iteration driver.
+
+    Lifecycle mirrors the MPI request lifecycle the paper measures::
+
+        drv.init(example)   # *_init   (no-op for the standard baseline)
+        x = drv.step(x)     # Start / Isend+Irecv
+        x = drv.wait(x)     # Waitall
+        drv.free()          # Request_free
+    """
+
+    #: registry key; subclasses must override.
+    name: ClassVar[str] = ""
+    #: whether ``config.n_parts`` reaches the exchange (partitioned
+    #: transport); non-partitioning strategies always exchange whole faces.
+    uses_partitions: ClassVar[bool] = False
+    #: whether ``init`` pays amortizable setup worth timing; benchmark
+    #: harnesses charge ``init_us`` only to strategies that set this.
+    amortizes_init: ClassVar[bool] = False
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        spec_builder: Callable[[], HaloSpec],
+        ndim: int,
+        *,
+        config: StrategyConfig | None = None,
+        update_fn: Callable[[jax.Array], jax.Array] | None = None,
+    ):
+        self.mesh = mesh
+        self.ndim = ndim
+        self.config = (config or StrategyConfig(name=self.name)).with_(
+            name=self.name
+        )
+        self._spec_builder = spec_builder
+        self.update_fn = update_fn
+
+    # -- identity ----------------------------------------------------------
+    @property
+    def strategy(self) -> str:
+        return self.name
+
+    @property
+    def n_parts(self) -> int:
+        return self.config.n_parts
+
+    def build_spec(self) -> HaloSpec:
+        """The exchange plan inputs, stamped with this strategy's identity.
+
+        Partition count comes from the *config*, not the builder — the
+        builder only describes geometry (which axes, halo width, topology).
+        Strategies opt into partitioned transport via ``uses_partitions``.
+        """
+        spec = self._spec_builder()
+        n_parts = self.n_parts if self.uses_partitions else 1
+        return spec.with_(strategy=self.name, n_parts=n_parts)
+
+    # -- plan assembly ------------------------------------------------------
+    def _build_step(self) -> Callable[[jax.Array], jax.Array]:
+        spec = self.build_spec()  # neighbor tables, slabs, partitions
+        pspec = ghost_pspec(spec, self.ndim)
+        update = self.update_fn
+
+        def step(x: jax.Array) -> jax.Array:
+            x = exchange(x, spec)
+            if update is not None:
+                x = update(x)
+            return x
+
+        return compat.shard_map(
+            step, mesh=self.mesh, in_specs=pspec, out_specs=pspec
+        )
+
+    # -- lifecycle ----------------------------------------------------------
+    @abc.abstractmethod
+    def init(self, example: jax.Array) -> None:
+        """Pay any amortizable setup (trace+lower+compile for persistent)."""
+
+    @abc.abstractmethod
+    def step(self, x: jax.Array) -> jax.Array:
+        """One exchange(+update) iteration; async (returns futures)."""
+
+    @staticmethod
+    def wait(x: jax.Array) -> jax.Array:
+        return jax.block_until_ready(x)  # MPI_Waitall
+
+    def free(self) -> None:
+        """Release strategy-held executables (no-op by default)."""
+
+    # -- introspection ------------------------------------------------------
+    def compiled_text(self, example: jax.Array) -> str:
+        """Post-optimization HLO of the step (for overlap/HLO analysis)."""
+        raise NotImplementedError(f"{self.name} has no compiled plan")
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type[ExchangeStrategy]] = {}
+
+
+def register_strategy(cls: type[ExchangeStrategy]) -> type[ExchangeStrategy]:
+    """Class decorator: add ``cls`` to the strategy table under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty `name`")
+    if cls.name in _REGISTRY:
+        raise ValueError(
+            f"strategy {cls.name!r} already registered "
+            f"({_REGISTRY[cls.name].__name__})"
+        )
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_strategies() -> tuple[str, ...]:
+    """Registered strategy names, registration order (paper order first)."""
+    return tuple(_REGISTRY)
+
+
+def get_strategy(name: str) -> type[ExchangeStrategy]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown exchange strategy {name!r}; "
+            f"registered: {', '.join(_REGISTRY) or '(none)'}"
+        ) from None
+
+
+def make_driver(
+    strategy: str | StrategyConfig,
+    mesh: Mesh,
+    spec_builder: Callable[[], HaloSpec],
+    ndim: int,
+    *,
+    update_fn: Callable[[jax.Array], jax.Array] | None = None,
+    **config_kw,
+) -> ExchangeStrategy:
+    """The factory: name-or-config in, initialized-on-demand driver out."""
+    if isinstance(strategy, StrategyConfig):
+        config = strategy
+    else:
+        config = StrategyConfig(name=strategy, **config_kw)
+    cls = get_strategy(config.name)
+    return cls(mesh, spec_builder, ndim, config=config, update_fn=update_fn)
+
+
+# ---------------------------------------------------------------------------
+# the paper's three strategies
+# ---------------------------------------------------------------------------
+
+
+@register_strategy
+class StandardStrategy(ExchangeStrategy):
+    """Alg. 1: plan re-assembled in python + jit-dispatch every iteration.
+
+    The compiled executable is reused (as MPI reuses connection state) —
+    only the per-iteration envelope/plan assembly differs from persistent.
+    """
+
+    name = "standard"
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._jitted = None  # compiled state reused across iterations
+
+    def init(self, example: jax.Array) -> None:
+        return None  # nothing to amortize: baseline sets up per iteration
+
+    def step(self, x: jax.Array) -> jax.Array:
+        # Re-derive the plan in python every iteration (neighbor tables,
+        # slab geometry, partition layout) — the envelope-posting work
+        # persistent MPI amortizes — then dispatch via the jit python path.
+        spec = self.build_spec()
+        for name in spec.mesh_axes:  # envelope assembly per neighbor pair
+            k = self.mesh.shape[name]
+            _ = [(i, (i - 1) % k) for i in range(k)]
+            _ = [(i, (i + 1) % k) for i in range(k)]
+        if self._jitted is None:
+            donate = (0,) if self.config.donate else ()
+            self._jitted = jax.jit(self._build_step(), donate_argnums=donate)
+        return self._jitted(x)
+
+    def free(self) -> None:
+        self._jitted = None
+
+
+@register_strategy
+class PersistentStrategy(ExchangeStrategy):
+    """Alg. 2/3/4: AOT-compile once at ``init``, bare dispatch per ``step``."""
+
+    name = "persistent"
+    amortizes_init = True
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._plan: CommPlan | None = None
+
+    def _plan_key(self, example: jax.Array):
+        """Structural plan identity: the step fn is a fresh closure per
+        driver, so the cache key must come from what the closure *computes*
+        — spec geometry, mesh, update fn, and the abstract input.  The mesh
+        and update fn go in by *object* (the cache holds them alive, so
+        their identity can't be recycled), letting equal meshes share."""
+        return (
+            "halo_plan", self.build_spec(), self.ndim, self.config.donate,
+            self.mesh, self.update_fn,
+            example.shape, str(example.dtype), str(example.sharding),
+        )
+
+    def init(self, example: jax.Array) -> None:
+        if self._plan is not None:
+            return
+        donate = (0,) if self.config.donate else ()
+        example_args = (
+            jax.ShapeDtypeStruct(
+                example.shape, example.dtype, sharding=example.sharding
+            ),
+        )
+        cache = self.config.resolve_cache()
+        if cache is None:
+            self._plan = CommPlan(
+                self._build_step(),  # plan assembled exactly once
+                example_args=example_args, donate_argnums=donate,
+                name=f"halo_{self.name}",
+            )
+        else:
+            # on a hit the step is NOT rebuilt or recompiled — the whole
+            # point of the shared table of initialized requests.
+            self._plan = cache.get_or_init(
+                self._build_step, example_args,
+                key=self._plan_key(example),
+                donate_argnums=donate, name=f"halo_{self.name}",
+                lazy_fn=True,
+            )
+
+    def step(self, x: jax.Array) -> jax.Array:
+        if self._plan is None:
+            self.init(x)
+        # MPI_Startall: bare dispatch of the AOT-compiled executable —
+        # async, zero plan assembly, no jit python path in front.
+        return self._plan.start(x)
+
+    def free(self) -> None:
+        # shared-cache plans stay initialized for other drivers (freed via
+        # the cache's own free_all), private plans die with the driver.
+        if self._plan is not None and self.config.resolve_cache() is None:
+            self._plan.free()
+        self._plan = None
+
+    def compiled_text(self, example: jax.Array) -> str:
+        if self._plan is None:
+            self.init(example)
+        assert self._plan is not None
+        return self._plan.as_text()
+
+
+@register_strategy
+class PartitionedStrategy(PersistentStrategy):
+    """Alg. 5/6/7: persistent lifecycle, faces split into ``n_parts``
+    partitions each packed -> sent -> unpacked independently (early work)."""
+
+    name = "partitioned"
+    uses_partitions = True

@@ -1,0 +1,255 @@
+"""The paper's §VI parameter study as a reproducible sweep subsystem.
+
+The headline analysis of the paper sweeps *process count*, *thread count*
+and *message size* over Comb's exchange strategies.  The JAX-port analogues
+swept here:
+
+* **virtual device count**  (process count)  — each device count runs in a
+  fresh subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+  (the count is fixed at first jax init, so it cannot vary in-process);
+* **partition count**       (thread count)   — ``StrategyConfig.n_parts``,
+  the number of per-face partitions a partitioned exchange posts;
+* **message size**          — the domain's face-slab bytes, varied through
+  ``global_interior``.
+
+Every cell measures all requested registered strategies via
+:func:`repro.stencil.comb.comb_measure` and emits one flat record per
+(strategy, cell) with the cell's speedup-vs-baseline — the exact quantity
+behind the paper's "persistent up to 37% / partitioned up to 68%" numbers.
+Records serialize to ``BENCH_<name>.json`` (a json list of row dicts), the
+repo's benchmark interchange format.
+
+In-process use (device count fixed to the current backend)::
+
+    records = sweep_cells(SweepConfig(sizes=((64, 32),), part_counts=(1, 4)))
+
+Full sweep (spawns one subprocess per device count)::
+
+    PYTHONPATH=src python -m repro.stencil.sweep --out BENCH_stencil_sweep.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from typing import Sequence
+
+SCHEMA_VERSION = 1
+
+#: keys every sweep record carries (validated by tests/stencil/test_sweep.py)
+RECORD_KEYS = (
+    "bench", "schema_version", "strategy", "n_devices", "n_parts",
+    "global_interior", "mesh_shape", "message_bytes", "us_per_cycle",
+    "init_us", "n_cycles", "repeats", "checksum", "speedup_vs_baseline",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """The §VI grid: device count x partition count x message/domain size."""
+
+    device_counts: tuple[int, ...] = (2, 4, 8)
+    part_counts: tuple[int, ...] = (1, 2, 4)
+    #: global interior shapes; the first axis is decomposed over all devices.
+    sizes: tuple[tuple[int, ...], ...] = ((32, 16), (64, 32))
+    strategies: tuple[str, ...] = ("standard", "persistent", "partitioned")
+    baseline: str = "standard"
+    halo: int = 1
+    n_cycles: int = 20
+    repeats: int = 2
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.baseline in self.strategies, (
+            f"baseline {self.baseline!r} must be swept"
+        )
+        for n in self.device_counts:
+            for size in self.sizes:
+                assert size[0] % n == 0 and size[0] // n >= 3 * self.halo, (
+                    f"size {size} not decomposable over {n} devices"
+                )
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, text: str) -> "SweepConfig":
+        raw = json.loads(text)
+        raw["device_counts"] = tuple(raw["device_counts"])
+        raw["part_counts"] = tuple(raw["part_counts"])
+        raw["sizes"] = tuple(tuple(s) for s in raw["sizes"])
+        raw["strategies"] = tuple(raw["strategies"])
+        return cls(**raw)
+
+
+def _size_records(
+    config: SweepConfig, size: tuple[int, ...], n_devices: int
+) -> list[dict]:
+    """Measure one (device count, size) slab: non-partitioning strategies
+    once, partitioning strategies once per partition count, all against the
+    same baseline run (per-cell speedup)."""
+    import jax
+
+    from repro.core.compat import make_mesh
+    from repro.stencil.comb import comb_measure, speedup_vs_baseline
+    from repro.stencil.domain import Domain
+    from repro.stencil.strategies import StrategyConfig, get_strategy
+
+    mesh = make_mesh((n_devices,), ("px",),
+                     devices=jax.devices()[:n_devices])
+    domain = Domain(
+        mesh,
+        global_interior=tuple(size),
+        mesh_axes=("px",) + (None,) * (len(size) - 1),
+        halo=config.halo,
+    )
+    strat_configs = []
+    for s in config.strategies:
+        if get_strategy(s).uses_partitions:
+            strat_configs.extend(
+                StrategyConfig(name=s, n_parts=p) for p in config.part_counts
+            )
+        else:
+            # the partition-count axis does not apply: measure once per size
+            strat_configs.append(StrategyConfig(name=s))
+    results = comb_measure(
+        domain,
+        strategies=tuple(strat_configs),
+        n_cycles=config.n_cycles,
+        repeats=config.repeats,
+        seed=config.seed,
+    )
+    speedups = speedup_vs_baseline(results, config.baseline)
+    records = []
+    for label, res in results.items():
+        rec = {
+            "bench": "stencil_sweep",
+            "schema_version": SCHEMA_VERSION,
+            "n_devices": n_devices,
+            "global_interior": list(size),
+            "mesh_shape": [n_devices],
+            "message_bytes": domain.max_face_bytes(),
+            "speedup_vs_baseline": speedups[label],
+            **res.record(),
+        }
+        records.append(rec)
+    return records
+
+
+def sweep_cells(
+    config: SweepConfig, *, n_devices: int | None = None
+) -> list[dict]:
+    """Run the partition-count x size grid on the current process's devices.
+
+    This is the in-process entry (one device count — the one jax booted
+    with); :func:`run_sweep` fans the device-count axis out to subprocesses.
+    """
+    import jax
+
+    n = n_devices or min(max(config.device_counts), len(jax.devices()))
+    assert n <= len(jax.devices()), (n, len(jax.devices()))
+    for size in config.sizes:
+        assert size[0] % n == 0 and size[0] // n >= 3 * config.halo, (
+            f"size {size} not decomposable over the {n} devices this "
+            f"process ended up with; pass n_devices= explicitly"
+        )
+    records = []
+    for size in config.sizes:
+        records.extend(_size_records(config, size, n))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# subprocess fan-out over the device-count axis
+# ---------------------------------------------------------------------------
+
+
+def _worker_env(n_devices: int) -> dict[str, str]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def run_sweep(config: SweepConfig, *, timeout: float = 1200.0) -> list[dict]:
+    """The full §VI grid: one subprocess per device count (the flag must
+    precede jax init), each emitting its cells' records as json on stdout."""
+    records: list[dict] = []
+    for n in config.device_counts:
+        sub = dataclasses.replace(config, device_counts=(n,))
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.stencil.sweep",
+             "--worker", sub.to_json()],
+            env=_worker_env(n), capture_output=True, text=True, timeout=timeout,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"sweep worker ({n} devices) failed:\n{out.stderr[-4000:]}"
+            )
+        records.extend(json.loads(out.stdout))
+    return records
+
+
+def is_bench_path(path: str) -> bool:
+    """The one definition of the ``BENCH_*.json`` naming rule."""
+    base = os.path.basename(path)
+    return base.startswith("BENCH_") and base.endswith(".json")
+
+
+def write_bench_json(records: Sequence[dict], path: str) -> None:
+    """Serialize records to the repo's ``BENCH_*.json`` interchange format."""
+    assert is_bench_path(path), path
+    with open(path, "w") as f:
+        json.dump(list(records), f, indent=1)
+        f.write("\n")
+
+
+def summarize(records: Sequence[dict]) -> list[str]:
+    """csv rows (name,us,derived) matching benchmarks/run.py's emit format."""
+    rows = []
+    for r in records:
+        name = (f"sweep/d{r['n_devices']}/p{r['n_parts']}"
+                f"/m{r['message_bytes']}/{r['strategy']}")
+        pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
+        rows.append(f"{name},{r['us_per_cycle']:.1f},"
+                    f"speedup={pct:.1f}%;init_us={r['init_us']:.0f}")
+    return rows
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--worker", metavar="CONFIG_JSON",
+                    help="(internal) run one device-count's cells in-process")
+    ap.add_argument("--out", default="BENCH_stencil_sweep.json",
+                    help="output path (must match BENCH_*.json)")
+    ap.add_argument("--fast", action="store_true",
+                    help="2-cell smoke grid instead of the full default grid")
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        config = SweepConfig.from_json(args.worker)
+        print(json.dumps(sweep_cells(config, n_devices=config.device_counts[0])))
+        return
+
+    if not is_bench_path(args.out):
+        ap.error(f"--out must be named BENCH_*.json, got {args.out!r}")
+
+    config = SweepConfig()
+    if args.fast:
+        config = dataclasses.replace(
+            config, device_counts=(2, 4), part_counts=(1, 2), sizes=((32, 16),)
+        )
+    records = run_sweep(config)
+    write_bench_json(records, args.out)
+    for row in summarize(records):
+        print(row)
+    print(f"# wrote {len(records)} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

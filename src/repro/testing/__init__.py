@@ -1,0 +1,10 @@
+"""Test-support utilities (importable with only the runtime deps installed)."""
+
+from repro.testing.hypothesis_compat import (
+    HAVE_HYPOTHESIS,
+    given,
+    settings,
+    st,
+)
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

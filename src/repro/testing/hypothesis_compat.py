@@ -1,0 +1,121 @@
+"""``hypothesis`` with a deterministic fallback when it is not installed.
+
+The property tests use a small slice of the hypothesis API::
+
+    from repro.testing import given, settings, st
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(0, 8), mode=st.sampled_from(["a", "b"]))
+    def test_prop(n, mode): ...
+
+With hypothesis installed (``requirements-dev.txt``, CI) these re-export the
+real thing — full shrinking, example database, the works.  On the pinned
+runtime environment (no ``hypothesis``) the fallback below runs each property
+over ``max_examples`` *deterministically seeded* pseudo-random draws instead
+of failing collection.  No shrinking, no database — but the properties still
+execute and still catch regressions, and the seed is derived from the test
+name so failures reproduce.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, Sequence
+
+try:  # pragma: no cover - exercised implicitly by which env runs the suite
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A value source: ``draw(rng)`` yields one example."""
+
+        def __init__(self, draw: Callable[[random.Random], Any], desc: str):
+            self._draw = draw
+            self.desc = desc
+
+        def draw(self, rng: random.Random) -> Any:
+            return self._draw(rng)
+
+        def __repr__(self) -> str:
+            return f"st.{self.desc}"
+
+    class _Strategies:
+        """The subset of ``hypothesis.strategies`` the test-suite uses."""
+
+        @staticmethod
+        def sampled_from(elements: Sequence[Any]) -> _Strategy:
+            elements = list(elements)
+            assert elements, "sampled_from of empty sequence"
+            return _Strategy(
+                lambda rng: elements[rng.randrange(len(elements))],
+                f"sampled_from({elements!r})",
+            )
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: rng.randint(min_value, max_value),
+                f"integers({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value),
+                f"floats({min_value}, {max_value})",
+            )
+
+    st = _Strategies()
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def given(**strategies: _Strategy) -> Callable:
+        """Deterministic stand-in: run the test over seeded random draws."""
+
+        def deco(fn: Callable) -> Callable:
+            @functools.wraps(fn)
+            def wrapper() -> None:
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode()
+                )
+                rng = random.Random(seed)
+                for i in range(n):
+                    kwargs = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {i + 1}/{n} "
+                            f"(fallback rng, seed={seed}): {kwargs!r}"
+                        ) from e
+
+            # hide the property kwargs from pytest's fixture resolution
+            # (real hypothesis does the same on its wrapper).
+            wrapper.__signature__ = inspect.Signature()  # type: ignore[attr-defined]
+            del wrapper.__wrapped__  # keep pytest off the inner signature
+            wrapper._max_examples = _DEFAULT_MAX_EXAMPLES  # type: ignore
+            return wrapper
+
+        return deco
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw) -> Callable:
+        """Only ``max_examples`` is honored; pacing knobs are meaningless
+        without the real engine and are accepted-and-ignored."""
+
+        def deco(fn: Callable) -> Callable:
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+
+        return deco

@@ -1,7 +1,7 @@
 """Analytic comm model: paper-claim directions + hypothesis invariants."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.configs.comb_paper import QUARTZ
 from repro.core.model_comm import (

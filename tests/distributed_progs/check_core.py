@@ -15,6 +15,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
+from repro.core.compat import make_mesh
 from repro.core import (
     HaloSpec,
     Partitioner,
@@ -34,10 +36,8 @@ from repro.core import (
 )
 
 assert len(jax.devices()) == 8, jax.devices()
-mesh1d = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
-mesh2d = jax.make_mesh(
-    (4, 2), ("r", "c"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-)
+mesh1d = make_mesh((8,), ("x",))
+mesh2d = make_mesh((4, 2), ("r", "c"))
 rng = np.random.default_rng(0)
 PASS = []
 
@@ -48,8 +48,7 @@ def ok(name):
 
 
 def smap(f, mesh, in_specs, out_specs):
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=False)
+    return compat.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 # --- partitioned_ppermute == fused ppermute ---------------------------------

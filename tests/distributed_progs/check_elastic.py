@@ -20,6 +20,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
+from repro.core.compat import make_mesh, set_mesh
 from repro.configs.base import OptimizerConfig
 from repro.data.pipeline import SyntheticLM
 from repro.models import build_model
@@ -43,11 +44,9 @@ model = build_model(cfg)
 opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=100)
 dataset = SyntheticLM(cfg, global_batch=8, seq_len=32, seed=0)
 
-mesh_big = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_small = jax.make_mesh((2, 2), ("data", "model"),
-                           devices=jax.devices()[:4],
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_big = make_mesh((4, 2), ("data", "model"))
+mesh_small = make_mesh((2, 2), ("data", "model"),
+                       devices=jax.devices()[:4])
 
 
 def specs_for(mesh):
@@ -74,7 +73,7 @@ def run_steps(state, mesh, start, n):
     ctx = ParallelContext(mesh=mesh)
     step_fn = jax.jit(make_train_step(model, opt_cfg, ctx))
     losses = []
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(start, start + n):
             batch = {k: jnp.asarray(v) for k, v in dataset.batch_at(i).items()}
             state, metrics = step_fn(state, batch)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.compat import make_mesh, set_mesh
+
 from repro.configs import get_config
 from repro.models import build_model, concrete_batch
 from repro.parallel.context import ParallelContext
@@ -29,8 +31,7 @@ def ok(name):
     PASS.append(name)
 
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 # --- EP MoE == dense MoE ------------------------------------------------------
 cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
@@ -43,7 +44,7 @@ ctx_dense = ParallelContext(mesh=mesh, moe_mode="dense")
 ctx_ep = ParallelContext(mesh=mesh, moe_mode="ep", n_parts=1)
 ctx_ep_part = ParallelContext(mesh=mesh, moe_mode="ep", n_parts=3)
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     want = jax.jit(lambda p, b: model.loss(p, b, ctx=ctx_dense))(params, batch)
     got = jax.jit(lambda p, b: model.loss(p, b, ctx=ctx_ep))(params, batch)
     got_part = jax.jit(lambda p, b: model.loss(p, b, ctx=ctx_ep_part))(params, batch)
@@ -57,7 +58,7 @@ cfg_g = get_config("grok-1-314b").reduced().with_updates(
 model_g = build_model(cfg_g)
 params_g = model_g.init(jax.random.key(1))
 batch_g = concrete_batch(cfg_g, 4, 16, seed=1)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     want = jax.jit(lambda p, b: model_g.loss(p, b, ctx=ctx_dense))(params_g, batch_g)
     got = jax.jit(lambda p, b: model_g.loss(p, b, ctx=ctx_ep))(params_g, batch_g)
 np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2)
@@ -71,7 +72,7 @@ batch_d = concrete_batch(cfg_d, 4, 64, seed=2)
 ctx_local = ParallelContext(mesh=mesh)
 ctx_ring = ParallelContext(mesh=mesh, seq_parallel=True, n_parts=1)
 ctx_ring_part = ParallelContext(mesh=mesh, seq_parallel=True, n_parts=2)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     want = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_local))(params_d, batch_d)
     got = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_ring))(params_d, batch_d)
     got2 = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_ring_part))(params_d, batch_d)
@@ -87,7 +88,7 @@ batch_z = concrete_batch(cfg_z, 4, 64, seed=3)
 for method in ("ring", "tree"):
     ctx_sp = ParallelContext(mesh=mesh, seq_parallel=True, n_parts=2,
                              state_method=method)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         want = jax.jit(lambda p, b: model_z.loss(p, b, ctx=ctx_local))(params_z, batch_z)
         got = jax.jit(lambda p, b: model_z.loss(p, b, ctx=ctx_sp))(params_z, batch_z)
     np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2,
@@ -100,7 +101,7 @@ model_r = build_model(cfg_r)
 params_r = model_r.init(jax.random.key(4))
 batch_r = concrete_batch(cfg_r, 4, 64, seed=4)
 ctx_sp = ParallelContext(mesh=mesh, seq_parallel=True)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     want = jax.jit(lambda p, b: model_r.loss(p, b, ctx=ctx_local))(params_r, batch_r)
     got = jax.jit(lambda p, b: model_r.loss(p, b, ctx=ctx_sp))(params_r, batch_r)
 np.testing.assert_allclose(float(got), float(want), rtol=2e-2, atol=2e-2)
@@ -108,7 +109,7 @@ ok("seq-parallel rwkv6 (WKV state passing) == local scan")
 
 # --- ring-TP (Megatron-SP on partitioned ring matmuls) == gspmd TP -----------
 ctx_ringtp = ParallelContext(mesh=mesh, tp_mode="ring")
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     want = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_local))(params_d, batch_d)
     got = jax.jit(lambda p, b: model_d.loss(p, b, ctx=ctx_ringtp))(params_d, batch_d)
     g = jax.jit(jax.grad(lambda p, b: model_d.loss(p, b, ctx=ctx_ringtp)))(
@@ -119,7 +120,7 @@ for leaf in jax.tree.leaves(g):
 ok("ring-TP MLP (ring AG-matmul + matmul-RS) == gspmd TP, grads finite")
 
 # --- grad flow under distributed contexts --------------------------------------
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     g = jax.jit(jax.grad(lambda p, b: model_d.loss(p, b, ctx=ctx_ring)))(
         params_d, batch_d)
 for leaf in jax.tree.leaves(g):

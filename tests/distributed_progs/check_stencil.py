@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import make_mesh
 from repro.core.halo import exchange  # noqa: F401 (import check)
 from repro.kernels.stencil27 import jacobi_weights, stencil27_ref
 from repro.stencil import Domain, comb_measure, periodic_oracle_step
@@ -26,8 +27,7 @@ def ok(name):
 
 
 # --- 3-D domain on a (4, 2) mesh over (z, y); x undecomposed ------------------
-mesh = jax.make_mesh((4, 2), ("pz", "py"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("pz", "py"))
 dom = Domain(mesh, global_interior=(16, 8, 6), mesh_axes=("pz", "py", None))
 
 interior = np.random.default_rng(0).normal(size=(16, 8, 6)).astype(np.float32)
@@ -90,7 +90,7 @@ print("    measured us/cycle:",
 ok("comb_measure checksums agree across strategies")
 
 # --- 2-D domain, bigger partition counts --------------------------------------
-mesh2 = jax.make_mesh((8,), ("px",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh2 = make_mesh((8,), ("px",))
 dom2 = Domain(mesh2, global_interior=(64, 32), mesh_axes=("px", None))
 int2 = np.random.default_rng(1).normal(size=(64, 32)).astype(np.float32)
 x2 = dom2.from_global_interior(int2)

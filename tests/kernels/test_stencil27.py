@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.kernels.stencil27 import jacobi_weights, stencil27, stencil27_ref
 

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.models.rwkv import wkv_scan
 from repro.models.ssm import ssd_scan

@@ -1,0 +1,276 @@
+"""Strategy registry + numerical equivalence of the three exchange strategies.
+
+Runs in-process on the 8 virtual devices forced by the repo conftest: every
+registered strategy must produce the same halo exchange (standard is the
+reference) on 1-D/2-D/3-D domains, including non-dividing partition counts
+(the Partitioner's equal-size padding edge cases).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.compat import make_mesh
+from repro.core.plan import PlanCache
+from repro.stencil import Domain, ExchangeDriver, periodic_oracle_step
+from repro.stencil.strategies import (
+    ExchangeStrategy,
+    StrategyConfig,
+    available_strategies,
+    get_strategy,
+    make_driver,
+    register_strategy,
+)
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs >=4 virtual devices (conftest)"
+)
+
+
+def _mesh_1d(n=4):
+    return make_mesh((n,), ("px",), devices=jax.devices()[:n])
+
+
+def _domain(mesh, interior, axes, halo=1):
+    return Domain(mesh, global_interior=interior, mesh_axes=axes, halo=halo)
+
+
+def _exchange_once(domain, strategy, n_parts, seed=0):
+    drv = make_driver(
+        StrategyConfig(name=strategy, n_parts=n_parts),
+        domain.mesh, domain.halo_spec, ndim=len(domain.global_interior),
+    )
+    y = drv.wait(drv.step(domain.random(seed)))
+    out = np.asarray(y)
+    drv.free()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry behavior
+# ---------------------------------------------------------------------------
+
+
+def test_paper_strategies_registered():
+    names = available_strategies()
+    assert names[:3] == ("standard", "persistent", "partitioned")
+    for name in names:
+        assert issubclass(get_strategy(name), ExchangeStrategy)
+
+
+def test_unknown_strategy_message_lists_registered():
+    with pytest.raises(KeyError, match="standard.*persistent.*partitioned"):
+        get_strategy("telepathic")
+
+
+def test_duplicate_registration_rejected():
+    class Dupe(ExchangeStrategy):
+        name = "standard"
+
+        def init(self, example):
+            pass
+
+        def step(self, x):
+            return x
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy(Dupe)
+
+
+def test_registering_new_strategy_makes_it_constructible():
+    class Echo(ExchangeStrategy):
+        name = "echo-test-only"
+
+        def init(self, example):
+            pass
+
+        def step(self, x):
+            return x
+
+    register_strategy(Echo)
+    try:
+        mesh = _mesh_1d()
+        dom = _domain(mesh, (16,), ("px",))
+        drv = make_driver("echo-test-only", mesh, dom.halo_spec, ndim=1)
+        assert isinstance(drv, Echo)
+        assert drv.strategy == "echo-test-only"
+    finally:
+        from repro.stencil import strategies as S
+
+        del S._REGISTRY["echo-test-only"]
+
+
+def test_custom_strategy_runs_real_exchange():
+    """The docstring's extension recipe must actually exchange: a custom
+    name flows through build_spec -> HaloSpec -> exchange without tripping
+    the paper-trio whitelist, and can opt into partitioned transport."""
+    from repro.stencil.strategies import PersistentStrategy
+
+    class Custom(PersistentStrategy):
+        name = "custom-partitioned-test"
+        uses_partitions = True
+
+    register_strategy(Custom)
+    try:
+        mesh = _mesh_1d()
+        dom = _domain(mesh, (16, 12), ("px", None))
+        ref = _exchange_once(dom, "standard", 1)
+        got = _exchange_once(dom, "custom-partitioned-test", 5)
+        np.testing.assert_array_equal(got, ref)
+    finally:
+        from repro.stencil import strategies as S
+
+        del S._REGISTRY["custom-partitioned-test"]
+
+
+def test_comb_measure_same_name_twice_keeps_both():
+    from repro.stencil import comb_measure
+
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    results = comb_measure(
+        dom,
+        strategies=("standard",
+                    StrategyConfig(name="partitioned", n_parts=2),
+                    StrategyConfig(name="partitioned", n_parts=4)),
+        n_cycles=2, repeats=1,
+    )
+    assert set(results) == {"standard", "partitioned", "partitioned#p4"}
+    assert results["partitioned"].n_parts == 2
+    assert results["partitioned#p4"].n_parts == 4
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        StrategyConfig(name="partitioned", n_parts=0)
+    with pytest.raises(AssertionError):
+        StrategyConfig(name="persistent", plan_cache="global")
+
+
+# ---------------------------------------------------------------------------
+# numerical equivalence across strategies (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # (interior, mesh shape, mesh axis names, array<-mesh mapping, n_parts)
+    pytest.param((16,), (4,), ("px",), ("px",), 3, id="1d-parts3"),
+    pytest.param((16, 12), (4,), ("px",), ("px", None), 5, id="2d-parts5-nondiv"),
+    pytest.param((16, 8), (4, 2), ("px", "py"), ("px", "py"), 2, id="2d-2axis"),
+    pytest.param((16, 8, 6), (4, 2), ("pz", "py"), ("pz", "py", None), 3,
+                 id="3d-parts3-nondiv"),
+    pytest.param((8, 8, 12), (2, 2), ("pz", "py"), ("pz", "py", None), 4,
+                 id="3d-parts4"),
+]
+
+
+@pytest.mark.parametrize("interior,shape,names,axes,n_parts", CASES)
+def test_strategies_numerically_equivalent(interior, shape, names, axes, n_parts):
+    mesh = make_mesh(shape, names,
+                     devices=jax.devices()[: int(np.prod(shape))])
+    dom = _domain(mesh, interior, axes)
+    ref = _exchange_once(dom, "standard", 1)
+    for strategy in available_strategies():
+        if strategy == "standard":
+            continue
+        got = _exchange_once(dom, strategy, n_parts)
+        np.testing.assert_array_equal(got, ref, err_msg=strategy)
+
+
+def test_partition_count_exceeding_face_size():
+    """n_parts larger than the tangent axis: tail partitions are pure padding."""
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 4), ("px", None))
+    ref = _exchange_once(dom, "standard", 1)
+    got = _exchange_once(dom, "partitioned", 7)  # tangent extent is only 4
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_multi_cycle_update_matches_numpy_oracle():
+    """Full Comb loop (exchange + 9-point update) vs the periodic oracle."""
+    mesh = make_mesh((2, 2), ("pz", "py"), devices=jax.devices()[:4])
+    dom = _domain(mesh, (8, 8), ("pz", "py"))
+    interior = np.random.default_rng(3).normal(size=(8, 8)).astype(np.float32)
+    w = np.full((3, 3), 1.0 / 9.0, np.float32)
+
+    want = interior.copy()
+    for _ in range(3):
+        want = periodic_oracle_step(want, w)
+
+    import jax.numpy as jnp
+
+    def update(xl):
+        new = jnp.zeros_like(xl[1:-1, 1:-1])
+        for di in range(3):
+            for dj in range(3):
+                new = new + w[di, dj] * xl[di:di + xl.shape[0] - 2,
+                                           dj:dj + xl.shape[1] - 2]
+        return jax.lax.dynamic_update_slice(xl, new, (1, 1))
+
+    for strategy, parts in (("standard", 1), ("persistent", 1),
+                            ("partitioned", 3)):
+        drv = make_driver(
+            StrategyConfig(name=strategy, n_parts=parts),
+            dom.mesh, dom.halo_spec, ndim=2, update_fn=update,
+        )
+        x = dom.from_global_interior(interior)
+        for _ in range(3):
+            x = drv.step(x)
+        got = dom.to_global_interior(drv.wait(x))
+        drv.free()
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=strategy)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle / plan-cache policy
+# ---------------------------------------------------------------------------
+
+
+def test_standard_init_is_noop_and_persistent_compiles():
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    x = dom.random(0)
+
+    std = make_driver("standard", mesh, dom.halo_spec, ndim=2)
+    assert std.init(x) is None
+
+    per = make_driver("persistent", mesh, dom.halo_spec, ndim=2)
+    per.init(x)
+    assert "ROOT" in per.compiled_text(x)  # AOT-compiled HLO exists
+    per.free()
+    std.free()
+
+
+def test_shared_plan_cache_hits_across_drivers():
+    cache = PlanCache()
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    cfg = StrategyConfig(name="persistent", plan_cache=cache)
+    for _ in range(2):
+        drv = make_driver(cfg, mesh, dom.halo_spec, ndim=2)
+        drv.wait(drv.step(dom.random(0)))
+        drv.free()
+    assert cache.stats.inits == 1  # second driver reused the first's plan
+    assert cache.stats.cache_hits >= 1
+    assert len(cache) == 1
+    cache.free_all()
+
+
+def test_private_cache_frees_with_driver():
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    drv = make_driver("persistent", mesh, dom.halo_spec, ndim=2)
+    drv.init(dom.random(0))
+    assert drv._plan is not None
+    drv.free()
+    assert drv._plan is None
+
+
+def test_legacy_facade_resolves_registry_drivers():
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    drv = ExchangeDriver(
+        mesh, lambda: dom.halo_spec("partitioned", 3), ndim=2
+    )
+    assert drv.strategy == "partitioned" and drv.n_parts == 3
+    assert isinstance(drv, get_strategy("partitioned"))

@@ -1,0 +1,148 @@
+"""The §VI sweep subsystem: record schema, speedup bookkeeping, BENCH json.
+
+The in-process tests run the grid on this pytest process's virtual devices;
+one ``slow``-marked test exercises the real subprocess fan-out over the
+device-count axis (the paper's process-count sweep).
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.stencil.sweep import (
+    RECORD_KEYS,
+    SweepConfig,
+    run_sweep,
+    summarize,
+    sweep_cells,
+    write_bench_json,
+)
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs >=4 virtual devices (conftest)"
+)
+
+SMALL = SweepConfig(
+    device_counts=(4,), part_counts=(1, 3), sizes=((16, 8),),
+    n_cycles=3, repeats=1,
+)
+
+
+@pytest.fixture(scope="module")
+def records():
+    return sweep_cells(SMALL, n_devices=4)
+
+
+def test_record_schema(records):
+    # partitioned strategies get one record per partition count; the
+    # partition-count axis does not apply to the others (one record each)
+    assert len(records) == 2 + len(SMALL.part_counts)
+    for rec in records:
+        for key in RECORD_KEYS:
+            assert key in rec, f"record missing {key}: {sorted(rec)}"
+        assert rec["bench"] == "stencil_sweep"
+        assert rec["strategy"] in SMALL.strategies
+        assert rec["n_devices"] == 4
+        assert rec["us_per_cycle"] > 0
+        assert rec["message_bytes"] > 0
+        json.dumps(rec)  # every record must be json-serializable as-is
+
+
+def test_init_only_charged_to_non_standard(records):
+    for rec in records:
+        if rec["strategy"] == "standard":
+            assert rec["init_us"] == 0.0
+        else:
+            assert rec["init_us"] > 0.0  # trace+lower+compile was timed
+
+
+def test_speedup_vs_baseline_per_cell(records):
+    for rec in records:
+        if rec["strategy"] == "standard":
+            assert rec["speedup_vs_baseline"] == pytest.approx(1.0)
+        else:
+            assert rec["speedup_vs_baseline"] > 0.0
+
+
+def test_no_duplicate_coordinates(records):
+    """Non-partitioned strategies must not be re-measured per partition cell
+    — every (strategy, n_parts, size, devices) coordinate appears once."""
+    coords = [
+        (r["strategy"], r["n_parts"], tuple(r["global_interior"]),
+         r["n_devices"])
+        for r in records
+    ]
+    assert len(coords) == len(set(coords)), coords
+
+
+def test_partition_axis_swept(records):
+    parts = {r["n_parts"] for r in records if r["strategy"] == "partitioned"}
+    assert parts == set(SMALL.part_counts)
+    # non-partitioned strategies never report a partition count
+    assert {r["n_parts"] for r in records if r["strategy"] != "partitioned"} == {1}
+
+
+def test_checksums_agree_within_each_cell(records):
+    by_cell = {}
+    for rec in records:
+        key = (rec["n_devices"], tuple(rec["global_interior"]))
+        by_cell.setdefault(key, []).append(rec["checksum"])
+    for key, sums in by_cell.items():
+        assert np.allclose(sums, sums[0], rtol=1e-3, atol=1e-3), (key, sums)
+
+
+def test_message_size_tracks_domain(records):
+    # (16, 8) interior over 4 devices, halo 1, f32: face = 1 * 8 * 4 bytes
+    assert all(r["message_bytes"] == 8 * 4 for r in records)
+
+
+def test_write_bench_json_roundtrip(tmp_path, records):
+    path = tmp_path / "BENCH_stencil_sweep.json"
+    write_bench_json(records, str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded == records
+    with pytest.raises(AssertionError):
+        write_bench_json(records, str(tmp_path / "sweep.json"))  # bad name
+
+
+def test_summarize_emits_run_py_rows(records):
+    rows = summarize(records)
+    assert len(rows) == len(records)
+    for row in rows:
+        name, us, derived = row.split(",")
+        assert name.startswith("sweep/d4/p")
+        float(us)
+        assert derived.startswith("speedup=")
+
+
+def test_config_rejects_undecomposable_grid():
+    with pytest.raises(AssertionError):
+        SweepConfig(device_counts=(3,), sizes=((16, 8),))  # 16 % 3 != 0
+    with pytest.raises(AssertionError):
+        SweepConfig(strategies=("persistent",))  # baseline not swept
+
+
+def test_config_json_roundtrip():
+    cfg = SweepConfig(device_counts=(2, 4), part_counts=(1, 2),
+                      sizes=((32, 16),))
+    assert SweepConfig.from_json(cfg.to_json()) == cfg
+
+
+@pytest.mark.slow
+def test_subprocess_sweep_over_device_counts(tmp_path):
+    """The real §VI fan-out: a 3-point grid (2 device counts x 2 partition
+    counts x 1 size beyond the baseline cell) through fresh subprocesses."""
+    cfg = SweepConfig(device_counts=(2, 4), part_counts=(1, 2),
+                      sizes=((16, 8),), n_cycles=3, repeats=1)
+    records = run_sweep(cfg)
+    assert {r["n_devices"] for r in records} == {2, 4}
+    path = tmp_path / "BENCH_stencil_sweep.json"
+    write_bench_json(records, str(path))
+    loaded = json.loads(path.read_text())
+    # per device count: standard + persistent once, partitioned per p
+    assert len(loaded) == (2 + len(cfg.part_counts)) * 2
+    for rec in loaded:
+        for key in RECORD_KEYS:
+            assert key in rec

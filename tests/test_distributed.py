@@ -1,9 +1,11 @@
 """Runs the multi-device check programs in subprocesses with 8 fake devices.
 
-The device count is fixed at first jax init, so multi-device tests cannot
-share this process (and the project convention forbids forcing a global
-device count in conftest).  Each program prints ``ALL <n> ... PASSED`` on
-success and exits nonzero on failure.
+Each program is a full application (model build + multi-strategy training or
+exchange) too heavy to share the pytest process; the subprocess also pins its
+own ``XLA_FLAGS`` so the programs stay runnable standalone.  (Light
+multi-device tests run in-process instead: the repo-level conftest forces
+8 virtual devices before jax init — see tests/stencil/.)  Each program
+prints ``ALL <n> ... PASSED`` on success and exits nonzero on failure.
 """
 
 import os
@@ -23,6 +25,7 @@ _DIR = os.path.join(os.path.dirname(__file__), "distributed_progs")
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("prog,tag", PROGS, ids=[p for p, _ in PROGS])
 def test_distributed_program(prog, tag):
     env = dict(os.environ)
