@@ -9,6 +9,10 @@ is appended (EXPERIMENTS.md §Paper mirrors it).
 
 from __future__ import annotations
 
+import json
+import math
+import os
+
 from repro.configs import comb_paper as cp
 from repro.core.model_comm import simulate, speedup
 
@@ -84,6 +88,104 @@ def fig5_ranks_per_node(emit) -> dict:
              f"speedup={speedup(b, q):.1f}%")
         out[rpn] = (speedup(b, p), speedup(b, q))
     return out
+
+
+# ---------------------------------------------------------------------------
+# §VI sweep figures: measured records (BENCH_stencil_sweep.json) vs Fig. 6-8
+# ---------------------------------------------------------------------------
+
+#: the paper's §VI quoted numbers the measured sweep is compared against
+SWEEP_CLAIMS = (
+    ("S1", "persistent", "persistent peak speedup (paper: up to 37%)", 37.0),
+    ("S2", "partitioned", "partitioned peak speedup (paper: up to 68%)", 68.0),
+    ("S3", "partitioned", "partitioned small-msg penalty (paper: -42.2%)",
+     -42.2),
+)
+
+
+def load_sweep_records(path: str) -> list[dict]:
+    """Read one ``BENCH_stencil_sweep.json`` file (list of flat records)."""
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no sweep records at {path!r}; produce them first with "
+            f"`PYTHONPATH=src python -m repro.stencil.sweep --out {path}` "
+            f"(or `--smoke` for a 1-cell grid)"
+        )
+    with open(path) as f:
+        records = json.load(f)
+    assert isinstance(records, list) and records, f"{path}: empty sweep"
+    return records
+
+
+def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
+              records: list[dict] | None = None,
+              baseline: str = "standard") -> dict:
+    """The §VI study from MEASURED records: speedup-vs-baseline curves over
+    device count (Fig. 6 analogue: process count), partition count (Fig. 7:
+    thread count), and message size (Fig. 8), plus the paper-claim
+    comparison rows.
+
+    Unlike fig2-fig5 (calibrated model projections) this section renders
+    what the sweep actually measured on this host.  Returns the structured
+    form (``rows`` one per (strategy, cell), ``curves`` per axis,
+    ``claims``) that ``tests/benchmarks/test_fig_sweep.py`` validates.
+    """
+    if records is None:
+        records = load_sweep_records(sweep_path)
+
+    # --- per-(strategy, cell) rows; every cell must carry its baseline ----
+    cells: dict[tuple, set] = {}
+    rows = []
+    for r in records:
+        cell = (r["n_devices"], tuple(r["global_interior"]))
+        cells.setdefault(cell, set()).add(r["strategy"])
+        sp = r["speedup_vs_baseline"]
+        assert math.isfinite(sp) and sp > 0, (r["strategy"], cell, sp)
+        name = (f"fig_sweep/d{r['n_devices']}/p{r['n_parts']}"
+                f"/m{r['message_bytes']}/{r['strategy']}")
+        pct = (sp - 1.0) * 100.0
+        rows.append((name, r["us_per_cycle"], pct))
+        emit(name, r["us_per_cycle"], f"speedup={pct:.1f}%")
+    for cell, strategies in cells.items():
+        assert baseline in strategies, (
+            f"cell {cell} has no {baseline!r} baseline run"
+        )
+
+    # --- curves: best speedup per strategy along each §VI axis ------------
+    def curve(axis_key) -> dict:
+        best: dict[tuple, float] = {}
+        for r in records:
+            if r["strategy"] == baseline:
+                continue
+            k = (r["strategy"], axis_key(r))
+            pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
+            best[k] = max(pct, best.get(k, -math.inf))
+        return best
+
+    curves = {
+        "devices": curve(lambda r: r["n_devices"]),
+        "parts": curve(lambda r: r["n_parts"]),
+        "msgsize": curve(lambda r: r["message_bytes"]),
+    }
+    for axis, fig in (("devices", 6), ("parts", 7), ("msgsize", 8)):
+        for (strategy, coord), pct in sorted(curves[axis].items()):
+            emit(f"fig_sweep/curve_{axis}/{strategy}/{coord}", None,
+                 f"speedup={pct:.1f}%;paper_fig={fig}")
+
+    # --- measured vs the paper's quoted §VI numbers -----------------------
+    claims = []
+    for cid, strategy, desc, paper_pct in SWEEP_CLAIMS:
+        pcts = [
+            (r["speedup_vs_baseline"] - 1.0) * 100.0
+            for r in records if r["strategy"] == strategy
+        ]
+        measured = (
+            (min(pcts) if paper_pct < 0 else max(pcts)) if pcts else None
+        )
+        claims.append((cid, desc, paper_pct, measured))
+        emit(f"fig_sweep/claims/{cid}", measured,
+             f"paper={paper_pct} :: {desc}")
+    return {"rows": rows, "curves": curves, "claims": claims}
 
 
 # paper-claim validation table (C1-C6 of DESIGN.md §1)

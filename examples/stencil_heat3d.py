@@ -16,8 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import make_mesh
 from repro.kernels.stencil27 import jacobi_weights, stencil27_ref
 from repro.stencil import Domain, comb_measure, periodic_oracle_step
+from repro.stencil.strategies import available_strategies
 
 
 def main() -> None:
@@ -25,10 +27,13 @@ def main() -> None:
     ap.add_argument("--cycles", type=int, default=10)
     ap.add_argument("--size", type=int, default=32)
     ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--strategy", choices=available_strategies(),
+                    help="measure+verify just this strategy (against the "
+                         "standard baseline); default: all registered, e.g. "
+                         "--strategy fused or --strategy overlap")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 2), ("pz", "py"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("pz", "py"))  # compat shim handles axis_types
     dom = Domain(mesh, global_interior=(args.size, args.size, args.size // 2),
                  mesh_axes=("pz", "py", None))
     w = jacobi_weights()
@@ -39,9 +44,14 @@ def main() -> None:
         interior = stencil27_ref(xp, jnp.asarray(w))
         return jax.lax.dynamic_update_slice(xl, interior, (1, 1, 0))
 
+    strategies = (
+        tuple(available_strategies()) if args.strategy is None
+        else tuple(dict.fromkeys(("standard", args.strategy)))
+    )
     print(f"domain {dom.global_interior} on mesh {dict(mesh.shape)}; "
-          f"{args.cycles} cycles per strategy")
-    results = comb_measure(dom, update_fn=update, n_parts=args.parts,
+          f"{args.cycles} cycles per strategy: {', '.join(strategies)}")
+    results = comb_measure(dom, strategies=strategies, update_fn=update,
+                           n_parts=args.parts,
                            n_cycles=args.cycles, repeats=3)
     base = results["standard"].us_per_cycle
     for s, r in results.items():
@@ -55,16 +65,20 @@ def main() -> None:
     want = interior.copy()
     for _ in range(args.cycles):
         want = periodic_oracle_step(want, np.asarray(w))
-    from repro.stencil import ExchangeDriver
+    from repro.stencil import StrategyConfig, make_driver
 
-    drv = ExchangeDriver(dom.mesh, lambda: dom.halo_spec("persistent"),
-                         ndim=3, update_fn=update)
+    verify_with = args.strategy or "persistent"
+    drv = make_driver(
+        StrategyConfig(name=verify_with, n_parts=args.parts),
+        dom.mesh, dom.halo_spec, ndim=3, update_fn=update,
+    )
     x = dom.from_global_interior(interior)
     for _ in range(args.cycles):
         x = drv.step(x)
     got = dom.to_global_interior(drv.wait(x))
+    drv.free()
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
-    print("verified against periodic numpy oracle ✓")
+    print(f"{verify_with}: verified against periodic numpy oracle ✓")
 
 
 if __name__ == "__main__":

@@ -205,6 +205,66 @@ class PlanCache:
 PLANS = PlanCache()
 
 
+def build_plan(
+    step_factory: Callable[[], Callable],
+    example_args: Sequence[Any],
+    *,
+    donate_argnums: tuple[int, ...] = (),
+    cache: "PlanCache | None" = None,
+    key: Hashable | None = None,
+    name: str | None = None,
+) -> CommPlan:
+    """Assemble one persistent plan, private or from a shared cache.
+
+    The cache-vs-private branch of every persistent-style ``init`` lives
+    here exactly once.  Without ``cache`` the factory is invoked and the
+    plan is owned by the caller; with ``cache`` the plan joins that table
+    of initialized requests under ``key`` (which must then be a structural
+    key, as for :meth:`PlanCache.get_or_init`) and the factory only runs
+    on a miss — the step is NOT rebuilt or recompiled on a hit.
+    """
+    if cache is None:
+        return CommPlan(
+            step_factory(),  # plan assembled exactly once
+            example_args=example_args, donate_argnums=donate_argnums,
+            name=name,
+        )
+    assert key is not None, "cached plans need a structural key"
+    return cache.get_or_init(
+        step_factory, example_args, key=key,
+        donate_argnums=donate_argnums, name=name, lazy_fn=True,
+    )
+
+
+def multi_axis_plan(
+    step_factory: Callable[[], Callable],
+    example_args: Sequence[Any],
+    *,
+    mesh_axes: Sequence[str],
+    donate_argnums: tuple[int, ...] = (),
+    cache: "PlanCache | None" = None,
+    key: Hashable | None = None,
+    name: str | None = None,
+) -> CommPlan:
+    """Build ONE persistent plan spanning every mesh axis of an exchange.
+
+    The sequential schedule would compile (or at least sequence) one
+    exchange pass per decomposed mesh axis; the fused multi-axis schedule
+    hands the whole D-axis step to a single :class:`CommPlan` so every
+    pack/send/unpack of every axis lives in one AOT-compiled executable —
+    the ``MPI_Send_init`` of all ``3^D - 1`` neighbor requests at once.
+    ``mesh_axes`` is recorded in the plan name for introspection and
+    validated non-empty/unique; assembly delegates to :func:`build_plan`.
+    """
+    axes = tuple(mesh_axes)
+    assert axes, "a multi-axis plan needs at least one mesh axis"
+    assert len(set(axes)) == len(axes), f"duplicate mesh axes: {axes}"
+    return build_plan(
+        step_factory, example_args, donate_argnums=donate_argnums,
+        cache=cache, key=key, name=name or f"fused[{'x'.join(axes)}]",
+    )
+
+
 def persistent(
     fn: Callable | None = None,
     *,

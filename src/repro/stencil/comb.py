@@ -117,7 +117,8 @@ def comb_measure(
     per-strategy knobs (partition count, plan-cache policy).  Results are
     keyed by strategy name; when the same name is swept more than once
     (e.g. partitioned at several partition counts) later entries get a
-    ``name#pN`` key so no measurement is silently dropped.
+    ``name#pN`` key — and a ``#2``/``#3`` ordinal when name *and* partition
+    count repeat — so no measurement is silently dropped.
     """
     results: dict[str, CycleResult] = {}
     for strategy in strategies:
@@ -125,7 +126,13 @@ def comb_measure(
         label = config.name
         if label in results:
             label = f"{config.name}#p{config.n_parts}"
-        assert label not in results, f"duplicate strategy sweep: {label}"
+        if label in results:
+            # same name AND same n_parts swept again (e.g. cache-policy
+            # A/B runs): stable ordinal suffix instead of dropping either.
+            base, n = label, 2
+            while label in results:
+                label = f"{base}#{n}"
+                n += 1
         x = domain.random(seed)
         driver = make_driver(
             config,

@@ -148,6 +148,129 @@ class Domain:
         )
 
 
+# ---------------------------------------------------------------------------
+# interior/halo region split (the communication/computation-overlap schedule)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRegion:
+    """One piece of an interior/boundary-split stencil update.
+
+    ``src`` is the (start, size) window of the local ghosted block fed to
+    the update fn; ``out`` is the (start, size) window *within the piece's
+    output* whose cells were validly updated; ``dst`` is where that window
+    lands back in the block.  ``needs_fresh_ghosts`` says whether the piece
+    must read the post-exchange buffer (boundary shell) or may read the
+    pre-exchange one (deep interior — computable while messages fly).
+    """
+
+    src: tuple[tuple[int, int], ...]
+    out: tuple[tuple[int, int], ...]
+    dst: tuple[int, ...]
+    needs_fresh_ghosts: bool
+
+    @staticmethod
+    def _window(x: jax.Array, win: tuple[tuple[int, int], ...]) -> jax.Array:
+        return jax.lax.slice(
+            x, [s for s, _ in win], [s + n for s, n in win]
+        )
+
+    def updated(self, block: jax.Array, update_fn) -> jax.Array:
+        """Run ``update_fn`` on this piece's window; return the valid cells."""
+        return self._window(update_fn(self._window(block, self.src)), self.out)
+
+
+def interior_halo_split(
+    shape: tuple[int, ...], array_axes: tuple[int, ...], halo: int
+) -> tuple[UpdateRegion, ...]:
+    """Split a local ghosted block into overlap-schedulable update pieces.
+
+    The contract on the update fn is the stencil-workload one: a local,
+    shift-invariant stencil of radius <= ``halo`` along each decomposed
+    axis, writing positions at distance >= ``halo`` from the block edge on
+    those axes and leaving the ``halo``-wide rim untouched (undecomposed
+    axes are unconstrained — pieces always span their full extent).
+
+    Under that contract, the *deep interior* piece (all decomposed-axis
+    positions >= ``2*halo`` from the edge) reads only interior cells, so it
+    is computable from the **pre-exchange** buffer concurrently with the
+    boundary exchange; the two boundary-shell pieces per decomposed axis
+    need the refreshed ghosts.  Piece outputs tile the full updatable
+    region; where shells meet at edges/corners they recompute identical
+    values, so unpack order is immaterial.
+    """
+    h = halo
+    dec = set(array_axes)
+    for a in dec:
+        assert shape[a] >= 3 * h, (shape, a, h)
+    regions: list[UpdateRegion] = []
+
+    def full(a: int) -> tuple[int, int]:
+        return (0, shape[a])
+
+    # deep interior: feed the interior sub-block (all values locally valid)
+    if all(shape[a] - 4 * h > 0 for a in dec):
+        src = tuple(
+            (h, shape[a] - 2 * h) if a in dec else full(a)
+            for a in range(len(shape))
+        )
+        out = tuple(
+            (h, shape[a] - 4 * h) if a in dec else full(a)
+            for a in range(len(shape))
+        )
+        dst = tuple(2 * h if a in dec else 0 for a in range(len(shape)))
+        regions.append(UpdateRegion(src, out, dst, needs_fresh_ghosts=False))
+
+    # boundary shells: one 3h-thick slab per side of each decomposed axis
+    for axis in array_axes:
+        s = shape[axis]
+        for lo in (True, False):
+            src = tuple(
+                ((0, 3 * h) if lo else (s - 3 * h, 3 * h)) if a == axis
+                else full(a)
+                for a in range(len(shape))
+            )
+            out = tuple(
+                (h, h) if a == axis
+                else ((h, shape[a] - 2 * h) if a in dec else full(a))
+                for a in range(len(shape))
+            )
+            dst = tuple(
+                ((h if lo else s - 2 * h) if a == axis
+                 else (h if a in dec else 0))
+                for a in range(len(shape))
+            )
+            regions.append(UpdateRegion(src, out, dst, needs_fresh_ghosts=True))
+    return tuple(regions)
+
+
+def overlapped_update(
+    stale: jax.Array,
+    fresh: jax.Array,
+    update_fn: Callable[[jax.Array], jax.Array],
+    *,
+    array_axes: tuple[int, ...],
+    halo: int,
+) -> jax.Array:
+    """Apply ``update_fn`` with the interior/boundary overlap schedule.
+
+    ``stale`` is the pre-exchange buffer, ``fresh`` the post-exchange one
+    (identical except for refreshed ghost rims).  The deep-interior piece
+    reads ``stale`` — giving it no data dependency on the exchange's
+    collectives, so XLA may compute it while messages are in flight — and
+    the boundary shells read ``fresh``.  Equals ``update_fn(fresh)`` under
+    the :func:`interior_halo_split` contract.
+    """
+    out = fresh
+    for region in interior_halo_split(stale.shape, array_axes, halo):
+        piece = region.updated(
+            fresh if region.needs_fresh_ghosts else stale, update_fn
+        )
+        out = jax.lax.dynamic_update_slice(out, piece, region.dst)
+    return out
+
+
 def periodic_oracle_step(interior: np.ndarray, weights: np.ndarray) -> np.ndarray:
     """NumPy oracle: one 27-point (or 9-point in 2-D) periodic stencil update."""
     pad = np.pad(interior, 1, mode="wrap")

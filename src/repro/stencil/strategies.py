@@ -39,8 +39,14 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import compat
-from repro.core.halo import HaloSpec, exchange, ghost_pspec
-from repro.core.plan import PLANS, CommPlan, PlanCache
+from repro.core.halo import HaloSpec, exchange, exchange_fused, ghost_pspec
+from repro.core.plan import (
+    PLANS,
+    CommPlan,
+    PlanCache,
+    build_plan,
+    multi_axis_plan,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -301,6 +307,16 @@ class PersistentStrategy(ExchangeStrategy):
             example.shape, str(example.dtype), str(example.sharding),
         )
 
+    def _make_plan(
+        self, example: jax.Array, example_args, donate: tuple[int, ...]
+    ) -> CommPlan:
+        """Overridable plan assembly; ``init`` computes the inputs once."""
+        return build_plan(
+            self._build_step, example_args, donate_argnums=donate,
+            cache=self.config.resolve_cache(), key=self._plan_key(example),
+            name=f"halo_{self.name}",
+        )
+
     def init(self, example: jax.Array) -> None:
         if self._plan is not None:
             return
@@ -310,22 +326,7 @@ class PersistentStrategy(ExchangeStrategy):
                 example.shape, example.dtype, sharding=example.sharding
             ),
         )
-        cache = self.config.resolve_cache()
-        if cache is None:
-            self._plan = CommPlan(
-                self._build_step(),  # plan assembled exactly once
-                example_args=example_args, donate_argnums=donate,
-                name=f"halo_{self.name}",
-            )
-        else:
-            # on a hit the step is NOT rebuilt or recompiled — the whole
-            # point of the shared table of initialized requests.
-            self._plan = cache.get_or_init(
-                self._build_step, example_args,
-                key=self._plan_key(example),
-                donate_argnums=donate, name=f"halo_{self.name}",
-                lazy_fn=True,
-            )
+        self._plan = self._make_plan(example, example_args, donate)
 
     def step(self, x: jax.Array) -> jax.Array:
         if self._plan is None:
@@ -355,3 +356,97 @@ class PartitionedStrategy(PersistentStrategy):
 
     name = "partitioned"
     uses_partitions = True
+
+
+# ---------------------------------------------------------------------------
+# overlap strategies (beyond the paper's trio)
+# ---------------------------------------------------------------------------
+
+
+@register_strategy
+class FusedStrategy(PersistentStrategy):
+    """Fused multi-axis exchange: all D axis passes in one combined step.
+
+    The sequential schedule exchanges axis by axis (each pass's slabs
+    include the previous pass's refreshed ghosts, the corner trick); the
+    fused schedule posts all ``3^D - 1`` face/edge/corner messages from the
+    original buffer in a single pass (:func:`repro.core.halo.
+    exchange_fused`) and compiles them into ONE multi-axis
+    :class:`~repro.core.plan.CommPlan` (:func:`repro.core.plan.
+    multi_axis_plan`).  No message depends on another, so packs, sends, and
+    unpacks of every axis may overlap — trading D dependent passes for
+    maximal concurrency, the Comb fused-packing analogue.
+    """
+
+    name = "fused"
+
+    def _build_step(self) -> Callable[[jax.Array], jax.Array]:
+        spec = self.build_spec()
+        pspec = ghost_pspec(spec, self.ndim)
+        update = self.update_fn
+
+        def step(x: jax.Array) -> jax.Array:
+            x = exchange_fused(x, spec)
+            if update is not None:
+                x = update(x)
+            return x
+
+        return compat.shard_map(
+            step, mesh=self.mesh, in_specs=pspec, out_specs=pspec
+        )
+
+    def _make_plan(
+        self, example: jax.Array, example_args, donate: tuple[int, ...]
+    ) -> CommPlan:
+        return multi_axis_plan(
+            self._build_step, example_args,
+            mesh_axes=self.build_spec().mesh_axes, donate_argnums=donate,
+            cache=self.config.resolve_cache(), key=self._plan_key(example),
+        )
+
+
+@register_strategy
+class OverlapStrategy(PersistentStrategy):
+    """Double-buffered ghosts: interior update overlapped with the exchange.
+
+    The classic communication/computation-overlap schedule: each step reads
+    buffer A and writes buffer B (donation is disabled so both stay live —
+    the double buffer; the returned buffer feeds the next step, so the pair
+    alternates).  The local update is split by :func:`repro.stencil.domain.
+    interior_halo_split`: the deep-interior piece is computed from buffer A
+    *while* the boundary exchange is in flight (it has no data dependency
+    on the collectives), and only the thin boundary shells wait for the
+    refreshed ghosts.
+
+    ``update_fn`` must satisfy the split contract (local shift-invariant
+    stencil of radius <= halo on decomposed axes, rim left untouched);
+    without an ``update_fn`` the step degenerates to a persistent exchange.
+    """
+
+    name = "overlap"
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        # double buffering is the whole point: never update in place.
+        self.config = self.config.with_(donate=False)
+
+    def _build_step(self) -> Callable[[jax.Array], jax.Array]:
+        from repro.stencil.domain import overlapped_update
+
+        spec = self.build_spec()
+        pspec = ghost_pspec(spec, self.ndim)
+        update = self.update_fn
+
+        def step(x: jax.Array) -> jax.Array:
+            fresh = exchange(x, spec)  # boundary exchange in flight...
+            if update is None:
+                return fresh
+            # ...while the deep interior computes from the stale buffer
+            return overlapped_update(
+                x, fresh, update,
+                array_axes=spec.array_axes, halo=spec.halo,
+            )
+
+        return compat.shard_map(
+            step, mesh=self.mesh, in_specs=pspec, out_specs=pspec
+        )

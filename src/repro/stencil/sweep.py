@@ -34,6 +34,7 @@ import argparse
 import dataclasses
 import json
 import os
+import re
 import subprocess
 import sys
 from typing import Sequence
@@ -56,7 +57,9 @@ class SweepConfig:
     part_counts: tuple[int, ...] = (1, 2, 4)
     #: global interior shapes; the first axis is decomposed over all devices.
     sizes: tuple[tuple[int, ...], ...] = ((32, 16), (64, 32))
-    strategies: tuple[str, ...] = ("standard", "persistent", "partitioned")
+    strategies: tuple[str, ...] = (
+        "standard", "persistent", "partitioned", "fused", "overlap",
+    )
     baseline: str = "standard"
     halo: int = 1
     n_cycles: int = 20
@@ -221,6 +224,18 @@ def summarize(records: Sequence[dict]) -> list[str]:
     return rows
 
 
+def smoke_config(n_devices: int = 4) -> SweepConfig:
+    """A 1-cell in-process grid over ALL registered strategies — the CI
+    ``sweep-smoke`` step: any strategy whose exchange regresses (crashes,
+    diverges, loses its speedup record) surfaces here in seconds."""
+    from repro.stencil.strategies import available_strategies
+
+    return SweepConfig(
+        device_counts=(n_devices,), part_counts=(1, 2), sizes=((16, 8),),
+        strategies=tuple(available_strategies()), n_cycles=3, repeats=1,
+    )
+
+
 def main(argv: Sequence[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--worker", metavar="CONFIG_JSON",
@@ -229,6 +244,9 @@ def main(argv: Sequence[str] | None = None) -> None:
                     help="output path (must match BENCH_*.json)")
     ap.add_argument("--fast", action="store_true",
                     help="2-cell smoke grid instead of the full default grid")
+    ap.add_argument("--smoke", action="store_true",
+                    help="1-cell in-process grid over all registered "
+                         "strategies (no subprocess fan-out; CI smoke)")
     args = ap.parse_args(argv)
 
     if args.worker:
@@ -238,6 +256,28 @@ def main(argv: Sequence[str] | None = None) -> None:
 
     if not is_bench_path(args.out):
         ap.error(f"--out must be named BENCH_*.json, got {args.out!r}")
+
+    if args.smoke:
+        # in-process: the device count must be pinned before jax
+        # initializes.  An already-exported pin (a common local setting)
+        # is honored — the smoke grid runs at that count — rather than
+        # silently fighting the env and tripping a device-count mismatch.
+        pin = re.search(
+            r"--xla_force_host_platform_device_count=(\d+)",
+            os.environ.get("XLA_FLAGS", ""),
+        )
+        n = int(pin.group(1)) if pin else 4
+        if pin is None:
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={n}"
+            ).strip()
+        records = sweep_cells(smoke_config(n), n_devices=n)
+        write_bench_json(records, args.out)
+        for row in summarize(records):
+            print(row)
+        print(f"# smoke: {len(records)} records -> {args.out}")
+        return
 
     config = SweepConfig()
     if args.fast:

@@ -1,0 +1,145 @@
+"""The fig_sweep figures section: BENCH_*.json round-trip and row shape.
+
+Synthesizes a small multi-cell sweep record set (no measurement — schema
+only), round-trips it through the ``BENCH_*.json`` interchange format, and
+validates what ``benchmarks.figures.fig_sweep`` emits: one row per
+(strategy, cell), finite speedups, a baseline present in every cell, curve
+points along all three §VI axes, and the Fig. 6-8 paper-claim comparisons.
+"""
+
+import json
+import math
+
+import pytest
+
+from benchmarks.figures import SWEEP_CLAIMS, fig_sweep, load_sweep_records
+from repro.stencil.sweep import RECORD_KEYS, SCHEMA_VERSION, write_bench_json
+
+STRATEGIES = ("standard", "persistent", "partitioned", "fused", "overlap")
+
+
+def _record(strategy, n_devices, size, n_parts, us, base_us):
+    return {
+        "bench": "stencil_sweep",
+        "schema_version": SCHEMA_VERSION,
+        "strategy": strategy,
+        "n_devices": n_devices,
+        "n_parts": n_parts,
+        "global_interior": list(size),
+        "mesh_shape": [n_devices],
+        "message_bytes": size[1] * 4,
+        "us_per_cycle": us,
+        "init_us": 0.0 if strategy == "standard" else 120.0,
+        "n_cycles": 3,
+        "repeats": 1,
+        "checksum": 0.25,
+        "speedup_vs_baseline": base_us / us,
+    }
+
+
+def _synth_records():
+    """Two device counts x two sizes; partitioned swept at p=1,2."""
+    records = []
+    for n_devices in (2, 4):
+        for size in ((16, 8), (32, 16)):
+            base_us = 100.0 * n_devices
+            records.append(
+                _record("standard", n_devices, size, 1, base_us, base_us)
+            )
+            for i, s in enumerate(("persistent", "fused", "overlap")):
+                records.append(
+                    _record(s, n_devices, size, 1, base_us / (2 + i), base_us)
+                )
+            for p in (1, 2):
+                records.append(
+                    _record("partitioned", n_devices, size, p,
+                            base_us / (3 + p), base_us)
+                )
+    return records
+
+
+@pytest.fixture()
+def emitted():
+    rows = []
+    out = fig_sweep(
+        lambda name, us, derived="": rows.append((name, us, derived)),
+        records=_synth_records(),
+    )
+    return rows, out
+
+
+def test_synth_records_carry_the_sweep_schema():
+    for rec in _synth_records():
+        assert set(RECORD_KEYS) <= set(rec)
+
+
+def test_bench_json_roundtrip_feeds_fig_sweep(tmp_path):
+    records = _synth_records()
+    path = tmp_path / "BENCH_fig_sweep.json"
+    write_bench_json(records, str(path))
+    assert load_sweep_records(str(path)) == records
+    rows = []
+    out = fig_sweep(lambda *a: rows.append(a), sweep_path=str(path))
+    assert len(out["rows"]) == len(records)
+
+
+def test_missing_sweep_file_is_a_clear_error(tmp_path):
+    with pytest.raises(FileNotFoundError, match="repro.stencil.sweep"):
+        load_sweep_records(str(tmp_path / "BENCH_none.json"))
+
+
+def test_one_row_per_strategy_cell(emitted):
+    _, out = emitted
+    records = _synth_records()
+    assert len(out["rows"]) == len(records)
+    names = [name for name, _, _ in out["rows"]]
+    assert len(names) == len(set(names))  # (strategy, cell) keys are unique
+    # and each row's name encodes the full cell coordinate
+    for name in names:
+        _, d, p, m, strategy = name.split("/")
+        assert strategy in STRATEGIES
+        assert d.startswith("d") and p.startswith("p") and m.startswith("m")
+
+
+def test_no_nan_speedups(emitted):
+    _, out = emitted
+    for _, _, pct in out["rows"]:
+        assert math.isfinite(pct)
+    for curve in out["curves"].values():
+        assert curve, "empty curve axis"
+        for pct in curve.values():
+            assert math.isfinite(pct)
+
+
+def test_curves_cover_all_three_sweep_axes(emitted):
+    _, out = emitted
+    assert set(out["curves"]) == {"devices", "parts", "msgsize"}
+    assert {d for _, d in out["curves"]["devices"]} == {2, 4}
+    # the partition axis reaches 2 only for the partitioning strategy
+    assert ("partitioned", 2) in out["curves"]["parts"]
+    assert ("fused", 2) not in out["curves"]["parts"]
+    # the baseline never gets a curve point (its speedup is 1 by definition)
+    for curve in out["curves"].values():
+        assert all(s != "standard" for s, _ in curve)
+
+
+def test_claims_compare_measured_to_paper(emitted):
+    _, out = emitted
+    assert len(out["claims"]) == len(SWEEP_CLAIMS)
+    for cid, desc, paper_pct, measured in out["claims"]:
+        assert measured is not None and math.isfinite(measured)
+        assert math.isfinite(paper_pct)
+
+
+def test_baseline_required_in_every_cell():
+    records = [r for r in _synth_records() if r["strategy"] != "standard"]
+    with pytest.raises(AssertionError, match="baseline"):
+        fig_sweep(lambda *a: None, records=records)
+
+
+def test_emitted_rows_are_csv_safe(emitted):
+    rows, _ = emitted
+    assert rows
+    for name, us, derived in rows:
+        assert "," not in name and "," not in derived
+        json.dumps(derived)

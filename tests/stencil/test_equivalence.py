@@ -1,0 +1,175 @@
+"""Property-based strategy-equivalence harness — the correctness oracle.
+
+Every registered exchange strategy must produce the *exact* ghosted array a
+single-device reference roll predicts: for a periodic Cartesian domain, the
+post-exchange stored layout is a pure gather of the global interior with
+wrap-around indexing (``np.take(..., mode via %)`` per decomposed axis — the
+tensor product of per-axis rolls covers faces, edges, and corners).  Ghost
+values are only ever *copied*, never combined, so the assertion is full-array
+bitwise equality — a far stronger oracle than the historical mean-checksum
+agreement check in ``comb_measure``.
+
+The property draws (ndim, domain shape, halo width, n_parts, strategy)
+through :mod:`repro.testing` (real hypothesis when installed, the
+deterministic seeded fallback otherwise); a deterministic parametrized pass
+guarantees every registered strategy is exercised on 1-D/2-D/3-D regardless
+of what the random draws hit.
+"""
+
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.compat import make_mesh
+from repro.stencil.domain import Domain
+from repro.stencil.strategies import (
+    StrategyConfig,
+    available_strategies,
+    make_driver,
+)
+from repro.testing import given, settings, st
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 virtual devices (conftest)"
+)
+
+#: mesh shapes per ndim; the first ``len(shape)`` array axes are decomposed.
+MESH_CHOICES = {
+    1: ((2,), (4,), (8,)),
+    2: ((4,), (2, 2), (4, 2)),
+    3: ((8,), (2, 2), (2, 2, 2)),
+}
+AXIS_NAMES = ("px", "py", "pz")
+
+
+def reference_exchange(domain: Domain, interior: np.ndarray) -> np.ndarray:
+    """Single-device reference roll: the exchanged stored layout, by gather.
+
+    Along each decomposed axis (chunk ``c``, halo ``h``) shard ``i`` stores
+    ``[ghost_l | interior | ghost_r]`` = global indices
+    ``(i*c - h) .. (i*c + c + h)`` wrapped periodically; the full stored
+    array is the tensor product of those per-axis index maps.
+    """
+    out = np.asarray(interior, dtype=domain.dtype)
+    h = domain.halo
+    for axis, name in domain.decomposed:
+        k = domain.mesh.shape[name]
+        g = interior.shape[axis]
+        c = g // k
+        idx = [
+            (i * c + off - h) % g for i in range(k) for off in range(c + 2 * h)
+        ]
+        out = np.take(out, idx, axis=axis)
+    return out
+
+
+def _build_domain(ndim, mesh_idx, halo, extents):
+    shape = MESH_CHOICES[ndim][mesh_idx % len(MESH_CHOICES[ndim])]
+    mesh = make_mesh(
+        shape, AXIS_NAMES[: len(shape)],
+        devices=jax.devices()[: int(np.prod(shape))],
+    )
+    interior, axes = [], []
+    for a in range(ndim):
+        if a < len(shape):  # decomposed: local interior = halo * multiplier
+            interior.append(halo * extents[a] * shape[a])
+            axes.append(AXIS_NAMES[a])
+        else:  # undecomposed: any extent >= 3 keeps the oracle interesting
+            interior.append(extents[a] + 2)
+            axes.append(None)
+    return Domain(
+        mesh, global_interior=tuple(interior), mesh_axes=tuple(axes),
+        halo=halo,
+    )
+
+
+def _assert_strategy_matches_reference(domain, strategy, n_parts, seed):
+    rng = np.random.default_rng(seed)
+    interior = rng.normal(size=domain.global_interior).astype(domain.dtype)
+    want = reference_exchange(domain, interior)
+    drv = make_driver(
+        StrategyConfig(name=strategy, n_parts=n_parts),
+        domain.mesh, domain.halo_spec, ndim=len(domain.global_interior),
+    )
+    try:
+        got = np.asarray(drv.wait(drv.step(
+            domain.from_global_interior(interior)
+        )))
+    finally:
+        drv.free()
+    np.testing.assert_array_equal(
+        got, want,
+        err_msg=f"{strategy} n_parts={n_parts} halo={domain.halo} "
+                f"interior={domain.global_interior} "
+                f"mesh={dict(domain.mesh.shape)}",
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    ndim=st.integers(1, 3),
+    mesh_idx=st.integers(0, 2),
+    halo=st.integers(1, 2),
+    e0=st.integers(1, 3),
+    e1=st.integers(1, 3),
+    e2=st.integers(1, 3),
+    n_parts=st.integers(1, 6),
+    strategy=st.sampled_from(available_strategies()),
+)
+def test_any_strategy_matches_reference_roll(
+    ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy
+):
+    domain = _build_domain(ndim, mesh_idx, halo, (e0, e1, e2))
+    # stable across processes (hash() of a str varies with PYTHONHASHSEED,
+    # which would make a CI failure irreproducible locally)
+    seed = zlib.crc32(
+        repr((ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy)).encode()
+    )
+    _assert_strategy_matches_reference(domain, strategy, n_parts, seed)
+
+
+# deterministic floor: every registered strategy, every dimensionality,
+# all 8 virtual devices — independent of what the property draws sample.
+GRID = [
+    pytest.param(1, (8,), (24,), 2, id="1d-8dev-halo2"),
+    pytest.param(2, (4, 2), (16, 8), 1, id="2d-4x2"),
+    pytest.param(3, (2, 2, 2), (8, 6, 4), 1, id="3d-2x2x2"),
+]
+
+
+@pytest.mark.parametrize("strategy", available_strategies())
+@pytest.mark.parametrize("ndim,shape,interior,halo", GRID)
+def test_every_strategy_on_8_devices(strategy, ndim, shape, interior, halo):
+    mesh = make_mesh(
+        shape, AXIS_NAMES[: len(shape)],
+        devices=jax.devices()[: int(np.prod(shape))],
+    )
+    domain = Domain(
+        mesh, global_interior=interior,
+        mesh_axes=AXIS_NAMES[: len(shape)] + (None,) * (ndim - len(shape)),
+        halo=halo,
+    )
+    _assert_strategy_matches_reference(domain, strategy, n_parts=3, seed=7)
+
+
+def test_reference_roll_is_self_consistent():
+    """The oracle itself: stored shape, interior roundtrip, ghost contents."""
+    mesh = make_mesh((4, 2), ("px", "py"), devices=jax.devices()[:8])
+    domain = Domain(mesh, global_interior=(8, 6), mesh_axes=("px", "py"))
+    interior = np.arange(48, dtype=np.float32).reshape(8, 6)
+    stored = reference_exchange(domain, interior)
+    assert stored.shape == domain.stored_global
+    # stripping the ghosts recovers the global interior exactly
+    np.testing.assert_array_equal(domain.to_global_interior(stored), interior)
+    # shard i's one-wide left ghost along axis 0 holds the wrapped previous
+    # global row; spot-check every shard row against the wrap rule
+    c0, blk = 8 // 4, 8 // 4 + 2  # chunk + ghosted block extent (halo=1)
+    for i in range(4):
+        ghost_cols = reference_exchange(
+            domain, interior
+        )[i * blk]  # shard i's left ghost row (still column-ghosted)
+        want = interior[(i * c0 - 1) % 8]
+        # compare at interior columns of the first column shard
+        np.testing.assert_array_equal(ghost_cols[1:4], want[0:3])

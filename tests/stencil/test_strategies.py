@@ -54,6 +54,8 @@ def _exchange_once(domain, strategy, n_parts, seed=0):
 def test_paper_strategies_registered():
     names = available_strategies()
     assert names[:3] == ("standard", "persistent", "partitioned")
+    # the two overlap strategies beyond the paper's trio
+    assert {"fused", "overlap"} <= set(names)
     for name in names:
         assert issubclass(get_strategy(name), ExchangeStrategy)
 
@@ -140,6 +142,24 @@ def test_comb_measure_same_name_twice_keeps_both():
     assert results["partitioned#p4"].n_parts == 4
 
 
+def test_comb_measure_same_name_same_parts_gets_ordinal_suffix():
+    """Same name AND same n_parts (e.g. cache-policy A/B runs) must not
+    assert out — later entries get a stable ``#2`` ordinal."""
+    from repro.stencil import comb_measure
+
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    cfg = StrategyConfig(name="persistent", n_parts=1)
+    results = comb_measure(
+        dom,
+        strategies=("standard", cfg, cfg.with_(plan_cache="shared"), cfg),
+        n_cycles=2, repeats=1,
+    )
+    assert set(results) == {
+        "standard", "persistent", "persistent#p1", "persistent#p1#2",
+    }
+
+
 def test_config_validation():
     with pytest.raises(AssertionError):
         StrategyConfig(name="partitioned", n_parts=0)
@@ -207,7 +227,8 @@ def test_multi_cycle_update_matches_numpy_oracle():
         return jax.lax.dynamic_update_slice(xl, new, (1, 1))
 
     for strategy, parts in (("standard", 1), ("persistent", 1),
-                            ("partitioned", 3)):
+                            ("partitioned", 3), ("fused", 1),
+                            ("overlap", 1)):
         drv = make_driver(
             StrategyConfig(name=strategy, n_parts=parts),
             dom.mesh, dom.halo_spec, ndim=2, update_fn=update,

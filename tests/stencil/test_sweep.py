@@ -30,15 +30,30 @@ SMALL = SweepConfig(
 )
 
 
+def _expected_cells(cfg: SweepConfig) -> int:
+    """Partitioning strategies get one record per partition count; the
+    partition-count axis does not apply to the others (one record each)."""
+    from repro.stencil.strategies import get_strategy
+
+    return sum(
+        len(cfg.part_counts) if get_strategy(s).uses_partitions else 1
+        for s in cfg.strategies
+    )
+
+
 @pytest.fixture(scope="module")
 def records():
     return sweep_cells(SMALL, n_devices=4)
 
 
+def test_default_grid_sweeps_all_five_strategies():
+    assert SweepConfig().strategies == (
+        "standard", "persistent", "partitioned", "fused", "overlap",
+    )
+
+
 def test_record_schema(records):
-    # partitioned strategies get one record per partition count; the
-    # partition-count axis does not apply to the others (one record each)
-    assert len(records) == 2 + len(SMALL.part_counts)
+    assert len(records) == _expected_cells(SMALL)
     for rec in records:
         for key in RECORD_KEYS:
             assert key in rec, f"record missing {key}: {sorted(rec)}"
@@ -82,6 +97,15 @@ def test_partition_axis_swept(records):
     assert parts == set(SMALL.part_counts)
     # non-partitioned strategies never report a partition count
     assert {r["n_parts"] for r in records if r["strategy"] != "partitioned"} == {1}
+
+
+def test_new_overlap_strategies_in_sweep_output(records):
+    """Acceptance: fused and overlap appear with finite speedups."""
+    for strategy in ("fused", "overlap"):
+        rows = [r for r in records if r["strategy"] == strategy]
+        assert len(rows) == 1, strategy
+        sp = rows[0]["speedup_vs_baseline"]
+        assert np.isfinite(sp) and sp > 0, (strategy, sp)
 
 
 def test_checksums_agree_within_each_cell(records):
@@ -141,8 +165,7 @@ def test_subprocess_sweep_over_device_counts(tmp_path):
     path = tmp_path / "BENCH_stencil_sweep.json"
     write_bench_json(records, str(path))
     loaded = json.loads(path.read_text())
-    # per device count: standard + persistent once, partitioned per p
-    assert len(loaded) == (2 + len(cfg.part_counts)) * 2
+    assert len(loaded) == _expected_cells(cfg) * 2  # one grid per device count
     for rec in loaded:
         for key in RECORD_KEYS:
             assert key in rec
