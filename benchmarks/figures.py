@@ -104,15 +104,21 @@ SWEEP_CLAIMS = (
 
 
 def load_sweep_records(path: str) -> list[dict]:
-    """Read one ``BENCH_stencil_sweep.json`` file (list of flat records)."""
+    """Read one ``BENCH_stencil_sweep.json`` file.
+
+    Accepts both interchange forms: the historical bare list of flat
+    records, and the config-block wrapper ``{"config": ..., "records":
+    [...]}`` the sweep CLI writes (run parameters travel with the data).
+    """
     if not os.path.exists(path):
         raise FileNotFoundError(
             f"no sweep records at {path!r}; produce them first with "
             f"`PYTHONPATH=src python -m repro.stencil.sweep --out {path}` "
             f"(or `--smoke` for a 1-cell grid)"
         )
-    with open(path) as f:
-        records = json.load(f)
+    from repro.stencil.sweep import read_bench_json
+
+    records, _config = read_bench_json(path)
     assert isinstance(records, list) and records, f"{path}: empty sweep"
     return records
 
@@ -122,16 +128,21 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
               baseline: str = "standard") -> dict:
     """The §VI study from MEASURED records: speedup-vs-baseline curves over
     device count (Fig. 6 analogue: process count), partition count (Fig. 7:
-    thread count), and message size (Fig. 8), plus the paper-claim
-    comparison rows.
+    thread count), message size (Fig. 8), and the packer axis (the
+    transport layer's packing dimension), plus raw-latency overlays at the
+    larger message sizes and the paper-claim comparison rows.
 
     Unlike fig2-fig5 (calibrated model projections) this section renders
     what the sweep actually measured on this host.  Returns the structured
-    form (``rows`` one per (strategy, cell), ``curves`` per axis,
-    ``claims``) that ``tests/benchmarks/test_fig_sweep.py`` validates.
+    form (``rows`` one per (strategy, cell), ``curves`` per axis, ``raw``
+    absolute-time overlay rows, ``claims``) that
+    ``tests/benchmarks/test_fig_sweep.py`` validates.
     """
     if records is None:
         records = load_sweep_records(sweep_path)
+
+    def packer_of(r: dict) -> str:
+        return r.get("packer", "slice")  # pre-transport-layer records
 
     # --- per-(strategy, cell) rows; every cell must carry its baseline ----
     cells: dict[tuple, set] = {}
@@ -142,7 +153,7 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         sp = r["speedup_vs_baseline"]
         assert math.isfinite(sp) and sp > 0, (r["strategy"], cell, sp)
         name = (f"fig_sweep/d{r['n_devices']}/p{r['n_parts']}"
-                f"/m{r['message_bytes']}/{r['strategy']}")
+                f"/m{r['message_bytes']}/{packer_of(r)}/{r['strategy']}")
         pct = (sp - 1.0) * 100.0
         rows.append((name, r["us_per_cycle"], pct))
         emit(name, r["us_per_cycle"], f"speedup={pct:.1f}%")
@@ -152,10 +163,10 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         )
 
     # --- curves: best speedup per strategy along each §VI axis ------------
-    def curve(axis_key) -> dict:
+    def curve(axis_key, *, keep_baseline: bool = False) -> dict:
         best: dict[tuple, float] = {}
         for r in records:
-            if r["strategy"] == baseline:
+            if r["strategy"] == baseline and not keep_baseline:
                 continue
             k = (r["strategy"], axis_key(r))
             pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
@@ -166,11 +177,41 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         "devices": curve(lambda r: r["n_devices"]),
         "parts": curve(lambda r: r["n_parts"]),
         "msgsize": curve(lambda r: r["message_bytes"]),
+        # the baseline stays in: standard@pallas vs standard@slice IS the
+        # packing effect the transport layer makes sweepable.
+        "packer": curve(packer_of, keep_baseline=True),
     }
-    for axis, fig in (("devices", 6), ("parts", 7), ("msgsize", 8)):
+    for axis, fig in (("devices", 6), ("parts", 7), ("msgsize", 8),
+                      ("packer", None)):
         for (strategy, coord), pct in sorted(curves[axis].items()):
+            fig_tag = f";paper_fig={fig}" if fig else ""
             emit(f"fig_sweep/curve_{axis}/{strategy}/{coord}", None,
-                 f"speedup={pct:.1f}%;paper_fig={fig}")
+                 f"speedup={pct:.1f}%{fig_tag}")
+
+    # --- raw-latency overlays at the larger message sizes -----------------
+    # Speedup curves hide *where the time goes*; these rows overlay the
+    # ABSOLUTE per-cycle time of the beyond-paper strategies (fused,
+    # overlap) on the paper trio, restricted to the upper half of the
+    # swept message sizes (the regime the ROADMAP's raw-latency item asks
+    # about: large messages are where packing and overlap decisions move
+    # real microseconds).
+    sizes = sorted({r["message_bytes"] for r in records})
+    top_sizes = set(sizes[len(sizes) // 2:]) if sizes else set()
+    raw = []
+    for r in records:
+        if r["message_bytes"] not in top_sizes:
+            continue
+        name = (f"fig_sweep/raw/m{r['message_bytes']}/d{r['n_devices']}"
+                f"/p{r['n_parts']}/{packer_of(r)}/{r['strategy']}")
+        raw.append((name, r["us_per_cycle"], r["strategy"]))
+        emit(name, r["us_per_cycle"],
+             f"raw_us={r['us_per_cycle']:.1f};strategy={r['strategy']}")
+    raw_strategies = {s for _, _, s in raw}
+    for s in ("fused", "overlap"):
+        if any(r["strategy"] == s for r in records):
+            assert s in raw_strategies, (
+                f"raw overlay lost {s!r} at sizes {sorted(top_sizes)}"
+            )
 
     # --- measured vs the paper's quoted §VI numbers -----------------------
     claims = []
@@ -185,7 +226,7 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         claims.append((cid, desc, paper_pct, measured))
         emit(f"fig_sweep/claims/{cid}", measured,
              f"paper={paper_pct} :: {desc}")
-    return {"rows": rows, "curves": curves, "claims": claims}
+    return {"rows": rows, "curves": curves, "raw": raw, "claims": claims}
 
 
 # paper-claim validation table (C1-C6 of DESIGN.md §1)

@@ -64,14 +64,17 @@ def _section_overlap(args) -> None:
 
 
 def _section_sweep(args) -> None:
-    print("# === §VI sweep: devices x partitions x message size ===")
-    from repro.stencil.sweep import SweepConfig, run_sweep, summarize, \
-        write_bench_json
+    print("# === §VI sweep: devices x partitions x message size x packer ===")
+    from repro.stencil.sweep import SweepConfig, config_block, run_sweep, \
+        summarize, write_bench_json
 
     config = SweepConfig(device_counts=(2, 4, 8), part_counts=(1, 2, 4),
                          sizes=((32, 16), (64, 32)))
-    records = run_sweep(config)
-    write_bench_json(records, args.sweep_out)
+    records = run_sweep(config, timeout=args.sweep_timeout)
+    write_bench_json(
+        records, args.sweep_out,
+        config=config_block(config, timeout=args.sweep_timeout),
+    )
     for row in summarize(records):
         print(row)
     print(f"# sweep: {len(records)} records -> {args.sweep_out}")
@@ -116,6 +119,9 @@ def main() -> None:
     ap.add_argument("--sweep-out", default="BENCH_stencil_sweep.json",
                     help="where the §VI sweep writes (and fig_sweep reads) "
                          "its BENCH_*.json records")
+    ap.add_argument("--sweep-timeout", type=float, default=1200.0,
+                    help="per-subprocess timeout (seconds) for the sweep "
+                         "section's device-count fan-out")
     args = ap.parse_args()
     from repro.stencil.sweep import is_bench_path
 

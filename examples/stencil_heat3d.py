@@ -31,6 +31,12 @@ def main() -> None:
                     help="measure+verify just this strategy (against the "
                          "standard baseline); default: all registered, e.g. "
                          "--strategy fused or --strategy overlap")
+    from repro.core.transport import available_packers
+
+    ap.add_argument("--packer", choices=available_packers(), default="slice",
+                    help="transport-layer pack backend every message stages "
+                         "through (pallas = the Comb-style copy kernel; "
+                         "falls back to its oracle off-TPU)")
     args = ap.parse_args()
 
     mesh = make_mesh((4, 2), ("pz", "py"))  # compat shim handles axis_types
@@ -44,16 +50,27 @@ def main() -> None:
         interior = stencil27_ref(xp, jnp.asarray(w))
         return jax.lax.dynamic_update_slice(xl, interior, (1, 1, 0))
 
-    strategies = (
+    from repro.stencil import StrategyConfig
+
+    names = (
         tuple(available_strategies()) if args.strategy is None
         else tuple(dict.fromkeys(("standard", args.strategy)))
     )
+    strategies = tuple(
+        StrategyConfig(
+            name=s, packer=args.packer,
+            n_parts=args.parts if s == "partitioned" else 1,
+        )
+        for s in names
+    )
     print(f"domain {dom.global_interior} on mesh {dict(mesh.shape)}; "
-          f"{args.cycles} cycles per strategy: {', '.join(strategies)}")
+          f"{args.cycles} cycles per strategy: {', '.join(names)} "
+          f"(packer={args.packer})")
     results = comb_measure(dom, strategies=strategies, update_fn=update,
-                           n_parts=args.parts,
                            n_cycles=args.cycles, repeats=3)
-    base = results["standard"].us_per_cycle
+    from repro.stencil.comb import result_label
+
+    base = results[result_label("standard", args.packer)].us_per_cycle
     for s, r in results.items():
         sp = (base / r.us_per_cycle - 1.0) * 100.0
         print(f"  {s:12s} {r.us_per_cycle:9.1f} us/cycle  "
@@ -65,11 +82,12 @@ def main() -> None:
     want = interior.copy()
     for _ in range(args.cycles):
         want = periodic_oracle_step(want, np.asarray(w))
-    from repro.stencil import StrategyConfig, make_driver
+    from repro.stencil import make_driver
 
     verify_with = args.strategy or "persistent"
     drv = make_driver(
-        StrategyConfig(name=verify_with, n_parts=args.parts),
+        StrategyConfig(name=verify_with, n_parts=args.parts,
+                       packer=args.packer),
         dom.mesh, dom.halo_spec, ndim=3, update_fn=update,
     )
     x = dom.from_global_interior(interior)

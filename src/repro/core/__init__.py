@@ -1,4 +1,5 @@
 # The paper's primary contribution, as composable JAX modules:
+#   transport    — unified pack/transport layer (Message/Packer/Transport)
 #   plan         — persistent communication/step plans (MPI_Send_init analogue)
 #   partitioned  — chunked early-consume collectives (MPI partitioned analogue)
 #   halo         — N-D ghost-cell exchange with standard/persistent/partitioned
@@ -6,6 +7,18 @@
 #   model_comm   — analytic LogGP-style model of the paper's measurements
 #   hlo_analysis — collective wire-byte parsing + roofline terms
 
+from repro.core.transport import (
+    Message,
+    Packer,
+    ScheduleInfo,
+    Transport,
+    available_packers,
+    available_transports,
+    get_packer,
+    get_transport,
+    register_packer,
+    register_transport,
+)
 from repro.core.plan import CommPlan, PlanCache, PLANS, persistent, dispatch_standard
 from repro.core.partitioned import (
     Partitioner,
@@ -25,6 +38,9 @@ from repro.core.model_comm import MachineModel, StencilWorkload, TimeBreakdown, 
 from repro.core.hlo_analysis import parse_collectives, roofline, RooflineTerms, Hardware, V5E
 
 __all__ = [
+    "Message", "Packer", "Transport", "ScheduleInfo",
+    "available_packers", "available_transports", "get_packer",
+    "get_transport", "register_packer", "register_transport",
     "CommPlan", "PlanCache", "PLANS", "persistent", "dispatch_standard",
     "Partitioner", "partitioned_ppermute", "partitioned_all_to_all",
     "partitioned_psum", "partitioned_psum_scatter", "ring_all_gather",

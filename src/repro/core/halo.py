@@ -3,16 +3,23 @@
 This is the JAX port of the paper's stencil boundary exchange (Comb's
 communication core), with the three strategies under study:
 
-* ``standard``   — the non-blocking baseline: slabs sliced ("packed") and sent
-  as whole messages each iteration; the driver re-derives the plan per call
+* ``standard``   — the non-blocking baseline: slabs packed and sent as whole
+  messages each iteration; the driver re-derives the plan per call
   (``core.plan.dispatch_standard``).
 * ``persistent`` — identical data movement, but the whole exchange step is an
   AOT-compiled :class:`~repro.core.plan.CommPlan` with permutation tables
   precomputed at init (``MPI_Send_init`` analogue).
 * ``partitioned``— every face slab is split into ``n_parts`` equal partitions
-  (padding per the paper's equal-size rule); each partition is packed, sent,
+  (offsets per the paper's equal-size rule); each partition is packed, sent,
   and **unpacked into the ghost region immediately on arrival** (early work /
   ``MPI_Parrived``), giving XLA per-partition overlap freedom.
+
+All data movement is described as :class:`repro.core.transport.Message`
+tables — this module only *assembles schedules* (which slab goes where) and
+delegates every pack -> send -> unpack to the transport layer, so the packer
+(inline ``slice`` staging vs the ``pallas`` copy kernel) and the transport
+backend (in-process ``ppermute`` vs a multi-host backend) are swappable knobs
+on :class:`HaloSpec` rather than code paths.
 
 Corner/edge handling uses the axis-by-axis trick: exchanging full-extent slabs
 (including already-filled ghost rims of previously exchanged axes) propagates
@@ -25,16 +32,21 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from functools import partial
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import compat
-from repro.core.partitioned import Partitioner
+from repro.core.transport import (
+    Message,
+    Partitioner,
+    ScheduleInfo,
+    exchange_messages,
+    resolve_packer,
+    resolve_transport,
+)
 
 STRATEGIES = ("standard", "persistent", "partitioned")
 
@@ -45,6 +57,9 @@ class HaloSpec:
 
     ``mesh_axes[i]`` is the named mesh axis that decomposes array axis
     ``array_axes[i]``.  ``halo`` is the ghost width (paper: 1).
+    ``packer``/``transport`` name the registered transport-layer backends
+    every message of this exchange goes through
+    (:mod:`repro.core.transport`).
     """
 
     mesh_axes: tuple[str, ...]
@@ -55,37 +70,129 @@ class HaloSpec:
     #: STRATEGIES); transport behavior is carried by ``n_parts``.
     strategy: str = "standard"
     n_parts: int = 1
+    packer: str = "slice"
+    transport: str = "ppermute"
 
     def __post_init__(self):
         assert len(self.mesh_axes) == len(self.array_axes)
         assert self.strategy, "strategy label must be non-empty"
         assert self.n_parts >= 1, self.n_parts
+        # unknown backend names fail at the spec's construction site, not
+        # buried in a shard_map trace stack (mirrors StrategyConfig)
+        from repro.core.transport import get_packer, get_transport
+
+        get_packer(self.packer)
+        get_transport(self.transport)
 
     def with_(self, **kw) -> "HaloSpec":
         return dataclasses.replace(self, **kw)
 
+    def schedule_info(self, kind: str) -> ScheduleInfo:
+        return ScheduleInfo(
+            kind=kind, mesh_axes=self.mesh_axes,
+            packer=self.packer, transport=self.transport,
+        )
+
 
 # ---------------------------------------------------------------------------
-# the exchange (runs inside shard_map)
+# schedule assembly: HaloSpec + block shape -> Message tables
 # ---------------------------------------------------------------------------
 
 
-def _neighbor_perms(axis_name: str, periodic: bool) -> tuple[list, list]:
+def _neighbor_perms(k: int, periodic: bool) -> tuple[tuple, tuple]:
     """(to_left, to_right) source-target tables — precomputed at trace time,
     i.e. once per plan: the persistent 'envelope'."""
-    k = compat.axis_size(axis_name)
-    to_left = [(i, (i - 1) % k) for i in range(k) if periodic or i > 0]
-    to_right = [(i, (i + 1) % k) for i in range(k) if periodic or i < k - 1]
+    to_left = tuple((i, (i - 1) % k) for i in range(k) if periodic or i > 0)
+    to_right = tuple((i, (i + 1) % k) for i in range(k) if periodic or i < k - 1)
     return to_left, to_right
 
 
-def _tangent_axis(x: jax.Array, array_axis: int) -> int:
+def _tangent_axis(shape: Sequence[int], array_axis: int) -> int:
     """Pick the largest non-exchange axis to partition a slab along."""
-    best, best_size = (array_axis + 1) % x.ndim, -1
-    for a in range(x.ndim):
-        if a != array_axis and x.shape[a] > best_size:
-            best, best_size = a, x.shape[a]
+    ndim = len(shape)
+    best, best_size = (array_axis + 1) % ndim, -1
+    for a in range(ndim):
+        if a != array_axis and shape[a] > best_size:
+            best, best_size = a, shape[a]
     return best
+
+
+def _mesh_sizes(spec: HaloSpec) -> dict[str, int]:
+    """Axis sizes inside ``shard_map`` (trace-time python ints)."""
+    return {name: compat.axis_size(name) for name in spec.mesh_axes}
+
+
+def axis_message_group(
+    shape: tuple[int, ...],
+    axis_name: str,
+    array_axis: int,
+    *,
+    k: int,
+    halo: int,
+    periodic: bool = True,
+    n_parts: int = 1,
+) -> tuple[Message, ...]:
+    """The two messages of one sequential axis pass.
+
+    The local block layout along ``array_axis`` is
+    ``[left ghost | interior ... interior | right ghost]`` with ghost width
+    ``halo``.  Slabs span the *full* extent of all other axes (ghosts
+    included) so sequential per-axis passes fill edges/corners.  ``k`` is
+    the mesh-axis size (``k == 1`` periodic degenerates to a hop-free
+    self-wrap; ``k == 1`` non-periodic to no messages at all).
+    """
+    size = shape[array_axis]
+    assert size >= 3 * halo, (size, halo)
+    if k == 1 and not periodic:
+        return ()
+    to_left, to_right = _neighbor_perms(k, periodic)
+    left_hops = ((axis_name, to_left),) if k > 1 else ()
+    right_hops = ((axis_name, to_right),) if k > 1 else ()
+
+    # a face is a width-``halo`` point in 1-D: no tangent axis to partition
+    # along, so partitioned degenerates to the whole-message exchange (the
+    # paper's 1-partition case).
+    part_axis = None
+    if n_parts > 1 and len(shape) > 1:
+        part_axis = _tangent_axis(shape, array_axis)
+    eff_parts = n_parts if part_axis is not None else 1
+
+    def window(src_edge: int, dst_edge: int) -> tuple[tuple, tuple, tuple]:
+        src = [0] * len(shape)
+        dst = [0] * len(shape)
+        sz = list(shape)
+        src[array_axis], dst[array_axis], sz[array_axis] = (
+            src_edge, dst_edge, halo,
+        )
+        return tuple(src), tuple(dst), tuple(sz)
+
+    # left interiors travel left and fill the *right* ghosts there (and the
+    # mirror for right interiors) — the SPMD view of "recv from my right".
+    left = Message(*window(halo, size - halo), left_hops,
+                   n_parts=eff_parts, part_axis=part_axis)
+    right = Message(*window(size - 2 * halo, 0), right_hops,
+                    n_parts=eff_parts, part_axis=part_axis)
+    return (left, right)
+
+
+def sequential_message_groups(
+    shape: tuple[int, ...],
+    spec: HaloSpec,
+    sizes: Mapping[str, int],
+) -> tuple[tuple[Message, ...], ...]:
+    """The sequential schedule: one message group per decomposed axis.
+
+    Group *i+1* packs from the buffer group *i* unpacked into, so the
+    full-extent slabs carry previously refreshed ghost rims — the D-pass
+    corner trick.
+    """
+    return tuple(
+        axis_message_group(
+            shape, axis_name, array_axis, k=sizes[axis_name],
+            halo=spec.halo, periodic=spec.periodic, n_parts=spec.n_parts,
+        )
+        for axis_name, array_axis in zip(spec.mesh_axes, spec.array_axes)
+    )
 
 
 def exchange_axis(
@@ -96,79 +203,15 @@ def exchange_axis(
     halo: int,
     periodic: bool = True,
     n_parts: int = 1,
+    packer: str = "slice",
+    transport: str = "ppermute",
 ) -> jax.Array:
-    """Exchange ghost rims along one decomposed axis.
-
-    The local block layout along ``array_axis`` is
-    ``[left ghost | interior ... interior | right ghost]`` with ghost width
-    ``halo``.  Slabs span the *full* extent of all other axes (ghosts
-    included) so sequential per-axis passes fill edges/corners.
-    """
-    k = compat.axis_size(axis_name)
-    size = x.shape[array_axis]
-    assert size >= 3 * halo, (size, halo)
-    to_left, to_right = _neighbor_perms(axis_name, periodic)
-
-    if k == 1:
-        if not periodic:
-            return x
-        # self-exchange: wrap interior edges into own ghosts
-        left_int = lax.slice_in_dim(x, halo, 2 * halo, axis=array_axis)
-        right_int = lax.slice_in_dim(x, size - 2 * halo, size - halo, axis=array_axis)
-        x = _write(x, right_int, array_axis, 0)
-        x = _write(x, left_int, array_axis, size - halo)
-        return x
-
-    # pack: interior edge slabs (the contiguous-buffer copy in the paper)
-    left_int = lax.slice_in_dim(x, halo, 2 * halo, axis=array_axis)
-    right_int = lax.slice_in_dim(x, size - 2 * halo, size - halo, axis=array_axis)
-
-    if n_parts <= 1 or x.ndim == 1:
-        # whole-message exchange (standard & persistent strategies).  1-D
-        # blocks also land here: a face is a width-``halo`` point with no
-        # tangent axis to partition along, so partitioned degenerates to the
-        # persistent single-message exchange (the paper's 1-partition case).
-        from_right = lax.ppermute(left_int, axis_name, to_left)
-        from_left = lax.ppermute(right_int, axis_name, to_right)
-        x = _write(x, from_left, array_axis, 0)
-        x = _write(x, from_right, array_axis, size - halo)
-        return x
-
-    # partitioned: split each face along a tangent axis; each partition is
-    # packed -> sent -> unpacked-on-arrival independently.
-    t_axis = _tangent_axis(x, array_axis)
-    part = Partitioner(n_parts, t_axis)
-    t_size = x.shape[t_axis]
-    csize = part.part_size(t_size)
-    bounds = part.slices(t_size)  # equal-size rule; tail width clipped
-    for dir_slab, perm, ghost_start in (
-        (left_int, to_left, size - halo),  # left interiors fill right ghosts
-        (right_int, to_right, 0),  # right interiors fill left ghosts
-    ):
-        for chunk, (off, width) in zip(part.split(dir_slab), bounds):
-            arrived = lax.ppermute(chunk, axis_name, perm)  # Pstart/Pready
-            if width <= 0:
-                continue  # all-padding tail partition: sent (the partition
-                # count is fixed at init, as in MPI), nothing to unpack
-            if width < csize:  # unpad tail partition
-                arrived = lax.slice_in_dim(arrived, 0, width, axis=t_axis)
-            x = _write(x, arrived, array_axis, ghost_start, t_axis, off)  # Parrived
-    return x
-
-
-def _write(
-    x: jax.Array,
-    slab: jax.Array,
-    array_axis: int,
-    start: int,
-    t_axis: int | None = None,
-    t_start: int = 0,
-) -> jax.Array:
-    starts = [0] * x.ndim
-    starts[array_axis] = start
-    if t_axis is not None:
-        starts[t_axis] = t_start
-    return lax.dynamic_update_slice(x, slab, tuple(starts))
+    """Exchange ghost rims along one decomposed axis (inside ``shard_map``)."""
+    group = axis_message_group(
+        x.shape, axis_name, array_axis, k=compat.axis_size(axis_name),
+        halo=halo, periodic=periodic, n_parts=n_parts,
+    )
+    return exchange_messages(x, (group,), packer=packer, transport=transport)
 
 
 def exchange(x: jax.Array, spec: HaloSpec) -> jax.Array:
@@ -178,19 +221,14 @@ def exchange(x: jax.Array, spec: HaloSpec) -> jax.Array:
     ``spec.n_parts`` alone selects whole-message vs partitioned transport —
     strategies that don't partition build their specs with ``n_parts=1``
     (``ExchangeStrategy.build_spec``), so custom registered strategies can
-    opt in without being named "partitioned".
+    opt in without being named "partitioned".  ``spec.packer`` and
+    ``spec.transport`` select the registered backends every message goes
+    through.
     """
-    n_parts = spec.n_parts
-    for axis_name, array_axis in zip(spec.mesh_axes, spec.array_axes):
-        x = exchange_axis(
-            x,
-            axis_name,
-            array_axis,
-            halo=spec.halo,
-            periodic=spec.periodic,
-            n_parts=n_parts,
-        )
-    return x
+    groups = sequential_message_groups(x.shape, spec, _mesh_sizes(spec))
+    return exchange_messages(
+        x, groups, packer=spec.packer, transport=spec.transport
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +289,41 @@ def fused_slab_table(
     return tuple(table)
 
 
+def fused_message_group(
+    shape: tuple[int, ...],
+    spec: HaloSpec,
+    sizes: Mapping[str, int],
+) -> tuple[Message, ...]:
+    """The fused schedule as ONE independent message group.
+
+    Every :class:`FusedSlab` becomes a :class:`Message` whose hop chain
+    crosses one mesh axis per non-zero direction offset (edges/corners hop
+    multiple times); a single-shard non-periodic axis elides the messages
+    that would have to cross it.
+    """
+    perms = {
+        name: _neighbor_perms(sizes[name], spec.periodic)
+        for name in spec.mesh_axes
+    }
+    group = []
+    for slab in fused_slab_table(shape, spec):
+        if not spec.periodic and any(
+            o != 0 and sizes[name] == 1
+            for o, name in zip(slab.offsets, spec.mesh_axes)
+        ):
+            continue  # single-shard non-periodic axis: no neighbor to cross
+        hops = []
+        for o, name in zip(slab.offsets, spec.mesh_axes):
+            if o == +1:
+                hops.append((name, perms[name][1]))  # to_right
+            elif o == -1:
+                hops.append((name, perms[name][0]))  # to_left
+        group.append(
+            Message(slab.src_start, slab.dst_start, slab.shape, tuple(hops))
+        )
+    return tuple(group)
+
+
 def exchange_fused(x: jax.Array, spec: HaloSpec) -> jax.Array:
     """Full halo exchange as ONE fused pass (corners sent directly).
 
@@ -258,31 +331,13 @@ def exchange_fused(x: jax.Array, spec: HaloSpec) -> jax.Array:
     Produces bit-identical ghosts to the sequential :func:`exchange` (values
     are only copied, never combined), but with no inter-axis data
     dependency: all slabs are packed from the input buffer, every message is
-    ppermuted independently (edges/corners hop once per involved axis), and
+    routed independently (edges/corners hop once per involved axis), and
     all unpacks land in disjoint ghost regions.
     """
-    perms = {
-        name: _neighbor_perms(name, spec.periodic) for name in spec.mesh_axes
-    }
-    sizes = {name: compat.axis_size(name) for name in spec.mesh_axes}
-    arrived: list[tuple[FusedSlab, jax.Array]] = []
-    for slab in fused_slab_table(x.shape, spec):
-        if not spec.periodic and any(
-            o != 0 and sizes[name] == 1
-            for o, name in zip(slab.offsets, spec.mesh_axes)
-        ):
-            continue  # single-shard non-periodic axis: no neighbor to cross
-        limits = [st + sz for st, sz in zip(slab.src_start, slab.shape)]
-        chunk = lax.slice(x, slab.src_start, limits)  # pack
-        for o, name in zip(slab.offsets, spec.mesh_axes):
-            if o == +1:
-                chunk = lax.ppermute(chunk, name, perms[name][1])  # to_right
-            elif o == -1:
-                chunk = lax.ppermute(chunk, name, perms[name][0])  # to_left
-        arrived.append((slab, chunk))
-    for slab, chunk in arrived:  # unpack (disjoint ghost regions)
-        x = lax.dynamic_update_slice(x, chunk, slab.dst_start)
-    return x
+    group = fused_message_group(x.shape, spec, _mesh_sizes(spec))
+    return exchange_messages(
+        x, (group,), packer=spec.packer, transport=spec.transport
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -332,25 +387,45 @@ def seq_left_halo(
     *,
     seq_axis: int = 1,
     n_parts: int = 1,
+    packer: str = "slice",
+    transport: str = "ppermute",
 ) -> jax.Array:
     """Prepend the last ``width`` positions of the left neighbor's shard
     (zeros for rank 0): the ghost cells a causal conv (zamba2's conv1d) needs
     under sequence parallelism.  Returns length ``width + local_seq``.
     """
+    p = resolve_packer(packer)
+    t = resolve_transport(transport)
     k = compat.axis_size(axis_name)
     size = x.shape[seq_axis]
-    tail = lax.slice_in_dim(x, size - width, size, axis=seq_axis)
-    if k == 1:
-        halo = jnp.zeros_like(tail)
-    else:
+    start = [0] * x.ndim
+    start[seq_axis] = size - width
+    slab_shape = list(x.shape)
+    slab_shape[seq_axis] = width
+    halo = jnp.zeros(tuple(slab_shape), x.dtype)
+    if k > 1:
         perm = [(i, i + 1) for i in range(k - 1)]  # non-periodic: causal
         if n_parts > 1:
+            # per-partition pack -> hop -> unpack-on-arrival (clipped windows
+            # on the equal-size grid, as the halo transport does)
             t_axis = 0 if seq_axis != 0 else (1 if x.ndim > 1 else 0)
-            part = Partitioner(n_parts, t_axis)
-            chunks = [lax.ppermute(c, axis_name, perm) for c in part.split(tail)]
-            halo = part.merge(chunks, tail.shape[t_axis])
+            for off, w in Partitioner(n_parts, t_axis).slices(
+                slab_shape[t_axis]
+            ):
+                if w <= 0:
+                    continue
+                sub_start = list(start)
+                sub_start[t_axis] += off
+                sub_shape = list(slab_shape)
+                sub_shape[t_axis] = w
+                buf = t.permute(p.pack(x, sub_start, sub_shape),
+                                axis_name, perm)
+                dst = [0] * x.ndim
+                dst[t_axis] = off
+                halo = p.unpack(halo, buf, dst, sub_shape)
         else:
-            halo = lax.ppermute(tail, axis_name, perm)
-        idx = lax.axis_index(axis_name)
+            buf = t.permute(p.pack(x, start, slab_shape), axis_name, perm)
+            halo = p.unpack(halo, buf, [0] * x.ndim, slab_shape)
+        idx = jax.lax.axis_index(axis_name)
         halo = jnp.where(idx == 0, jnp.zeros_like(halo), halo)
     return jnp.concatenate([halo, x], axis=seq_axis)

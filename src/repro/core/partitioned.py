@@ -13,17 +13,22 @@ latency-hiding scheduler can overlap each chunk's DMA with the neighboring
 chunks' compute.  ``consume_fn`` is the ``MPI_Parrived`` early-work hook: it is
 applied per chunk, inside the pipeline, instead of after the full message.
 
+All point-to-point movement goes through the transport layer
+(:mod:`repro.core.transport`): the partition policy (:class:`Partitioner`,
+equal-partition padding per paper §II-B) and the neighbor-permute backend
+live there, so these primitives accept a ``transport`` name and never touch
+``lax.ppermute`` directly.  The remaining many-to-many primitives
+(``all_to_all``/``psum``/``psum_scatter``) keep their native XLA collectives
+— they have no per-hop peer table for a transport backend to reroute.
+
 All functions are written for use **inside ``jax.shard_map``** (they reference
 a named mesh axis).  Every partitioned primitive is numerically equivalent to
 its fused reference (tested in ``tests/distributed_progs``); only the schedule
 differs.
-
-Equal-partition padding (paper §II-B) is handled by :class:`Partitioner`.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Sequence
 
 import jax
@@ -31,59 +36,19 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import compat
+from repro.core.transport import (  # re-exported: historical home
+    Partitioner,
+    Transport,
+    resolve_transport,
+    ring_perm,
+)
 
-
-# ---------------------------------------------------------------------------
-# Partitioner: the equal-partition (+padding) rule from the paper
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class Partitioner:
-    """Splits an array axis into ``n_parts`` equal partitions, zero-padding the
-    tail when the size does not divide (the paper's equal-size constraint)."""
-
-    n_parts: int
-    axis: int = 0
-
-    def pad_amount(self, size: int) -> int:
-        return (-size) % self.n_parts
-
-    def part_size(self, size: int) -> int:
-        return (size + self.pad_amount(size)) // self.n_parts
-
-    def split(self, x: jax.Array) -> list[jax.Array]:
-        size = x.shape[self.axis]
-        pad = self.pad_amount(size)
-        if pad:
-            widths = [(0, 0)] * x.ndim
-            widths[self.axis] = (0, pad)
-            x = jnp.pad(x, widths)
-        return jnp.split(x, self.n_parts, axis=self.axis)
-
-    def merge(self, parts: Sequence[jax.Array], orig_size: int) -> jax.Array:
-        x = jnp.concatenate(list(parts), axis=self.axis)
-        if x.shape[self.axis] != orig_size:
-            x = lax.slice_in_dim(x, 0, orig_size, axis=self.axis)
-        return x
-
-    def slices(self, size: int) -> list[tuple[int, int]]:
-        """(offset, valid width) of each partition within the *un-padded*
-        axis; the tail partition's width is clipped (0 when fully padding)."""
-        c = self.part_size(size)
-        return [
-            (i * c, max(0, min(c, size - i * c))) for i in range(self.n_parts)
-        ]
-
-
-# ---------------------------------------------------------------------------
-# helpers
-# ---------------------------------------------------------------------------
-
-
-def ring_perm(axis_name: str, shift: int = 1) -> list[tuple[int, int]]:
-    k = compat.axis_size(axis_name)
-    return [(i, (i + shift) % k) for i in range(k)]
+__all__ = [
+    "Partitioner", "ring_perm", "partitioned_ppermute", "ring_all_gather",
+    "ring_all_gather_matmul", "ring_matmul_reduce_scatter",
+    "partitioned_all_to_all", "partitioned_psum_scatter", "partitioned_psum",
+    "bucket_tree", "bucketed_psum_tree",
+]
 
 
 def _identity(x: jax.Array) -> jax.Array:
@@ -104,25 +69,28 @@ def partitioned_ppermute(
     split_axis: int = 0,
     pack_fn: Callable[[jax.Array], jax.Array] | None = None,
     consume_fn: Callable[[jax.Array], jax.Array] | None = None,
+    transport: str | Transport = "ppermute",
 ) -> jax.Array:
-    """``ppermute`` of ``slab`` split into ``n_parts`` partitions.
+    """Neighbor permute of ``slab`` split into ``n_parts`` partitions.
 
     ``pack_fn`` models the per-partition pack (MPI_Pready after a thread packs
     its partition); ``consume_fn`` is per-partition early work on arrival
     (MPI_Parrived).  With ``n_parts=1`` this degenerates to the standard
-    single-message exchange.
+    single-message exchange.  ``transport`` selects the registered backend
+    the hop goes through.
     """
+    t = resolve_transport(transport)
     pack = pack_fn or _identity
     consume = consume_fn or _identity
     perm = list(perm)
     if n_parts <= 1:
-        return consume(lax.ppermute(pack(slab), axis_name, perm))
+        return consume(t.permute(pack(slab), axis_name, perm))
     part = Partitioner(n_parts, split_axis)
     out_parts = []
     for chunk in part.split(slab):
         # pack(k) -> start(k): each partition is sent as soon as it is packed,
         # leaving XLA free to overlap chunk k's transfer with chunk k+1's pack.
-        sent = lax.ppermute(pack(chunk), axis_name, perm)
+        sent = t.permute(pack(chunk), axis_name, perm)
         out_parts.append(consume(sent))
     return part.merge(out_parts, slab.shape[split_axis])
 
@@ -138,13 +106,15 @@ def ring_all_gather(
     *,
     gather_axis: int = 0,
     n_parts: int = 1,
+    transport: str | Transport = "ppermute",
 ) -> jax.Array:
-    """All-gather via ring ppermute; equivalent to
+    """All-gather via ring hops; equivalent to
     ``lax.all_gather(x, axis_name, axis=gather_axis, tiled=True)``.
 
     With ``n_parts > 1`` each ring hop moves ``n_parts`` sub-chunks
     independently (finer overlap granularity — partitioned communication).
     """
+    t = resolve_transport(transport)
     k = compat.axis_size(axis_name)
     if k == 1:
         return x
@@ -167,9 +137,11 @@ def ring_all_gather(
         out = place(out, cur, owner)
         if s < k - 1:
             if part is None:
-                cur = lax.ppermute(cur, axis_name, perm)
+                cur = t.permute(cur, axis_name, perm)
             else:
-                chunks = [lax.ppermute(c, axis_name, perm) for c in part.split(cur)]
+                chunks = [
+                    t.permute(c, axis_name, perm) for c in part.split(cur)
+                ]
                 cur = part.merge(chunks, m)
     return out
 
@@ -181,6 +153,7 @@ def ring_all_gather_matmul(
     *,
     precision: Any = None,
     accum_dtype: Any = None,
+    transport: str | Transport = "ppermute",
 ) -> jax.Array | list[jax.Array]:
     """``all_gather(x, axis=0) @ w`` with the matmul consuming each chunk on
     arrival (early work): ring collective-matmul.
@@ -191,6 +164,7 @@ def ring_all_gather_matmul(
     Returns (k*m, n) (or a list).  Each ring step overlaps one chunk-matmul
     with the next chunk's transfer — partition count == ring size.
     """
+    t = resolve_transport(transport)
     ws = list(w) if isinstance(w, (list, tuple)) else [w]
     k = compat.axis_size(axis_name)
     dtype = accum_dtype or x.dtype
@@ -208,7 +182,7 @@ def ring_all_gather_matmul(
             y = jnp.dot(cur, wi, precision=precision).astype(dtype)
             outs[i] = lax.dynamic_update_slice(outs[i], y, (owner * m, 0))
         if s < k - 1:
-            cur = lax.ppermute(cur, axis_name, perm)
+            cur = t.permute(cur, axis_name, perm)
     return outs if isinstance(w, (list, tuple)) else outs[0]
 
 
@@ -219,6 +193,7 @@ def ring_matmul_reduce_scatter(
     *,
     precision: Any = None,
     accum_dtype: Any = None,
+    transport: str | Transport = "ppermute",
 ) -> jax.Array:
     """``psum_scatter(x @ w, scatter_dim=0)`` as a ring with per-step partial
     matmuls (the producer side of partitioned communication: each partition of
@@ -229,6 +204,7 @@ def ring_matmul_reduce_scatter(
     full sum.  Equivalent to ``lax.psum_scatter(x @ w, axis_name,
     scatter_dimension=0, tiled=True)``.
     """
+    t = resolve_transport(transport)
     k = compat.axis_size(axis_name)
     dtype = accum_dtype or x.dtype
     full = jnp.dot(x, w, precision=precision).astype(dtype) if k == 1 else None
@@ -247,7 +223,7 @@ def ring_matmul_reduce_scatter(
     # acc for block (idx-1) starts here and ends, fully summed, at its owner.
     acc = partial_block((idx - 1) % k)
     for s in range(1, k):
-        acc = lax.ppermute(acc, axis_name, perm)
+        acc = t.permute(acc, axis_name, perm)
         acc = acc + partial_block((idx - 1 - s) % k)
     return acc  # block ``idx`` of the reduced result
 

@@ -236,11 +236,43 @@ def build_plan(
     )
 
 
+def transport_plan(
+    step_factory: Callable[[], Callable],
+    example_args: Sequence[Any],
+    *,
+    schedule: Any,
+    donate_argnums: tuple[int, ...] = (),
+    cache: "PlanCache | None" = None,
+    key: Hashable | None = None,
+    name: str | None = None,
+) -> CommPlan:
+    """Compile ONE persistent plan for a transport schedule.
+
+    ``schedule`` is a :class:`repro.core.transport.ScheduleInfo` naming the
+    choreography (sequential/fused), the mesh axes it spans, and the
+    registered packer/transport backends every message resolves — so the
+    compiled executable's identity (plan name, and the structural cache
+    ``key`` the caller derives from its spec) always records *which*
+    pack/transport pipeline was baked in.  This is the one place the
+    free-floating "compile this exchange step" call used to live; every
+    persistent-style strategy now initializes through it.
+    """
+    axes = tuple(schedule.mesh_axes)
+    assert axes, "a transport plan needs at least one mesh axis"
+    assert len(set(axes)) == len(axes), f"duplicate mesh axes: {axes}"
+    return build_plan(
+        step_factory, example_args, donate_argnums=donate_argnums,
+        cache=cache, key=key, name=name or schedule.tag(),
+    )
+
+
 def multi_axis_plan(
     step_factory: Callable[[], Callable],
     example_args: Sequence[Any],
     *,
     mesh_axes: Sequence[str],
+    packer: str = "slice",
+    transport: str = "ppermute",
     donate_argnums: tuple[int, ...] = (),
     cache: "PlanCache | None" = None,
     key: Hashable | None = None,
@@ -253,15 +285,18 @@ def multi_axis_plan(
     hands the whole D-axis step to a single :class:`CommPlan` so every
     pack/send/unpack of every axis lives in one AOT-compiled executable —
     the ``MPI_Send_init`` of all ``3^D - 1`` neighbor requests at once.
-    ``mesh_axes`` is recorded in the plan name for introspection and
-    validated non-empty/unique; assembly delegates to :func:`build_plan`.
+    Assembly delegates to :func:`transport_plan` with a ``"fused"``
+    schedule identity.
     """
-    axes = tuple(mesh_axes)
-    assert axes, "a multi-axis plan needs at least one mesh axis"
-    assert len(set(axes)) == len(axes), f"duplicate mesh axes: {axes}"
-    return build_plan(
-        step_factory, example_args, donate_argnums=donate_argnums,
-        cache=cache, key=key, name=name or f"fused[{'x'.join(axes)}]",
+    from repro.core.transport import ScheduleInfo
+
+    return transport_plan(
+        step_factory, example_args,
+        schedule=ScheduleInfo(
+            kind="fused", mesh_axes=tuple(mesh_axes),
+            packer=packer, transport=transport,
+        ),
+        donate_argnums=donate_argnums, cache=cache, key=key, name=name,
     )
 
 

@@ -27,7 +27,12 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import compat
-from repro.core.partitioned import Partitioner, ring_perm
+from repro.core.transport import (
+    Partitioner,
+    Transport,
+    resolve_transport,
+    ring_perm,
+)
 
 _NEG_INF = -1e30
 
@@ -86,6 +91,7 @@ def ring_attention(
     n_parts: int = 1,
     scale: float | None = None,
     block_fn: Callable | None = None,
+    transport: str | Transport = "ppermute",
 ) -> jax.Array:
     """Sequence-parallel attention with the KV shard circulating a ring.
 
@@ -94,8 +100,10 @@ def ring_attention(
     as ``q``.  ``n_parts > 1`` splits each circulating KV block into equal
     partitions (paper's partitioned pipeline; partition transfer overlaps
     block attention).  ``block_fn`` may override the per-block accumulation
-    (e.g. the Pallas flash kernel).
+    (e.g. the Pallas flash kernel); ``transport`` selects the registered
+    backend (:mod:`repro.core.transport`) each KV hop goes through.
     """
+    t = resolve_transport(transport)
     ksize = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     b, sq, h, d = q.shape
@@ -117,11 +125,11 @@ def ring_attention(
         if s < ksize - 1:
             # start the next block's transfer (partitioned: n_parts hops)
             if part is None:
-                nxt_k = lax.ppermute(cur_k, axis_name, perm)
-                nxt_v = lax.ppermute(cur_v, axis_name, perm)
+                nxt_k = t.permute(cur_k, axis_name, perm)
+                nxt_v = t.permute(cur_v, axis_name, perm)
             else:
-                nxt_k_parts = [lax.ppermute(c, axis_name, perm) for c in part.split(cur_k)]
-                nxt_v_parts = [lax.ppermute(c, axis_name, perm) for c in part.split(cur_v)]
+                nxt_k_parts = [t.permute(c, axis_name, perm) for c in part.split(cur_k)]
+                nxt_v_parts = [t.permute(c, axis_name, perm) for c in part.split(cur_v)]
         # consume the current block while the next one is in flight
         if part is None:
             m, l, acc = attend(
@@ -162,6 +170,7 @@ def state_passing(
     axis_name: str,
     *,
     method: str = "ring",
+    transport: str | Transport = "ppermute",
 ) -> jax.Array:
     """Exclusive prefix of the affine state operators ``s -> D*s + C`` along a
     mesh axis; returns the incoming state ``s_in`` for each shard.
@@ -173,7 +182,10 @@ def state_passing(
 
     method='ring' — k-1 neighbor hops (the paper's 1-D stencil transport).
     method='tree' — ceil(log2(k)) doubling hops + 1 shift (beyond-paper).
+    ``transport`` selects the registered hop backend
+    (:mod:`repro.core.transport`).
     """
+    t = resolve_transport(transport)
     k = compat.axis_size(axis_name)
     if k == 1:
         return jnp.zeros_like(C)
@@ -184,16 +196,18 @@ def state_passing(
         shift = [(i, i + 1) for i in range(k - 1)]  # causal: no wraparound
         s = jnp.zeros_like(C)
         for _ in range(k - 1):
-            s = lax.ppermute(D * s + C, axis_name, shift)  # rank 0 gets zeros
+            s = t.permute(D * s + C, axis_name, shift)  # rank 0 gets zeros
         return s
 
     if method == "tree":
-        return _tree_state_passing(C, D, axis_name)
+        return _tree_state_passing(C, D, axis_name, t)
 
     raise ValueError(method)
 
 
-def _tree_state_passing(C: jax.Array, D: jax.Array, axis_name: str) -> jax.Array:
+def _tree_state_passing(
+    C: jax.Array, D: jax.Array, axis_name: str, t: Transport
+) -> jax.Array:
     """Inclusive doubling scan over affine operators, then shift by one."""
     k = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
@@ -201,12 +215,12 @@ def _tree_state_passing(C: jax.Array, D: jax.Array, axis_name: str) -> jax.Array
     hop = 1
     while hop < k:
         shift = [(i, i + hop) for i in range(k - hop)]
-        D_prev = lax.ppermute(Dc, axis_name, shift)
-        C_prev = lax.ppermute(Cc, axis_name, shift)
+        D_prev = t.permute(Dc, axis_name, shift)
+        C_prev = t.permute(Cc, axis_name, shift)
         has_prev = idx >= hop
         new_D = Dc * D_prev
         new_C = Dc * C_prev + Cc
         Dc = jnp.where(has_prev, new_D, Dc)
         Cc = jnp.where(has_prev, new_C, Cc)
         hop *= 2
-    return lax.ppermute(Cc, axis_name, [(i, i + 1) for i in range(k - 1)])
+    return t.permute(Cc, axis_name, [(i, i + 1) for i in range(k - 1)])

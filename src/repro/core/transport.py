@@ -1,0 +1,459 @@
+"""Unified pack/transport layer beneath every exchange path.
+
+The paper's measured wins come from how messages are *packed* (contiguous
+staging buffers, one per neighbor or partition) and *moved* (persistent
+channels, partitioned sends).  This module is the one seam where both
+concerns live, pMR-style: every communication path in the repo — the
+sequential, fused, and partitioned halo exchanges, the LM ring primitives,
+the sequence-parallel ghost pulls — describes its data movement as
+:class:`Message` values and delegates the pack -> send -> unpack pipeline to
+a :class:`Packer` and a :class:`Transport` chosen by *name*:
+
+* **Message** — one neighbor message: the source slab window in the local
+  ghosted block, the destination ghost window, the peer permutation chain
+  (one hop per mesh axis crossed), and the partition policy (``n_parts``
+  partitions split along ``part_axis``, the paper's ``MPI_Psend_init``
+  analogue).
+* **Packer** — how a slab window becomes a contiguous wire buffer and back.
+  ``"slice"`` is the inline ``lax.slice``/``dynamic_update_slice`` staging
+  the halo code historically did; ``"pallas"`` routes through the
+  :mod:`repro.kernels.pack` VMEM-tiled copy kernel (Comb's OpenMP pack
+  kernels), falling back to its jnp oracle off-TPU so CPU CI exercises
+  identical semantics.
+* **Transport** — how a packed buffer crosses the mesh.  ``"ppermute"`` is
+  the in-process XLA backend (one ``lax.ppermute`` per hop — the native ICI
+  neighbor transport on a TPU torus).  ``"multihost"`` is the registered
+  seam for multi-process meshes: the same schedule lowers to DCN/ICI
+  collectives when the mesh spans hosts, so a real multi-host sweep backend
+  plugs in here without touching any caller.
+
+Registering a new packer or transport::
+
+    register_packer(MyPacker(name="zstd-wire"))
+    register_transport(MyTransport(name="nccl"))
+
+and every registered exchange strategy, ``comb_measure``, and the §VI sweep
+can select it through ``StrategyConfig(packer=..., transport=...)``.
+
+The partition policy (equal-size rule, paper §II-B) lives here as
+:class:`Partitioner`; the transport layer sends each partition's *clipped*
+window (offsets on the equal-size grid, the zero-padding never crosses the
+wire) and unpacks it into the ghost region on arrival (``MPI_Parrived``).
+
+All delivery functions run **inside** ``jax.shard_map``; message tables are
+built at trace time, so permutation tables and slab geometry are baked into
+the compiled plan — the "tag matching at init" the paper's persistent mode
+amortizes.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, ClassVar, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Partitioner: the equal-partition (+padding) rule from the paper
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioner:
+    """Splits an array axis into ``n_parts`` equal partitions, zero-padding the
+    tail when the size does not divide (the paper's equal-size constraint)."""
+
+    n_parts: int
+    axis: int = 0
+
+    def pad_amount(self, size: int) -> int:
+        return (-size) % self.n_parts
+
+    def part_size(self, size: int) -> int:
+        return (size + self.pad_amount(size)) // self.n_parts
+
+    def split(self, x: jax.Array) -> list[jax.Array]:
+        size = x.shape[self.axis]
+        pad = self.pad_amount(size)
+        if pad:
+            widths = [(0, 0)] * x.ndim
+            widths[self.axis] = (0, pad)
+            x = jnp.pad(x, widths)
+        return jnp.split(x, self.n_parts, axis=self.axis)
+
+    def merge(self, parts: Sequence[jax.Array], orig_size: int) -> jax.Array:
+        x = jnp.concatenate(list(parts), axis=self.axis)
+        if x.shape[self.axis] != orig_size:
+            x = lax.slice_in_dim(x, 0, orig_size, axis=self.axis)
+        return x
+
+    def slices(self, size: int) -> list[tuple[int, int]]:
+        """(offset, valid width) of each partition within the *un-padded*
+        axis; the tail partition's width is clipped (0 when fully padding)."""
+        c = self.part_size(size)
+        return [
+            (i * c, max(0, min(c, size - i * c))) for i in range(self.n_parts)
+        ]
+
+
+def ring_perm(axis_name: str, shift: int = 1) -> list[tuple[int, int]]:
+    """Ring source->target table over a named mesh axis."""
+    from repro.core import compat
+
+    k = compat.axis_size(axis_name)
+    return [(i, (i + shift) % k) for i in range(k)]
+
+
+# ---------------------------------------------------------------------------
+# Message: one neighbor message of an exchange schedule
+# ---------------------------------------------------------------------------
+
+#: one transport hop: (mesh axis name, source->target permutation table)
+Hop = tuple[str, tuple[tuple[int, int], ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    """One message of an exchange: src slab -> (hops) -> dst ghost window.
+
+    ``src_start``/``shape`` window the source slab in the local ghosted
+    block; ``dst_start`` is where the (identically shaped) payload lands on
+    the receiving shard.  ``hops`` is the peer permutation chain — one
+    ``(axis_name, perm)`` per mesh axis the message crosses (a corner
+    message hops once per involved axis; an empty chain is a local
+    self-copy, the single-shard periodic wrap).  ``n_parts > 1`` splits the
+    slab along ``part_axis`` into equal partitions (paper §II-B), each
+    packed, sent, and unpacked independently.
+    """
+
+    src_start: tuple[int, ...]
+    dst_start: tuple[int, ...]
+    shape: tuple[int, ...]
+    hops: tuple[Hop, ...] = ()
+    n_parts: int = 1
+    part_axis: int | None = None
+
+    def __post_init__(self):
+        assert len(self.src_start) == len(self.dst_start) == len(self.shape)
+        assert self.n_parts >= 1, self.n_parts
+        if self.n_parts > 1:
+            assert self.part_axis is not None, "partitioned message needs axis"
+
+    def partitions(self) -> tuple["Message", ...]:
+        """Expand into per-partition single messages (equal-size grid).
+
+        Offsets follow the paper's equal-partition rule; each partition's
+        window is clipped to the slab, so the zero-padding of a
+        non-dividing tail never crosses the wire and an all-padding tail
+        partition (``n_parts`` beyond the axis extent) is elided entirely.
+        MPI would still post the fixed partition count; under XLA an
+        arrival nobody consumes is dead code (the historical inline path's
+        padding sends were eliminated the same way), so the wire-level
+        cost of surplus partitions is a :mod:`repro.core.model_comm`
+        concern, not something this backend can measure.
+        """
+        if self.n_parts <= 1:
+            return (self,)
+        a = self.part_axis
+        out = []
+        for off, width in Partitioner(self.n_parts, a).slices(self.shape[a]):
+            if width <= 0:
+                continue
+            src = list(self.src_start)
+            dst = list(self.dst_start)
+            shape = list(self.shape)
+            src[a] += off
+            dst[a] += off
+            shape[a] = width
+            out.append(
+                Message(tuple(src), tuple(dst), tuple(shape), self.hops)
+            )
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleInfo:
+    """Identity of one compiled transport schedule (for plan names/keys).
+
+    ``kind`` names the choreography (``"sequential"`` axis passes,
+    ``"fused"`` single pass, ...); ``mesh_axes`` the axes it spans; and
+    ``packer``/``transport`` the registered backends it resolves.
+    """
+
+    kind: str
+    mesh_axes: tuple[str, ...]
+    packer: str = "slice"
+    transport: str = "ppermute"
+
+    def tag(self) -> str:
+        axes = "x".join(self.mesh_axes) or "-"
+        return f"{self.kind}[{axes}]@{self.packer}/{self.transport}"
+
+
+# ---------------------------------------------------------------------------
+# Packer: slab window <-> contiguous wire buffer
+# ---------------------------------------------------------------------------
+
+
+class Packer(abc.ABC):
+    """Packs a slab window into a contiguous wire buffer and back.
+
+    ``pack`` reads the window ``[start, start+shape)`` of the local block;
+    ``unpack`` writes the received buffer into the (same-shaped) ghost
+    window at ``dst_start``.  A packer may re-layout or re-encode the wire
+    buffer (dtype conversion, scaling, compression) as long as
+    ``unpack(pack(...))`` restores the slab values.
+    """
+
+    #: registry key (instances may override per-instance)
+    name: ClassVar[str] = ""
+
+    @abc.abstractmethod
+    def pack(
+        self, x: jax.Array, start: Sequence[int], shape: Sequence[int]
+    ) -> jax.Array:
+        """Stage the slab window as one contiguous wire buffer."""
+
+    @abc.abstractmethod
+    def unpack(
+        self,
+        x: jax.Array,
+        buf: jax.Array,
+        dst_start: Sequence[int],
+        shape: Sequence[int],
+    ) -> jax.Array:
+        """Write a received wire buffer into the ghost window of ``x``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SlicePacker(Packer):
+    """The historical inline staging: ``lax.slice`` out, ``lax.
+    dynamic_update_slice`` back.  The wire buffer *is* the slab."""
+
+    name: str = "slice"
+
+    def pack(self, x, start, shape):
+        limits = [s + n for s, n in zip(start, shape)]
+        return lax.slice(x, list(start), limits)
+
+    def unpack(self, x, buf, dst_start, shape):
+        assert tuple(buf.shape) == tuple(shape), (buf.shape, shape)
+        return lax.dynamic_update_slice(x, buf, tuple(dst_start))
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasPacker(Packer):
+    """Comb-pack-kernel analogue: the VMEM-tiled contiguous copy of
+    :mod:`repro.kernels.pack`, extended to the N-D slabs the halo schedules
+    emit (faces, edges, corners, partitions) via a 2-D (lead, lane) view.
+
+    Off-TPU the kernel wrappers fall back to their jnp oracle, so the
+    packer is CI-runnable on virtual CPU devices with bit-identical
+    results; ``force_kernel``/``interpret`` pin the Pallas interpreter path
+    for kernel-parity tests.
+    """
+
+    name: str = "pallas"
+    force_kernel: bool = False
+    interpret: bool = False
+
+    def pack(self, x, start, shape):
+        from repro.kernels.pack.ops import pack_slab
+
+        limits = [s + n for s, n in zip(start, shape)]
+        slab = lax.slice(x, list(start), limits)
+        return pack_slab(
+            slab, force_kernel=self.force_kernel, interpret=self.interpret
+        )
+
+    def unpack(self, x, buf, dst_start, shape):
+        from repro.kernels.pack.ops import unpack_slab
+
+        ghost = unpack_slab(
+            buf, tuple(shape), out_dtype=x.dtype,
+            force_kernel=self.force_kernel, interpret=self.interpret,
+        )
+        return lax.dynamic_update_slice(x, ghost, tuple(dst_start))
+
+
+# ---------------------------------------------------------------------------
+# Transport: how packed buffers cross the mesh
+# ---------------------------------------------------------------------------
+
+
+class Transport(abc.ABC):
+    """Moves packed buffers between shards along named mesh axes."""
+
+    name: ClassVar[str] = ""
+
+    @abc.abstractmethod
+    def permute(
+        self, buf: jax.Array, axis_name: str, perm: Sequence[tuple[int, int]]
+    ) -> jax.Array:
+        """One hop: send ``buf`` along ``axis_name`` per the (src, dst)
+        table; shards receiving nothing get zeros (XLA ppermute rule)."""
+
+    def route(self, buf: jax.Array, hops: Iterable[Hop]) -> jax.Array:
+        """Chain the hops of one message (edges/corners hop per axis)."""
+        for axis_name, perm in hops:
+            buf = self.permute(buf, axis_name, list(perm))
+        return buf
+
+
+@dataclasses.dataclass(frozen=True)
+class PpermuteTransport(Transport):
+    """In-process backend: one ``lax.ppermute`` per hop — XLA's native
+    neighbor transport (ICI on a TPU torus, shared-memory copies on the
+    virtual-device CPU meshes CI runs)."""
+
+    name: str = "ppermute"
+
+    def permute(self, buf, axis_name, perm):
+        return lax.ppermute(buf, axis_name, list(perm))
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiHostTransport(PpermuteTransport):
+    """The multi-host seam: same schedule, mesh spanning processes.
+
+    ``lax.ppermute`` inside a global ``shard_map`` lowers to DCN/ICI
+    collective-permutes when the mesh's devices belong to several
+    processes, so this backend runs today's schedules unchanged under
+    ``jax.distributed``; a dedicated backend (e.g. per-hop NCCL rings or
+    MPI partitioned sends) overrides :meth:`permute` and registers under
+    its own name.  :meth:`is_multihost` reports whether the current
+    runtime actually spans processes; the sweep stamps it into the BENCH
+    config block (``repro.stencil.sweep.config_block``).
+    """
+
+    name: str = "multihost"
+
+    @staticmethod
+    def is_multihost() -> bool:
+        return jax.process_count() > 1
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+_PACKERS: dict[str, Packer] = {}
+_TRANSPORTS: dict[str, Transport] = {}
+
+
+def register_packer(packer: Packer) -> Packer:
+    """Add a packer instance to the registry under ``packer.name``."""
+    if not packer.name:
+        raise ValueError(f"{type(packer).__name__} must carry a name")
+    if packer.name in _PACKERS:
+        raise ValueError(f"packer {packer.name!r} already registered")
+    _PACKERS[packer.name] = packer
+    return packer
+
+
+def register_transport(transport: Transport) -> Transport:
+    """Add a transport instance to the registry under ``transport.name``."""
+    if not transport.name:
+        raise ValueError(f"{type(transport).__name__} must carry a name")
+    if transport.name in _TRANSPORTS:
+        raise ValueError(f"transport {transport.name!r} already registered")
+    _TRANSPORTS[transport.name] = transport
+    return transport
+
+
+def available_packers() -> tuple[str, ...]:
+    return tuple(_PACKERS)
+
+
+def available_transports() -> tuple[str, ...]:
+    return tuple(_TRANSPORTS)
+
+
+def get_packer(name: str) -> Packer:
+    try:
+        return _PACKERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown packer {name!r}; registered: "
+            f"{', '.join(_PACKERS) or '(none)'}"
+        ) from None
+
+
+def get_transport(name: str) -> Transport:
+    try:
+        return _TRANSPORTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown transport {name!r}; registered: "
+            f"{', '.join(_TRANSPORTS) or '(none)'}"
+        ) from None
+
+
+def resolve_packer(packer: str | Packer) -> Packer:
+    return packer if isinstance(packer, Packer) else get_packer(packer)
+
+
+def resolve_transport(transport: str | Transport) -> Transport:
+    if isinstance(transport, Transport):
+        return transport
+    return get_transport(transport)
+
+
+register_packer(SlicePacker())
+register_packer(PallasPacker())
+register_transport(PpermuteTransport())
+register_transport(MultiHostTransport())
+
+
+# ---------------------------------------------------------------------------
+# delivery choreography (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def deliver(
+    x: jax.Array,
+    messages: Iterable[Message],
+    *,
+    packer: str | Packer = "slice",
+    transport: str | Transport = "ppermute",
+) -> jax.Array:
+    """Deliver one *group* of independent messages: pack and route every
+    message (and every partition, ``MPI_Pready``-style), then unpack all
+    arrivals into their disjoint ghost windows (``MPI_Parrived``).
+
+    Within a group no message depends on another, so XLA is free to overlap
+    all packs, transfers, and unpacks; sequencing *between* groups (the
+    sequential schedule's axis passes) is the caller's ``exchange_messages``.
+    """
+    p = resolve_packer(packer)
+    t = resolve_transport(transport)
+    arrived: list[tuple[Message, jax.Array]] = []
+    for msg in messages:
+        for part in msg.partitions():
+            buf = p.pack(x, part.src_start, part.shape)  # pack
+            buf = t.route(buf, part.hops)  # start/send
+            arrived.append((part, buf))
+    for part, buf in arrived:  # unpack (disjoint ghost windows)
+        x = p.unpack(x, buf, part.dst_start, part.shape)
+    return x
+
+
+def exchange_messages(
+    x: jax.Array,
+    groups: Sequence[Sequence[Message]],
+    *,
+    packer: str | Packer = "slice",
+    transport: str | Transport = "ppermute",
+) -> jax.Array:
+    """Deliver a full schedule: groups run in order (group *i+1* packs from
+    the buffer group *i* unpacked into — the sequential corner trick),
+    messages within a group are independent."""
+    p = resolve_packer(packer)
+    t = resolve_transport(transport)
+    for group in groups:
+        x = deliver(x, group, packer=p, transport=t)
+    return x

@@ -1,7 +1,12 @@
 """Public jit'd wrappers composing slice -> pack kernel -> (exchange) -> unpack.
 
-``pack_face`` / ``unpack_face`` are what the stencil substrate uses; on
-non-TPU backends they fall back to the jnp oracle so CPU tests and smoke runs
+``pack_slab`` / ``unpack_slab`` are what the transport layer's ``pallas``
+packer uses (:class:`repro.core.transport.PallasPacker`): they carry any N-D
+slab the halo schedules emit — full-extent sequential faces, the fused
+schedule's ``3^D - 1`` face/edge/corner blocks, and clipped partitions —
+through the 2-D (lead, lane) kernel view.  ``pack_face`` / ``unpack_face``
+are the face-level forms (slice by axis/side baked in).  On non-TPU backends
+every wrapper falls back to the jnp oracle so CPU tests and smoke runs
 exercise identical semantics.
 """
 
@@ -19,6 +24,41 @@ def _to_2d(slab: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
     if slab.ndim == 1:
         return slab.reshape(1, -1), shape
     return slab.reshape(-1, shape[-1]), shape
+
+
+def pack_slab(
+    slab: jax.Array,
+    *,
+    out_dtype=None,
+    scale: float = 1.0,
+    force_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pack an N-D slab (face, edge, corner, or partition block) into a
+    contiguous 2-D wire buffer via the tiled copy kernel."""
+    flat, _ = _to_2d(slab)
+    if force_kernel or jax.default_backend() == "tpu":
+        return pack_2d(flat, out_dtype=out_dtype, scale=scale,
+                       interpret=interpret)
+    return _ref.pack_2d_ref(flat, out_dtype=out_dtype, scale=scale)
+
+
+def unpack_slab(
+    buf: jax.Array,
+    shape: tuple[int, ...],
+    *,
+    out_dtype=None,
+    scale: float = 1.0,
+    force_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Inverse of :func:`pack_slab`: wire buffer back to the slab ``shape``."""
+    if force_kernel or jax.default_backend() == "tpu":
+        vals = unpack_2d(buf, out_dtype=out_dtype, scale=scale,
+                         interpret=interpret)
+    else:
+        vals = _ref.unpack_2d_ref(buf, out_dtype=out_dtype, scale=scale)
+    return vals.reshape(shape)
 
 
 def pack_face(

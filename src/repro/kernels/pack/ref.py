@@ -18,6 +18,21 @@ def unpack_2d_ref(buf: jax.Array, *, out_dtype=None, scale: float = 1.0) -> jax.
     return pack_2d_ref(buf, out_dtype=out_dtype, scale=(1.0 / scale if scale != 1.0 else 1.0))
 
 
+def pack_slab_ref(
+    slab: jax.Array, *, out_dtype=None, scale: float = 1.0
+) -> jax.Array:
+    """N-D slab -> contiguous 2-D wire buffer (jnp oracle of ``pack_slab``)."""
+    flat = slab.reshape(-1, slab.shape[-1]) if slab.ndim > 1 else slab.reshape(1, -1)
+    return pack_2d_ref(flat, out_dtype=out_dtype, scale=scale)
+
+
+def unpack_slab_ref(
+    buf: jax.Array, shape, *, out_dtype=None, scale: float = 1.0
+) -> jax.Array:
+    """Wire buffer -> slab of ``shape`` (jnp oracle of ``unpack_slab``)."""
+    return unpack_2d_ref(buf, out_dtype=out_dtype, scale=scale).reshape(shape)
+
+
 def pack_face_ref(
     x: jax.Array, array_axis: int, side: str, halo: int,
     *, out_dtype=None, scale: float = 1.0,

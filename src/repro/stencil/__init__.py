@@ -11,11 +11,13 @@ from repro.stencil.strategies import (
 from repro.stencil.comb import (
     CycleResult,
     comb_measure,
+    result_label,
     run_cycles,
     speedup_vs_baseline,
 )
 
-_SWEEP_EXPORTS = ("SweepConfig", "run_sweep", "sweep_cells", "write_bench_json")
+_SWEEP_EXPORTS = ("SweepConfig", "run_sweep", "sweep_cells",
+                  "write_bench_json", "read_bench_json")
 
 
 def __getattr__(name):
@@ -31,6 +33,8 @@ __all__ = [
     "Domain", "periodic_oracle_step", "ExchangeDriver",
     "ExchangeStrategy", "StrategyConfig", "available_strategies",
     "get_strategy", "make_driver", "register_strategy",
-    "CycleResult", "comb_measure", "run_cycles", "speedup_vs_baseline",
+    "CycleResult", "comb_measure", "result_label", "run_cycles",
+    "speedup_vs_baseline",
     "SweepConfig", "run_sweep", "sweep_cells", "write_bench_json",
+    "read_bench_json",
 ]

@@ -39,6 +39,8 @@ class CycleResult:
     repeats: int
     checksum: float
     n_parts: int = 1
+    packer: str = "slice"
+    transport: str = "ppermute"
 
     def record(self) -> dict:
         """Flat, json-serializable form (the BENCH_*.json row body)."""
@@ -86,6 +88,8 @@ def run_cycles(
         repeats=repeats,
         checksum=checksum,
         n_parts=driver.n_parts,
+        packer=driver.config.packer,
+        transport=driver.config.transport,
     )
 
 
@@ -96,6 +100,14 @@ def _as_config(
         return strategy
     n_parts = default_n_parts if strategy == "partitioned" else 1
     return StrategyConfig(name=strategy, n_parts=n_parts)
+
+
+def result_label(name: str, packer: str = "slice") -> str:
+    """The one definition of ``comb_measure``'s result-key convention:
+    the strategy name, suffixed ``@packer`` for non-default packers (the
+    §VI packing axis).  Callers resolving a measurement by name — e.g. the
+    sweep's baseline lookup — must build the key through this."""
+    return name if packer == "slice" else f"{name}@{packer}"
 
 
 def comb_measure(
@@ -114,18 +126,19 @@ def comb_measure(
 
     ``n_parts`` is the default partition count applied to strategies named
     ``"partitioned"``; pass explicit :class:`StrategyConfig` values to pin
-    per-strategy knobs (partition count, plan-cache policy).  Results are
-    keyed by strategy name; when the same name is swept more than once
-    (e.g. partitioned at several partition counts) later entries get a
+    per-strategy knobs (partition count, packer, plan-cache policy).
+    Results are keyed by strategy name, suffixed ``@packer`` for non-default
+    packers (the §VI packing axis); when the same key is swept more than
+    once (e.g. partitioned at several partition counts) later entries get a
     ``name#pN`` key — and a ``#2``/``#3`` ordinal when name *and* partition
     count repeat — so no measurement is silently dropped.
     """
     results: dict[str, CycleResult] = {}
     for strategy in strategies:
         config = _as_config(strategy, n_parts)
-        label = config.name
+        label = result_label(config.name, config.packer)
         if label in results:
-            label = f"{config.name}#p{config.n_parts}"
+            label = f"{label}#p{config.n_parts}"
         if label in results:
             # same name AND same n_parts swept again (e.g. cache-policy
             # A/B runs): stable ordinal suffix instead of dropping either.

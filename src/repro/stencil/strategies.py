@@ -44,9 +44,9 @@ from repro.core.plan import (
     PLANS,
     CommPlan,
     PlanCache,
-    build_plan,
-    multi_axis_plan,
+    transport_plan,
 )
+from repro.core.transport import get_packer, get_transport
 
 
 # ---------------------------------------------------------------------------
@@ -67,17 +67,28 @@ class StrategyConfig:
                        :class:`~repro.core.plan.PlanCache` instance.
     ``donate``       — donate the input buffer to the step executable
                        (in-place ghost update, the MPI buffer-reuse analogue).
+    ``packer``       — registered :class:`~repro.core.transport.Packer` every
+                       message of this strategy's exchange stages through
+                       (``"slice"`` = inline lax staging, ``"pallas"`` = the
+                       Comb-style copy kernel; a first-class §VI sweep axis).
+    ``transport``    — registered :class:`~repro.core.transport.Transport`
+                       backend moving the packed buffers (``"ppermute"``
+                       in-process; ``"multihost"`` is the multi-process seam).
     """
 
     name: str = "standard"
     n_parts: int = 1
     plan_cache: str | PlanCache = "private"
     donate: bool = True
+    packer: str = "slice"
+    transport: str = "ppermute"
 
     def __post_init__(self):
         assert self.n_parts >= 1, self.n_parts
         if isinstance(self.plan_cache, str):
             assert self.plan_cache in ("private", "shared"), self.plan_cache
+        get_packer(self.packer)  # fail construction, not mid-sweep
+        get_transport(self.transport)
 
     def resolve_cache(self) -> PlanCache | None:
         """``None`` means un-cached private plans (freed by the driver)."""
@@ -142,16 +153,31 @@ class ExchangeStrategy(abc.ABC):
     def n_parts(self) -> int:
         return self.config.n_parts
 
+    @property
+    def packer(self) -> str:
+        return self.config.packer
+
+    @property
+    def transport(self) -> str:
+        return self.config.transport
+
+    #: schedule identity recorded in compiled transport plans
+    schedule_kind: ClassVar[str] = "sequential"
+
     def build_spec(self) -> HaloSpec:
         """The exchange plan inputs, stamped with this strategy's identity.
 
-        Partition count comes from the *config*, not the builder — the
-        builder only describes geometry (which axes, halo width, topology).
-        Strategies opt into partitioned transport via ``uses_partitions``.
+        Partition count, packer, and transport come from the *config*, not
+        the builder — the builder only describes geometry (which axes, halo
+        width, topology).  Strategies opt into partitioned transport via
+        ``uses_partitions``.
         """
         spec = self._spec_builder()
         n_parts = self.n_parts if self.uses_partitions else 1
-        return spec.with_(strategy=self.name, n_parts=n_parts)
+        return spec.with_(
+            strategy=self.name, n_parts=n_parts,
+            packer=self.config.packer, transport=self.config.transport,
+        )
 
     # -- plan assembly ------------------------------------------------------
     def _build_step(self) -> Callable[[jax.Array], jax.Array]:
@@ -310,11 +336,18 @@ class PersistentStrategy(ExchangeStrategy):
     def _make_plan(
         self, example: jax.Array, example_args, donate: tuple[int, ...]
     ) -> CommPlan:
-        """Overridable plan assembly; ``init`` computes the inputs once."""
-        return build_plan(
-            self._build_step, example_args, donate_argnums=donate,
+        """Overridable plan assembly; ``init`` computes the inputs once.
+
+        The compiled executable is a *transport schedule*: its identity
+        (plan name + structural cache key via :meth:`_plan_key` -> spec)
+        records the choreography kind and the packer/transport backends.
+        """
+        return transport_plan(
+            self._build_step, example_args,
+            schedule=self.build_spec().schedule_info(self.schedule_kind),
+            donate_argnums=donate,
             cache=self.config.resolve_cache(), key=self._plan_key(example),
-            name=f"halo_{self.name}",
+            name=f"halo_{self.name}@{self.config.packer}",
         )
 
     def init(self, example: jax.Array) -> None:
@@ -372,13 +405,15 @@ class FusedStrategy(PersistentStrategy):
     fused schedule posts all ``3^D - 1`` face/edge/corner messages from the
     original buffer in a single pass (:func:`repro.core.halo.
     exchange_fused`) and compiles them into ONE multi-axis
-    :class:`~repro.core.plan.CommPlan` (:func:`repro.core.plan.
-    multi_axis_plan`).  No message depends on another, so packs, sends, and
-    unpacks of every axis may overlap — trading D dependent passes for
-    maximal concurrency, the Comb fused-packing analogue.
+    :class:`~repro.core.plan.CommPlan` (a ``"fused"``-kind transport
+    schedule via :func:`repro.core.plan.transport_plan`).  No message
+    depends on another, so packs, sends, and unpacks of every axis may
+    overlap — trading D dependent passes for maximal concurrency, the Comb
+    fused-packing analogue.
     """
 
     name = "fused"
+    schedule_kind = "fused"
 
     def _build_step(self) -> Callable[[jax.Array], jax.Array]:
         spec = self.build_spec()
@@ -393,15 +428,6 @@ class FusedStrategy(PersistentStrategy):
 
         return compat.shard_map(
             step, mesh=self.mesh, in_specs=pspec, out_specs=pspec
-        )
-
-    def _make_plan(
-        self, example: jax.Array, example_args, donate: tuple[int, ...]
-    ) -> CommPlan:
-        return multi_axis_plan(
-            self._build_step, example_args,
-            mesh_axes=self.build_spec().mesh_axes, donate_argnums=donate,
-            cache=self.config.resolve_cache(), key=self._plan_key(example),
         )
 
 

@@ -10,7 +10,16 @@ swept here:
 * **partition count**       (thread count)   — ``StrategyConfig.n_parts``,
   the number of per-face partitions a partitioned exchange posts;
 * **message size**          — the domain's face-slab bytes, varied through
-  ``global_interior``.
+  ``global_interior``;
+* **packer**                — the registered transport-layer pack backend
+  (``"slice"`` inline staging vs the ``"pallas"`` copy kernel,
+  :mod:`repro.core.transport`), swept as a first-class dimension.
+
+Each cell's records carry ``packer`` and ``transport`` fields; the transport
+backend itself (``"ppermute"`` in-process, ``"multihost"`` for
+multi-process meshes) is one ``SweepConfig.transport`` knob — the sweep
+fan-out is already per-subprocess, so pointing it at a multi-host backend
+swaps every cell's wire path without touching the grid.
 
 Every cell measures all requested registered strategies via
 :func:`repro.stencil.comb.comb_measure` and emits one flat record per
@@ -37,13 +46,14 @@ import os
 import re
 import subprocess
 import sys
-from typing import Sequence
+from typing import Any, Sequence
 
 SCHEMA_VERSION = 1
 
 #: keys every sweep record carries (validated by tests/stencil/test_sweep.py)
 RECORD_KEYS = (
     "bench", "schema_version", "strategy", "n_devices", "n_parts",
+    "packer", "transport",
     "global_interior", "mesh_shape", "message_bytes", "us_per_cycle",
     "init_us", "n_cycles", "repeats", "checksum", "speedup_vs_baseline",
 )
@@ -60,6 +70,10 @@ class SweepConfig:
     strategies: tuple[str, ...] = (
         "standard", "persistent", "partitioned", "fused", "overlap",
     )
+    #: transport-layer pack backends to sweep (first entry hosts the baseline)
+    packers: tuple[str, ...] = ("slice", "pallas")
+    #: transport backend every cell's messages move through
+    transport: str = "ppermute"
     baseline: str = "standard"
     halo: int = 1
     n_cycles: int = 20
@@ -70,6 +84,13 @@ class SweepConfig:
         assert self.baseline in self.strategies, (
             f"baseline {self.baseline!r} must be swept"
         )
+        assert self.packers, "at least one packer must be swept"
+        # fail at construction, not minutes later in a worker subprocess
+        from repro.core.transport import get_packer, get_transport
+
+        for p in self.packers:
+            get_packer(p)
+        get_transport(self.transport)
         for n in self.device_counts:
             for size in self.sizes:
                 assert size[0] % n == 0 and size[0] // n >= 3 * self.halo, (
@@ -86,6 +107,7 @@ class SweepConfig:
         raw["part_counts"] = tuple(raw["part_counts"])
         raw["sizes"] = tuple(tuple(s) for s in raw["sizes"])
         raw["strategies"] = tuple(raw["strategies"])
+        raw["packers"] = tuple(raw.get("packers", ("slice",)))
         return cls(**raw)
 
 
@@ -93,12 +115,16 @@ def _size_records(
     config: SweepConfig, size: tuple[int, ...], n_devices: int
 ) -> list[dict]:
     """Measure one (device count, size) slab: non-partitioning strategies
-    once, partitioning strategies once per partition count, all against the
-    same baseline run (per-cell speedup)."""
+    once per packer, partitioning strategies once per (partition count,
+    packer), all against the same baseline run (per-cell speedup)."""
     import jax
 
     from repro.core.compat import make_mesh
-    from repro.stencil.comb import comb_measure, speedup_vs_baseline
+    from repro.stencil.comb import (
+        comb_measure,
+        result_label,
+        speedup_vs_baseline,
+    )
     from repro.stencil.domain import Domain
     from repro.stencil.strategies import StrategyConfig, get_strategy
 
@@ -111,14 +137,17 @@ def _size_records(
         halo=config.halo,
     )
     strat_configs = []
-    for s in config.strategies:
-        if get_strategy(s).uses_partitions:
-            strat_configs.extend(
-                StrategyConfig(name=s, n_parts=p) for p in config.part_counts
-            )
-        else:
-            # the partition-count axis does not apply: measure once per size
-            strat_configs.append(StrategyConfig(name=s))
+    for packer in config.packers:
+        knobs = dict(packer=packer, transport=config.transport)
+        for s in config.strategies:
+            if get_strategy(s).uses_partitions:
+                strat_configs.extend(
+                    StrategyConfig(name=s, n_parts=p, **knobs)
+                    for p in config.part_counts
+                )
+            else:
+                # the partition-count axis does not apply: once per packer
+                strat_configs.append(StrategyConfig(name=s, **knobs))
     results = comb_measure(
         domain,
         strategies=tuple(strat_configs),
@@ -126,7 +155,12 @@ def _size_records(
         repeats=config.repeats,
         seed=config.seed,
     )
-    speedups = speedup_vs_baseline(results, config.baseline)
+    # every cell (incl. both packers) is normalized to the ONE baseline run
+    # — the first-packer `standard` — so the packing axis shows up in the
+    # speedup, not as a moving denominator.
+    speedups = speedup_vs_baseline(
+        results, result_label(config.baseline, config.packers[0])
+    )
     records = []
     for label, res in results.items():
         rec = {
@@ -204,12 +238,33 @@ def is_bench_path(path: str) -> bool:
     return base.startswith("BENCH_") and base.endswith(".json")
 
 
-def write_bench_json(records: Sequence[dict], path: str) -> None:
-    """Serialize records to the repo's ``BENCH_*.json`` interchange format."""
+def write_bench_json(
+    records: Sequence[dict], path: str, *, config: dict | None = None
+) -> None:
+    """Serialize records to the repo's ``BENCH_*.json`` interchange format.
+
+    Without ``config`` the file is the historical bare list of row dicts;
+    with it, records are wrapped as ``{"config": ..., "records": [...]}``
+    so the run's parameters (grid, packers, transport, subprocess timeout)
+    travel with the measurements.  :func:`read_bench_json` accepts both.
+    """
     assert is_bench_path(path), path
+    payload: Any = (
+        list(records) if config is None
+        else {"config": config, "records": list(records)}
+    )
     with open(path, "w") as f:
-        json.dump(list(records), f, indent=1)
+        json.dump(payload, f, indent=1)
         f.write("\n")
+
+
+def read_bench_json(path: str) -> tuple[list[dict], dict | None]:
+    """Load a ``BENCH_*.json`` file: (records, config-block-or-None)."""
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, dict):
+        return list(payload["records"]), payload.get("config")
+    return list(payload), None
 
 
 def summarize(records: Sequence[dict]) -> list[str]:
@@ -217,23 +272,50 @@ def summarize(records: Sequence[dict]) -> list[str]:
     rows = []
     for r in records:
         name = (f"sweep/d{r['n_devices']}/p{r['n_parts']}"
-                f"/m{r['message_bytes']}/{r['strategy']}")
+                f"/m{r['message_bytes']}/{r.get('packer', 'slice')}"
+                f"/{r['strategy']}")
         pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
         rows.append(f"{name},{r['us_per_cycle']:.1f},"
                     f"speedup={pct:.1f}%;init_us={r['init_us']:.0f}")
     return rows
 
 
-def smoke_config(n_devices: int = 4) -> SweepConfig:
-    """A 1-cell in-process grid over ALL registered strategies — the CI
-    ``sweep-smoke`` step: any strategy whose exchange regresses (crashes,
-    diverges, loses its speedup record) surfaces here in seconds."""
+def smoke_config(
+    n_devices: int = 4, packers: tuple[str, ...] | None = None
+) -> SweepConfig:
+    """A 1-cell in-process grid over ALL registered strategies x packers —
+    the CI ``sweep-smoke`` step: any strategy (or packer) whose exchange
+    regresses (crashes, diverges, loses its speedup record) surfaces here
+    in seconds."""
     from repro.stencil.strategies import available_strategies
 
+    kw = {} if packers is None else {"packers": packers}
     return SweepConfig(
         device_counts=(n_devices,), part_counts=(1, 2), sizes=((16, 8),),
         strategies=tuple(available_strategies()), n_cycles=3, repeats=1,
+        **kw,
     )
+
+
+def config_block(
+    config: SweepConfig, *, timeout: float, smoke: bool = False
+) -> dict:
+    """The BENCH config block: the full grid + run parameters (incl. the
+    subprocess ``timeout``) and runtime provenance, so a recorded sweep is
+    re-runnable as-is.  The one schema for every writer (this CLI and
+    ``benchmarks.run``)."""
+    import jax
+
+    from repro.core.transport import MultiHostTransport
+
+    return {
+        "sweep": dataclasses.asdict(config),
+        "timeout": timeout,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "n_processes": jax.process_count(),
+        "multihost": MultiHostTransport.is_multihost(),
+    }
 
 
 def main(argv: Sequence[str] | None = None) -> None:
@@ -246,7 +328,16 @@ def main(argv: Sequence[str] | None = None) -> None:
                     help="2-cell smoke grid instead of the full default grid")
     ap.add_argument("--smoke", action="store_true",
                     help="1-cell in-process grid over all registered "
-                         "strategies (no subprocess fan-out; CI smoke)")
+                         "strategies x packers (no subprocess fan-out; CI "
+                         "smoke)")
+    ap.add_argument("--packer", metavar="NAME",
+                    help="restrict the packer axis to ONE registered packer "
+                         "(default: sweep the config's packers, normally "
+                         "slice AND pallas)")
+    ap.add_argument("--timeout", type=float, default=1200.0,
+                    help="per-subprocess timeout (seconds) for the "
+                         "device-count fan-out; recorded in the BENCH "
+                         "config block")
     args = ap.parse_args(argv)
 
     if args.worker:
@@ -256,6 +347,13 @@ def main(argv: Sequence[str] | None = None) -> None:
 
     if not is_bench_path(args.out):
         ap.error(f"--out must be named BENCH_*.json, got {args.out!r}")
+
+    if args.packer:
+        from repro.core.transport import available_packers
+
+        if args.packer not in available_packers():
+            ap.error(f"--packer must be one of {available_packers()}, "
+                     f"got {args.packer!r}")
 
     if args.smoke:
         # in-process: the device count must be pinned before jax
@@ -272,8 +370,14 @@ def main(argv: Sequence[str] | None = None) -> None:
                 os.environ.get("XLA_FLAGS", "")
                 + f" --xla_force_host_platform_device_count={n}"
             ).strip()
-        records = sweep_cells(smoke_config(n), n_devices=n)
-        write_bench_json(records, args.out)
+        config = smoke_config(
+            n, packers=(args.packer,) if args.packer else None
+        )
+        records = sweep_cells(config, n_devices=n)
+        write_bench_json(
+            records, args.out,
+            config=config_block(config, timeout=args.timeout, smoke=True),
+        )
         for row in summarize(records):
             print(row)
         print(f"# smoke: {len(records)} records -> {args.out}")
@@ -284,8 +388,11 @@ def main(argv: Sequence[str] | None = None) -> None:
         config = dataclasses.replace(
             config, device_counts=(2, 4), part_counts=(1, 2), sizes=((32, 16),)
         )
-    records = run_sweep(config)
-    write_bench_json(records, args.out)
+    if args.packer:
+        config = dataclasses.replace(config, packers=(args.packer,))
+    records = run_sweep(config, timeout=args.timeout)
+    write_bench_json(records, args.out,
+                     config=config_block(config, timeout=args.timeout))
     for row in summarize(records):
         print(row)
     print(f"# wrote {len(records)} records -> {args.out}")

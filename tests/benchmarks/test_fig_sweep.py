@@ -4,7 +4,10 @@ Synthesizes a small multi-cell sweep record set (no measurement — schema
 only), round-trips it through the ``BENCH_*.json`` interchange format, and
 validates what ``benchmarks.figures.fig_sweep`` emits: one row per
 (strategy, cell), finite speedups, a baseline present in every cell, curve
-points along all three §VI axes, and the Fig. 6-8 paper-claim comparisons.
+points along all four sweep axes (devices/parts/msgsize + the transport
+layer's packer axis), the raw-latency overlays of fused/overlap against the
+paper trio at the larger message sizes, and the Fig. 6-8 paper-claim
+comparisons.
 """
 
 import json
@@ -18,13 +21,16 @@ from repro.stencil.sweep import RECORD_KEYS, SCHEMA_VERSION, write_bench_json
 STRATEGIES = ("standard", "persistent", "partitioned", "fused", "overlap")
 
 
-def _record(strategy, n_devices, size, n_parts, us, base_us):
+def _record(strategy, n_devices, size, n_parts, us, base_us,
+            packer="slice"):
     return {
         "bench": "stencil_sweep",
         "schema_version": SCHEMA_VERSION,
         "strategy": strategy,
         "n_devices": n_devices,
         "n_parts": n_parts,
+        "packer": packer,
+        "transport": "ppermute",
         "global_interior": list(size),
         "mesh_shape": [n_devices],
         "message_bytes": size[1] * 4,
@@ -38,23 +44,26 @@ def _record(strategy, n_devices, size, n_parts, us, base_us):
 
 
 def _synth_records():
-    """Two device counts x two sizes; partitioned swept at p=1,2."""
+    """Two device counts x two sizes x two packers; partitioned at p=1,2."""
     records = []
     for n_devices in (2, 4):
         for size in ((16, 8), (32, 16)):
             base_us = 100.0 * n_devices
-            records.append(
-                _record("standard", n_devices, size, 1, base_us, base_us)
-            )
-            for i, s in enumerate(("persistent", "fused", "overlap")):
+            for pk, gain in (("slice", 1.0), ("pallas", 1.25)):
                 records.append(
-                    _record(s, n_devices, size, 1, base_us / (2 + i), base_us)
+                    _record("standard", n_devices, size, 1, base_us / gain,
+                            base_us, pk)
                 )
-            for p in (1, 2):
-                records.append(
-                    _record("partitioned", n_devices, size, p,
-                            base_us / (3 + p), base_us)
-                )
+                for i, s in enumerate(("persistent", "fused", "overlap")):
+                    records.append(
+                        _record(s, n_devices, size, 1,
+                                base_us / (2 + i) / gain, base_us, pk)
+                    )
+                for p in (1, 2):
+                    records.append(
+                        _record("partitioned", n_devices, size, p,
+                                base_us / (3 + p) / gain, base_us, pk)
+                    )
     return records
 
 
@@ -94,10 +103,11 @@ def test_one_row_per_strategy_cell(emitted):
     assert len(out["rows"]) == len(records)
     names = [name for name, _, _ in out["rows"]]
     assert len(names) == len(set(names))  # (strategy, cell) keys are unique
-    # and each row's name encodes the full cell coordinate
+    # and each row's name encodes the full cell coordinate incl. packer
     for name in names:
-        _, d, p, m, strategy = name.split("/")
+        _, d, p, m, packer, strategy = name.split("/")
         assert strategy in STRATEGIES
+        assert packer in ("slice", "pallas")
         assert d.startswith("d") and p.startswith("p") and m.startswith("m")
 
 
@@ -111,16 +121,39 @@ def test_no_nan_speedups(emitted):
             assert math.isfinite(pct)
 
 
-def test_curves_cover_all_three_sweep_axes(emitted):
+def test_curves_cover_all_four_sweep_axes(emitted):
     _, out = emitted
-    assert set(out["curves"]) == {"devices", "parts", "msgsize"}
+    assert set(out["curves"]) == {"devices", "parts", "msgsize", "packer"}
     assert {d for _, d in out["curves"]["devices"]} == {2, 4}
     # the partition axis reaches 2 only for the partitioning strategy
     assert ("partitioned", 2) in out["curves"]["parts"]
     assert ("fused", 2) not in out["curves"]["parts"]
-    # the baseline never gets a curve point (its speedup is 1 by definition)
-    for curve in out["curves"].values():
-        assert all(s != "standard" for s, _ in curve)
+    # the baseline never gets a point on the paper's three axes (its
+    # speedup is 1 by definition)...
+    for axis in ("devices", "parts", "msgsize"):
+        assert all(s != "standard" for s, _ in out["curves"][axis])
+    # ...but DOES on the packer axis: standard@pallas vs standard@slice is
+    # the packing effect itself
+    packer_curve = out["curves"]["packer"]
+    assert {pk for _, pk in packer_curve} == {"slice", "pallas"}
+    assert packer_curve[("standard", "slice")] == pytest.approx(0.0)
+    assert packer_curve[("standard", "pallas")] > 0.0
+
+
+def test_raw_latency_overlays_at_larger_sizes(emitted):
+    """ROADMAP item: absolute fused/overlap times overlaid on the trio at
+    the larger message sizes — not just speedup curves."""
+    _, out = emitted
+    assert out["raw"], "no raw-latency overlay rows"
+    sizes = {int(name.split("/")[2][1:]) for name, _, _ in out["raw"]}
+    all_sizes = {r["message_bytes"] for r in _synth_records()}
+    assert sizes == {max(all_sizes)}  # only the upper half of 2 sizes
+    strategies = {s for _, _, s in out["raw"]}
+    assert {"fused", "overlap"} <= strategies  # overlaid on...
+    assert {"standard", "persistent", "partitioned"} <= strategies  # ...the trio
+    for name, us, _ in out["raw"]:
+        assert name.startswith("fig_sweep/raw/m")
+        assert math.isfinite(us) and us > 0
 
 
 def test_claims_compare_measured_to_paper(emitted):

@@ -69,3 +69,38 @@ def test_standard_vs_persistent_numerics():
     plan = CommPlan(step, example_args=(jax.ShapeDtypeStruct(x.shape, x.dtype),))
     b = plan.start(x)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_transport_plan_records_schedule_identity():
+    """A compiled transport schedule's plan name carries the choreography
+    kind + packer/transport backends (and caches under the given key)."""
+    from repro.core.plan import transport_plan
+    from repro.core.transport import ScheduleInfo
+
+    cache = PlanCache()
+    info = ScheduleInfo("sequential", ("px",), packer="pallas",
+                        transport="ppermute")
+    x = jnp.arange(6.0)
+
+    def factory():
+        return lambda a: a + 1
+
+    args = (jax.ShapeDtypeStruct(x.shape, x.dtype),)
+    plan = transport_plan(factory, args, schedule=info, cache=cache,
+                          key=("t", info))
+    assert plan.name == "sequential[px]@pallas/ppermute"
+    again = transport_plan(factory, args, schedule=info, cache=cache,
+                           key=("t", info))
+    assert again is plan and cache.stats.inits == 1  # MPI_Start, not re-init
+    np.testing.assert_array_equal(np.asarray(plan.start(x)),
+                                  np.arange(6.0) + 1)
+    cache.free_all()
+
+
+def test_transport_plan_rejects_duplicate_axes():
+    from repro.core.plan import transport_plan
+    from repro.core.transport import ScheduleInfo
+
+    with pytest.raises(AssertionError, match="duplicate"):
+        transport_plan(lambda: (lambda a: a), (),
+                       schedule=ScheduleInfo("fused", ("px", "px")))

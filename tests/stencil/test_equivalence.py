@@ -9,11 +9,14 @@ values are only ever *copied*, never combined, so the assertion is full-array
 bitwise equality — a far stronger oracle than the historical mean-checksum
 agreement check in ``comb_measure``.
 
-The property draws (ndim, domain shape, halo width, n_parts, strategy)
-through :mod:`repro.testing` (real hypothesis when installed, the
+The property draws (ndim, domain shape, halo width, n_parts, strategy,
+packer) through :mod:`repro.testing` (real hypothesis when installed, the
 deterministic seeded fallback otherwise); a deterministic parametrized pass
-guarantees every registered strategy is exercised on 1-D/2-D/3-D regardless
-of what the random draws hit.
+guarantees every registered strategy is exercised on 1-D/2-D/3-D under BOTH
+transport-layer packers (``slice`` inline staging and the ``pallas`` copy
+kernel, which falls back to its jnp oracle on CPU — so this full matrix is
+CI-runnable on the 8 virtual devices) regardless of what the random draws
+hit.
 """
 
 import zlib
@@ -85,12 +88,17 @@ def _build_domain(ndim, mesh_idx, halo, extents):
     )
 
 
-def _assert_strategy_matches_reference(domain, strategy, n_parts, seed):
+PACKERS = ("slice", "pallas")
+
+
+def _assert_strategy_matches_reference(
+    domain, strategy, n_parts, seed, packer="slice"
+):
     rng = np.random.default_rng(seed)
     interior = rng.normal(size=domain.global_interior).astype(domain.dtype)
     want = reference_exchange(domain, interior)
     drv = make_driver(
-        StrategyConfig(name=strategy, n_parts=n_parts),
+        StrategyConfig(name=strategy, n_parts=n_parts, packer=packer),
         domain.mesh, domain.halo_spec, ndim=len(domain.global_interior),
     )
     try:
@@ -101,7 +109,8 @@ def _assert_strategy_matches_reference(domain, strategy, n_parts, seed):
         drv.free()
     np.testing.assert_array_equal(
         got, want,
-        err_msg=f"{strategy} n_parts={n_parts} halo={domain.halo} "
+        err_msg=f"{strategy} n_parts={n_parts} packer={packer} "
+                f"halo={domain.halo} "
                 f"interior={domain.global_interior} "
                 f"mesh={dict(domain.mesh.shape)}",
     )
@@ -117,9 +126,10 @@ def _assert_strategy_matches_reference(domain, strategy, n_parts, seed):
     e2=st.integers(1, 3),
     n_parts=st.integers(1, 6),
     strategy=st.sampled_from(available_strategies()),
+    packer=st.sampled_from(PACKERS),
 )
 def test_any_strategy_matches_reference_roll(
-    ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy
+    ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy, packer
 ):
     domain = _build_domain(ndim, mesh_idx, halo, (e0, e1, e2))
     # stable across processes (hash() of a str varies with PYTHONHASHSEED,
@@ -127,7 +137,7 @@ def test_any_strategy_matches_reference_roll(
     seed = zlib.crc32(
         repr((ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy)).encode()
     )
-    _assert_strategy_matches_reference(domain, strategy, n_parts, seed)
+    _assert_strategy_matches_reference(domain, strategy, n_parts, seed, packer)
 
 
 # deterministic floor: every registered strategy, every dimensionality,
@@ -139,9 +149,12 @@ GRID = [
 ]
 
 
+@pytest.mark.parametrize("packer", PACKERS)
 @pytest.mark.parametrize("strategy", available_strategies())
 @pytest.mark.parametrize("ndim,shape,interior,halo", GRID)
-def test_every_strategy_on_8_devices(strategy, ndim, shape, interior, halo):
+def test_every_strategy_on_8_devices(strategy, packer, ndim, shape, interior,
+                                     halo):
+    """Acceptance: the full strategy x packer matrix against the oracle."""
     mesh = make_mesh(
         shape, AXIS_NAMES[: len(shape)],
         devices=jax.devices()[: int(np.prod(shape))],
@@ -151,7 +164,9 @@ def test_every_strategy_on_8_devices(strategy, ndim, shape, interior, halo):
         mesh_axes=AXIS_NAMES[: len(shape)] + (None,) * (ndim - len(shape)),
         halo=halo,
     )
-    _assert_strategy_matches_reference(domain, strategy, n_parts=3, seed=7)
+    _assert_strategy_matches_reference(
+        domain, strategy, n_parts=3, seed=7, packer=packer
+    )
 
 
 def test_reference_roll_is_self_consistent():

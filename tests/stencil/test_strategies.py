@@ -295,3 +295,86 @@ def test_legacy_facade_resolves_registry_drivers():
     )
     assert drv.strategy == "partitioned" and drv.n_parts == 3
     assert isinstance(drv, get_strategy("partitioned"))
+
+
+# ---------------------------------------------------------------------------
+# transport-layer knobs (packer / transport)
+# ---------------------------------------------------------------------------
+
+
+def test_config_rejects_unknown_packer_and_transport():
+    with pytest.raises(KeyError, match="unknown packer"):
+        StrategyConfig(name="persistent", packer="zstd")
+    with pytest.raises(KeyError, match="unknown transport"):
+        StrategyConfig(name="persistent", transport="nccl")
+
+
+def test_packer_flows_into_spec_and_plan_identity():
+    """The config's packer/transport stamp the built spec, so persistent
+    plan keys (derived from the spec) distinguish pipelines."""
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    a = make_driver(StrategyConfig(name="persistent"), mesh,
+                    dom.halo_spec, ndim=2)
+    b = make_driver(StrategyConfig(name="persistent", packer="pallas"),
+                    mesh, dom.halo_spec, ndim=2)
+    assert a.build_spec().packer == "slice"
+    assert b.build_spec().packer == "pallas"
+    assert b.build_spec().transport == "ppermute"
+    x = dom.random(0)
+    assert a._plan_key(x) != b._plan_key(x)
+
+
+def test_shared_cache_keeps_packers_apart():
+    """Same geometry, different packer: two distinct persistent plans."""
+    cache = PlanCache()
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    for packer in ("slice", "pallas"):
+        drv = make_driver(
+            StrategyConfig(name="persistent", plan_cache=cache,
+                           packer=packer),
+            mesh, dom.halo_spec, ndim=2,
+        )
+        drv.wait(drv.step(dom.random(0)))
+        drv.free()
+    assert cache.stats.inits == 2 and len(cache) == 2
+    cache.free_all()
+
+
+def test_comb_measure_labels_distinguish_packers():
+    from repro.stencil import comb_measure
+
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 8), ("px", None))
+    results = comb_measure(
+        dom,
+        strategies=(
+            "standard",
+            StrategyConfig(name="standard", packer="pallas"),
+            StrategyConfig(name="partitioned", n_parts=2, packer="pallas"),
+        ),
+        n_cycles=2, repeats=1,
+    )
+    assert set(results) == {
+        "standard", "standard@pallas", "partitioned@pallas",
+    }
+    assert results["standard@pallas"].packer == "pallas"
+    assert results["standard"].packer == "slice"
+    assert results["partitioned@pallas"].transport == "ppermute"
+
+
+def test_all_strategies_agree_under_pallas_packer():
+    """Cross-strategy equality still holds when every message stages
+    through the pallas packer (CPU oracle fallback: bit-identical)."""
+    mesh = _mesh_1d()
+    dom = _domain(mesh, (16, 12), ("px", None))
+    ref = _exchange_once(dom, "standard", 1)
+    for strategy in available_strategies():
+        drv = make_driver(
+            StrategyConfig(name=strategy, n_parts=3, packer="pallas"),
+            dom.mesh, dom.halo_spec, ndim=2,
+        )
+        got = np.asarray(drv.wait(drv.step(dom.random(0))))
+        drv.free()
+        np.testing.assert_array_equal(got, ref, err_msg=strategy)

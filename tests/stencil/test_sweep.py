@@ -14,6 +14,7 @@ import pytest
 from repro.stencil.sweep import (
     RECORD_KEYS,
     SweepConfig,
+    read_bench_json,
     run_sweep,
     summarize,
     sweep_cells,
@@ -31,11 +32,12 @@ SMALL = SweepConfig(
 
 
 def _expected_cells(cfg: SweepConfig) -> int:
-    """Partitioning strategies get one record per partition count; the
-    partition-count axis does not apply to the others (one record each)."""
+    """Partitioning strategies get one record per (partition count, packer);
+    the partition-count axis does not apply to the others (one record per
+    packer each)."""
     from repro.stencil.strategies import get_strategy
 
-    return sum(
+    return len(cfg.packers) * sum(
         len(cfg.part_counts) if get_strategy(s).uses_partitions else 1
         for s in cfg.strategies
     )
@@ -75,7 +77,8 @@ def test_init_only_charged_to_non_standard(records):
 
 def test_speedup_vs_baseline_per_cell(records):
     for rec in records:
-        if rec["strategy"] == "standard":
+        if rec["strategy"] == "standard" and rec["packer"] == "slice":
+            # the one denominator: the first-packer standard run
             assert rec["speedup_vs_baseline"] == pytest.approx(1.0)
         else:
             assert rec["speedup_vs_baseline"] > 0.0
@@ -85,8 +88,8 @@ def test_no_duplicate_coordinates(records):
     """Non-partitioned strategies must not be re-measured per partition cell
     — every (strategy, n_parts, size, devices) coordinate appears once."""
     coords = [
-        (r["strategy"], r["n_parts"], tuple(r["global_interior"]),
-         r["n_devices"])
+        (r["strategy"], r["n_parts"], r["packer"],
+         tuple(r["global_interior"]), r["n_devices"])
         for r in records
     ]
     assert len(coords) == len(set(coords)), coords
@@ -100,12 +103,28 @@ def test_partition_axis_swept(records):
 
 
 def test_new_overlap_strategies_in_sweep_output(records):
-    """Acceptance: fused and overlap appear with finite speedups."""
+    """Acceptance: fused and overlap appear with finite speedups, once per
+    swept packer."""
     for strategy in ("fused", "overlap"):
         rows = [r for r in records if r["strategy"] == strategy]
-        assert len(rows) == 1, strategy
-        sp = rows[0]["speedup_vs_baseline"]
-        assert np.isfinite(sp) and sp > 0, (strategy, sp)
+        assert len(rows) == len(SMALL.packers), strategy
+        assert {r["packer"] for r in rows} == set(SMALL.packers)
+        for row in rows:
+            sp = row["speedup_vs_baseline"]
+            assert np.isfinite(sp) and sp > 0, (strategy, sp)
+
+
+def test_packer_axis_swept(records):
+    """Acceptance: every cell exists under BOTH packers, with the transport
+    backend recorded."""
+    assert {r["packer"] for r in records} == {"slice", "pallas"}
+    assert {r["transport"] for r in records} == {"ppermute"}
+    by_packer = {}
+    for r in records:
+        by_packer.setdefault(r["packer"], set()).add(
+            (r["strategy"], r["n_parts"])
+        )
+    assert by_packer["slice"] == by_packer["pallas"]
 
 
 def test_checksums_agree_within_each_cell(records):
@@ -137,6 +156,8 @@ def test_summarize_emits_run_py_rows(records):
     for row in rows:
         name, us, derived = row.split(",")
         assert name.startswith("sweep/d4/p")
+        packer = name.split("/")[4]
+        assert packer in SMALL.packers
         float(us)
         assert derived.startswith("speedup=")
 
@@ -146,12 +167,35 @@ def test_config_rejects_undecomposable_grid():
         SweepConfig(device_counts=(3,), sizes=((16, 8),))  # 16 % 3 != 0
     with pytest.raises(AssertionError):
         SweepConfig(strategies=("persistent",))  # baseline not swept
+    with pytest.raises(AssertionError):
+        SweepConfig(packers=())  # at least one packer
+
+
+def test_bench_json_config_block_roundtrip(tmp_path, records):
+    """The CLI's config-block form: records AND run parameters round-trip;
+    the legacy bare-list form still reads back."""
+    path = tmp_path / "BENCH_block.json"
+    write_bench_json(records, str(path),
+                     config={"timeout": 90.0, "smoke": True})
+    got, cfg = read_bench_json(str(path))
+    assert got == records
+    assert cfg == {"timeout": 90.0, "smoke": True}
+    bare = tmp_path / "BENCH_bare.json"
+    write_bench_json(records, str(bare))
+    got, cfg = read_bench_json(str(bare))
+    assert got == records and cfg is None
 
 
 def test_config_json_roundtrip():
     cfg = SweepConfig(device_counts=(2, 4), part_counts=(1, 2),
-                      sizes=((32, 16),))
+                      sizes=((32, 16),), packers=("pallas",))
     assert SweepConfig.from_json(cfg.to_json()) == cfg
+    # a pre-packer-axis config json (no "packers" key) defaults to slice
+    import json as _json
+
+    raw = _json.loads(cfg.to_json())
+    del raw["packers"]
+    assert SweepConfig.from_json(_json.dumps(raw)).packers == ("slice",)
 
 
 @pytest.mark.slow
