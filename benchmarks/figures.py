@@ -144,6 +144,10 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
     def packer_of(r: dict) -> str:
         return r.get("packer", "slice")  # pre-transport-layer records
 
+    def wire_bytes_of(r: dict) -> int:
+        # pre-compression records shipped the face dtype unchanged
+        return r.get("wire_bytes", r["message_bytes"])
+
     # --- per-(strategy, cell) rows; every cell must carry its baseline ----
     cells: dict[tuple, set] = {}
     rows = []
@@ -180,9 +184,13 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         # the baseline stays in: standard@pallas vs standard@slice IS the
         # packing effect the transport layer makes sweepable.
         "packer": curve(packer_of, keep_baseline=True),
+        # wire-compression axis: bytes a face actually costs on the wire
+        # under each record's packer (bf16/scaled-int8 shrink it) — the
+        # baseline stays in for the same reason as the packer axis.
+        "wirebytes": curve(wire_bytes_of, keep_baseline=True),
     }
     for axis, fig in (("devices", 6), ("parts", 7), ("msgsize", 8),
-                      ("packer", None)):
+                      ("packer", None), ("wirebytes", None)):
         for (strategy, coord), pct in sorted(curves[axis].items()):
             fig_tag = f";paper_fig={fig}" if fig else ""
             emit(f"fig_sweep/curve_{axis}/{strategy}/{coord}", None,

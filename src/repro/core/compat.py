@@ -30,6 +30,7 @@ __all__ = [
     "axis_type_auto",
     "axis_size",
     "cost_analysis_dict",
+    "enable_cpu_collectives",
 ]
 
 
@@ -132,6 +133,22 @@ def pallas_tpu_compiler_params(**kwargs: Any) -> Any:
     if cls is None:
         cls = pltpu.TPUCompilerParams
     return cls(**kwargs)
+
+
+def enable_cpu_collectives() -> None:
+    """Turn on cross-process collectives for the CPU backend (gloo).
+
+    jax 0.4.x needs ``jax_cpu_collectives_implementation`` flipped to
+    ``"gloo"`` *before* backend init or multi-process ``ppermute`` on CPU
+    fails with "Multiprocess computations aren't implemented on the CPU
+    backend"; newer jax selects a CPU collectives implementation
+    automatically (and may drop the option), so unknown-option errors are
+    swallowed.  Must run before the first device query of the process.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):
+        pass  # newer jax: option gone, collectives already wired
 
 
 def cost_analysis_dict(compiled: Any) -> dict:

@@ -19,7 +19,11 @@ a :class:`Packer` and a :class:`Transport` chosen by *name*:
   the halo code historically did; ``"pallas"`` routes through the
   :mod:`repro.kernels.pack` VMEM-tiled copy kernel (Comb's OpenMP pack
   kernels), falling back to its jnp oracle off-TPU so CPU CI exercises
-  identical semantics.
+  identical semantics.  ``"bf16"`` and ``"scaled-int8"`` are the
+  wire-compressed packers: the slab is re-encoded for the wire (bf16 cast /
+  fixed-scale int8 quantization) and the block dtype restored on unpack —
+  lossy within :meth:`Packer.wire_tolerance`, shrinking
+  :meth:`Packer.wire_itemsize` (the sweep's wire-bytes axis).
 * **Transport** — how a packed buffer crosses the mesh.  ``"ppermute"`` is
   the in-process XLA backend (one ``lax.ppermute`` per hop — the native ICI
   neighbor transport on a TPU torus).  ``"multihost"`` is the registered
@@ -50,6 +54,8 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import os
+import warnings
 from typing import Any, Callable, ClassVar, Iterable, Mapping, Sequence
 
 import jax
@@ -228,6 +234,18 @@ class Packer(abc.ABC):
     ) -> jax.Array:
         """Write a received wire buffer into the ghost window of ``x``."""
 
+    # -- wire-format introspection (the sweep's wire-bytes axis) ------------
+    def wire_itemsize(self, dtype: Any) -> int:
+        """Bytes one block element occupies on the wire (compressed packers
+        override; exact packers ship the block dtype unchanged)."""
+        return jnp.dtype(dtype).itemsize
+
+    def wire_tolerance(self, dtype: Any) -> tuple[float, float]:
+        """``(rtol, atol)`` bound on ``unpack(pack(window))`` vs the window
+        for blocks of ``dtype``; ``(0.0, 0.0)`` means the wire is bit-exact
+        (the equivalence harness then asserts full bitwise equality)."""
+        return (0.0, 0.0)
+
 
 @dataclasses.dataclass(frozen=True)
 class SlicePacker(Packer):
@@ -280,6 +298,76 @@ class PallasPacker(Packer):
         return lax.dynamic_update_slice(x, ghost, tuple(dst_start))
 
 
+@dataclasses.dataclass(frozen=True)
+class Bf16Packer(Packer):
+    """Wire-compressed packer: the slab crosses the wire as ``bfloat16``.
+
+    ``pack`` stages the window through the :mod:`repro.kernels.pack` slab
+    kernel with a bf16 wire dtype (halving wire bytes for f32 fields);
+    ``unpack`` restores the block dtype exactly.  Lossy for dtypes wider
+    than bf16: one round-trip keeps 8 bits of significand (round-to-nearest
+    error <= 2^-8 relative — half an ulp), and :meth:`wire_tolerance`
+    documents 2x that bound (2^-7).
+    """
+
+    name: str = "bf16"
+
+    def pack(self, x, start, shape):
+        from repro.kernels.pack.ops import pack_slab
+
+        limits = [s + n for s, n in zip(start, shape)]
+        slab = lax.slice(x, list(start), limits)
+        return pack_slab(slab, out_dtype=jnp.bfloat16)
+
+    def unpack(self, x, buf, dst_start, shape):
+        from repro.kernels.pack.ops import unpack_slab
+
+        ghost = unpack_slab(buf, tuple(shape), out_dtype=x.dtype)
+        return lax.dynamic_update_slice(x, ghost, tuple(dst_start))
+
+    def wire_itemsize(self, dtype):
+        return 2  # the wire dtype is always bfloat16
+
+    def wire_tolerance(self, dtype):
+        if jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16):
+            return (0.0, 0.0)  # the cast is the identity
+        return (1.0 / 128.0, 1e-6)  # 2x the bf16 half-ulp relative error
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledInt8Packer(Packer):
+    """Wire-compressed packer: fixed-scale symmetric int8 quantization.
+
+    ``pack`` maps the slab onto the int8 grid ``round(x * 127 / amax)``
+    (clipped to ±127); ``unpack`` rescales and restores the block dtype.
+    The wire carries one byte per element — a 4x reduction for f32 fields.
+    Quantization error is <= ``amax/254`` per element for ``|x| <= amax``;
+    values beyond ``±amax`` saturate, so ``amax`` must cover the field's
+    dynamic range (the default spans the unit-normal test fields by 8
+    standard deviations).
+    """
+
+    name: str = "scaled-int8"
+    amax: float = 8.0
+
+    def pack(self, x, start, shape):
+        limits = [s + n for s, n in zip(start, shape)]
+        slab = lax.slice(x, list(start), limits).astype(jnp.float32)
+        q = jnp.clip(jnp.round(slab * (127.0 / self.amax)), -127.0, 127.0)
+        return q.astype(jnp.int8)
+
+    def unpack(self, x, buf, dst_start, shape):
+        assert tuple(buf.shape) == tuple(shape), (buf.shape, shape)
+        vals = (buf.astype(jnp.float32) * (self.amax / 127.0)).astype(x.dtype)
+        return lax.dynamic_update_slice(x, vals, tuple(dst_start))
+
+    def wire_itemsize(self, dtype):
+        return 1
+
+    def wire_tolerance(self, dtype):
+        return (0.0, self.amax / 127.0)  # 2x the half-step rounding bound
+
+
 # ---------------------------------------------------------------------------
 # Transport: how packed buffers cross the mesh
 # ---------------------------------------------------------------------------
@@ -296,6 +384,10 @@ class Transport(abc.ABC):
     ) -> jax.Array:
         """One hop: send ``buf`` along ``axis_name`` per the (src, dst)
         table; shards receiving nothing get zeros (XLA ppermute rule)."""
+
+    def validate(self) -> None:
+        """Runtime sanity check, run when the backend is resolved for a
+        delivery (cheap: called per exchange trace, not per message)."""
 
     def route(self, buf: jax.Array, hops: Iterable[Hop]) -> jax.Array:
         """Chain the hops of one message (edges/corners hop per axis)."""
@@ -318,23 +410,52 @@ class PpermuteTransport(Transport):
 
 @dataclasses.dataclass(frozen=True)
 class MultiHostTransport(PpermuteTransport):
-    """The multi-host seam: same schedule, mesh spanning processes.
+    """The multi-host backend: same schedule, mesh spanning processes.
 
-    ``lax.ppermute`` inside a global ``shard_map`` lowers to DCN/ICI
-    collective-permutes when the mesh's devices belong to several
-    processes, so this backend runs today's schedules unchanged under
-    ``jax.distributed``; a dedicated backend (e.g. per-hop NCCL rings or
-    MPI partitioned sends) overrides :meth:`permute` and registers under
-    its own name.  :meth:`is_multihost` reports whether the current
-    runtime actually spans processes; the sweep stamps it into the BENCH
-    config block (``repro.stencil.sweep.config_block``).
+    ``lax.ppermute`` inside a global ``shard_map`` lowers to cross-process
+    collective-permutes (DCN/ICI on real clusters, gloo on the CPU grids
+    ``repro.launch.stencil`` boots) when the mesh's devices belong to
+    several processes, so this backend runs today's schedules unchanged
+    under ``jax.distributed``; a dedicated backend (e.g. per-hop NCCL rings
+    or MPI partitioned sends) overrides :meth:`permute` and registers under
+    its own name.  :meth:`is_multihost` reports whether the current runtime
+    actually spans processes; the sweep stamps it into the BENCH records
+    and config block (``repro.stencil.sweep.config_block``).
+
+    Selecting ``multihost`` in a single-process runtime outside tests warns
+    once (:meth:`validate`): the schedule still runs — it degenerates to
+    in-process ``ppermute`` — but nothing crosses a host boundary, which is
+    almost never what a caller asking for this backend means.  Launch a
+    real grid with ``repro.launch.stencil`` (or set
+    ``REPRO_ALLOW_SINGLE_PROCESS_MULTIHOST=1`` to silence deliberately).
     """
 
     name: str = "multihost"
 
+    #: one warning per process, not one per exchange trace
+    _warned_single_process: ClassVar[bool] = False
+
     @staticmethod
     def is_multihost() -> bool:
         return jax.process_count() > 1
+
+    def validate(self) -> None:
+        if self.is_multihost() or MultiHostTransport._warned_single_process:
+            return
+        if (os.environ.get("PYTEST_CURRENT_TEST")
+                or os.environ.get("REPRO_ALLOW_SINGLE_PROCESS_MULTIHOST")):
+            return
+        MultiHostTransport._warned_single_process = True
+        warnings.warn(
+            "transport='multihost' selected but jax.process_count() == 1: "
+            "no message will cross a process boundary (the schedule runs "
+            "as in-process ppermute).  Boot a real process grid with "
+            "`python -m repro.launch.stencil --processes N ...` or the "
+            "sweep's --processes flag; set "
+            "REPRO_ALLOW_SINGLE_PROCESS_MULTIHOST=1 if this is deliberate.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -398,13 +519,15 @@ def resolve_packer(packer: str | Packer) -> Packer:
 
 
 def resolve_transport(transport: str | Transport) -> Transport:
-    if isinstance(transport, Transport):
-        return transport
-    return get_transport(transport)
+    t = transport if isinstance(transport, Transport) else get_transport(transport)
+    t.validate()
+    return t
 
 
 register_packer(SlicePacker())
 register_packer(PallasPacker())
+register_packer(Bf16Packer())
+register_packer(ScaledInt8Packer())
 register_transport(PpermuteTransport())
 register_transport(MultiHostTransport())
 

@@ -1,4 +1,4 @@
-from repro.stencil.domain import Domain, periodic_oracle_step
+from repro.stencil.domain import Domain, periodic_oracle_step, reference_exchange
 from repro.stencil.exchange import ExchangeDriver
 from repro.stencil.strategies import (
     ExchangeStrategy,
@@ -30,7 +30,7 @@ def __getattr__(name):
     raise AttributeError(name)
 
 __all__ = [
-    "Domain", "periodic_oracle_step", "ExchangeDriver",
+    "Domain", "periodic_oracle_step", "reference_exchange", "ExchangeDriver",
     "ExchangeStrategy", "StrategyConfig", "available_strategies",
     "get_strategy", "make_driver", "register_strategy",
     "CycleResult", "comb_measure", "result_label", "run_cycles",

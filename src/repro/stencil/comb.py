@@ -30,6 +30,25 @@ from repro.stencil.strategies import (
 )
 
 
+def _mean_checksum(x: jax.Array) -> float:
+    """Mean of the (possibly multi-process) stored array, on every rank.
+
+    On a ``jax.distributed`` grid op-by-op numpy conversion of a
+    non-addressable global array is illegal; a jitted fully-replicated
+    reduction gives every rank the identical scalar, so the cross-strategy
+    divergence check below stays meaningful across processes.
+    """
+    if getattr(x, "is_fully_addressable", True):
+        return float(np.asarray(jax.numpy.mean(x)))
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    out = jax.jit(
+        jax.numpy.mean,
+        out_shardings=NamedSharding(x.sharding.mesh, PartitionSpec()),
+    )(x)
+    return float(np.asarray(out))
+
+
 @dataclasses.dataclass
 class CycleResult:
     strategy: str
@@ -79,7 +98,7 @@ def run_cycles(
             x = driver.step(x)
         driver.wait(x)  # Waitall before stopping the clock
         times.append((time.perf_counter() - t0) / n_cycles * 1e6)
-    checksum = float(np.asarray(jax.numpy.mean(x)))
+    checksum = _mean_checksum(x)
     return CycleResult(
         strategy=driver.strategy,
         us_per_cycle=float(np.mean(times)),
@@ -158,11 +177,24 @@ def comb_measure(
             driver, x, n_cycles=n_cycles, repeats=repeats
         )
         driver.free()
+    # divergence check, per pair: each comparison absorbs only the wire
+    # tolerance of the two packers involved, so exact-vs-exact pairs keep
+    # the tight historical 1e-3 guard even when lossy packers are swept.
+    from repro.core.transport import get_packer
+
+    def _wire_tol(res: CycleResult) -> tuple[float, float]:
+        return get_packer(res.packer).wire_tolerance(domain.dtype)
+
     sums = {s: r.checksum for s, r in results.items()}
-    ref = next(iter(sums.values()))
-    for s, c in sums.items():
-        assert abs(c - ref) < 1e-3 + 1e-3 * abs(ref), (
-            f"strategy {s} diverged: {sums}"
+    ref_label, ref_res = next(iter(results.items()))
+    ref = ref_res.checksum
+    ref_rtol, ref_atol = _wire_tol(ref_res)
+    for s, r in results.items():
+        wr, wa = _wire_tol(r)
+        rtol = max(1e-3, ref_rtol, wr)
+        atol = max(1e-3, ref_atol, wa)
+        assert abs(r.checksum - ref) < atol + rtol * abs(ref), (
+            f"strategy {s} diverged from {ref_label}: {sums}"
         )
     return results
 

@@ -110,7 +110,14 @@ class Domain:
     # -- data ---------------------------------------------------------------
     def from_global_interior(self, interior: np.ndarray) -> jax.Array:
         """Scatter a dense global interior into the ghosted sharded layout
-        (ghosts zeroed; call an exchange to fill them)."""
+        (ghosts zeroed; call an exchange to fill them).
+
+        Works on multi-process meshes too: when this process cannot address
+        every shard (a ``jax.distributed`` grid), each process contributes
+        its addressable blocks via ``make_array_from_callback`` — every rank
+        holds the same dense ``interior``, so the assembled global array is
+        consistent without any cross-process data movement.
+        """
         assert interior.shape == self.global_interior, interior.shape
         h = self.halo
         blocks = interior
@@ -122,7 +129,13 @@ class Domain:
             widths[axis] = (h, h)
             pieces = [np.pad(p, widths) for p in pieces]
             blocks = np.concatenate(pieces, axis=axis)
-        return jax.device_put(jnp.asarray(blocks, self.dtype), self.sharding())
+        sharding = self.sharding()
+        stored = np.asarray(blocks, dtype=self.dtype)
+        if not sharding.is_fully_addressable:
+            return jax.make_array_from_callback(
+                stored.shape, sharding, lambda idx: stored[idx]
+            )
+        return jax.device_put(jnp.asarray(stored), sharding)
 
     def to_global_interior(self, x: jax.Array) -> np.ndarray:
         """Strip ghosts and reassemble the dense global interior."""
@@ -146,6 +159,31 @@ class Domain:
         return self.from_global_interior(
             rng.normal(size=self.global_interior).astype(self.dtype)
         )
+
+
+def reference_exchange(domain: Domain, interior: np.ndarray) -> np.ndarray:
+    """Single-device reference roll: the exchanged stored layout, by gather.
+
+    Along each decomposed axis (chunk ``c``, halo ``h``) shard ``i`` stores
+    ``[ghost_l | interior | ghost_r]`` = global indices
+    ``(i*c - h) .. (i*c + c + h)`` wrapped periodically; the full stored
+    array is the tensor product of those per-axis index maps.  This is the
+    correctness oracle every exchange strategy is held to — in-process
+    (``tests/stencil/test_equivalence.py``) and across real processes
+    (``tests/distributed_progs/check_multihost.py``), where each rank
+    compares just its addressable shards against this dense prediction.
+    """
+    out = np.asarray(interior, dtype=domain.dtype)
+    h = domain.halo
+    for axis, name in domain.decomposed:
+        k = domain.mesh.shape[name]
+        g = interior.shape[axis]
+        c = g // k
+        idx = [
+            (i * c + off - h) % g for i in range(k) for off in range(c + 2 * h)
+        ]
+        out = np.take(out, idx, axis=axis)
+    return out
 
 
 # ---------------------------------------------------------------------------

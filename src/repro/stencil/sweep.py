@@ -15,11 +15,17 @@ swept here:
   (``"slice"`` inline staging vs the ``"pallas"`` copy kernel,
   :mod:`repro.core.transport`), swept as a first-class dimension.
 
-Each cell's records carry ``packer`` and ``transport`` fields; the transport
-backend itself (``"ppermute"`` in-process, ``"multihost"`` for
-multi-process meshes) is one ``SweepConfig.transport`` knob — the sweep
-fan-out is already per-subprocess, so pointing it at a multi-host backend
-swaps every cell's wire path without touching the grid.
+Each cell's records carry ``packer``, ``transport``, ``process_count``,
+``is_multihost``, and ``wire_bytes`` fields.  The transport backend
+(``"ppermute"`` in-process, ``"multihost"`` for multi-process meshes) is
+one ``SweepConfig.transport`` knob, and the fan-out is per-*process grid*:
+``--processes N`` (``SweepConfig.processes``) boots every device-count cell
+as an N-rank ``jax.distributed`` grid through
+:func:`repro.launch.stencil.launch_grid` — each rank pins ``n//N`` local
+devices, all ranks run the same SPMD measurement, and rank 0 aggregates the
+timings into the ordinary BENCH record schema.  Wire-compressed packers
+(``bf16``, ``scaled-int8``) shrink ``wire_bytes`` relative to
+``message_bytes`` — the compression axis ``fig_sweep`` renders.
 
 Every cell measures all requested registered strategies via
 :func:`repro.stencil.comb.comb_measure` and emits one flat record per
@@ -53,8 +59,9 @@ SCHEMA_VERSION = 1
 #: keys every sweep record carries (validated by tests/stencil/test_sweep.py)
 RECORD_KEYS = (
     "bench", "schema_version", "strategy", "n_devices", "n_parts",
-    "packer", "transport",
-    "global_interior", "mesh_shape", "message_bytes", "us_per_cycle",
+    "packer", "transport", "process_count", "is_multihost",
+    "global_interior", "mesh_shape", "message_bytes", "wire_bytes",
+    "us_per_cycle",
     "init_us", "n_cycles", "repeats", "checksum", "speedup_vs_baseline",
 )
 
@@ -74,6 +81,9 @@ class SweepConfig:
     packers: tuple[str, ...] = ("slice", "pallas")
     #: transport backend every cell's messages move through
     transport: str = "ppermute"
+    #: jax.distributed grid size per cell (1 = the historical in-process
+    #: fan-out; >1 boots each device count as a real multi-process grid)
+    processes: int = 1
     baseline: str = "standard"
     halo: int = 1
     n_cycles: int = 20
@@ -85,6 +95,7 @@ class SweepConfig:
             f"baseline {self.baseline!r} must be swept"
         )
         assert self.packers, "at least one packer must be swept"
+        assert self.processes >= 1, self.processes
         # fail at construction, not minutes later in a worker subprocess
         from repro.core.transport import get_packer, get_transport
 
@@ -92,6 +103,10 @@ class SweepConfig:
             get_packer(p)
         get_transport(self.transport)
         for n in self.device_counts:
+            assert n % self.processes == 0, (
+                f"device count {n} not divisible into {self.processes} "
+                f"process ranks"
+            )
             for size in self.sizes:
                 assert size[0] % n == 0 and size[0] // n >= 3 * self.halo, (
                     f"size {size} not decomposable over {n} devices"
@@ -161,15 +176,28 @@ def _size_records(
     speedups = speedup_vs_baseline(
         results, result_label(config.baseline, config.packers[0])
     )
+    import numpy as _np
+
+    from repro.core.transport import get_packer
+
+    message_bytes = domain.max_face_bytes()
+    face_elems = message_bytes // _np.dtype(domain.dtype).itemsize
+    n_proc = jax.process_count()
     records = []
     for label, res in results.items():
         rec = {
             "bench": "stencil_sweep",
             "schema_version": SCHEMA_VERSION,
             "n_devices": n_devices,
+            "process_count": n_proc,
+            "is_multihost": n_proc > 1,
             "global_interior": list(size),
             "mesh_shape": [n_devices],
-            "message_bytes": domain.max_face_bytes(),
+            "message_bytes": message_bytes,
+            # what the face actually costs on the wire under this record's
+            # packer (compressed packers shrink it)
+            "wire_bytes": face_elems
+            * get_packer(res.packer).wire_itemsize(domain.dtype),
             "speedup_vs_baseline": speedups[label],
             **res.record(),
         }
@@ -206,29 +234,48 @@ def sweep_cells(
 
 
 def _worker_env(n_devices: int) -> dict[str, str]:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    return env
+    # the ONE worker-environment recipe (device pin + PYTHONPATH) lives
+    # with the launch harness; no coordinator -> plain single-process env.
+    from repro.launch.stencil import worker_env
+
+    return worker_env(local_devices=n_devices)
 
 
 def run_sweep(config: SweepConfig, *, timeout: float = 1200.0) -> list[dict]:
-    """The full §VI grid: one subprocess per device count (the flag must
-    precede jax init), each emitting its cells' records as json on stdout."""
+    """The full §VI grid: one worker run per device count (the device-count
+    flag must precede jax init), each emitting its cells' records as json
+    on stdout.
+
+    With ``config.processes == 1`` each device count is one fresh
+    subprocess (the historical in-process fan-out).  With ``processes > 1``
+    each device count boots as a real N-rank ``jax.distributed`` grid via
+    :func:`repro.launch.stencil.launch_grid`: every rank pins ``n // N``
+    local devices, the same worker entry point runs SPMD on the global
+    mesh, and only rank 0 prints the aggregated records.
+    """
     records: list[dict] = []
     for n in config.device_counts:
         sub = dataclasses.replace(config, device_counts=(n,))
-        out = subprocess.run(
-            [sys.executable, "-m", "repro.stencil.sweep",
-             "--worker", sub.to_json()],
-            env=_worker_env(n), capture_output=True, text=True, timeout=timeout,
-        )
-        if out.returncode != 0:
-            raise RuntimeError(
-                f"sweep worker ({n} devices) failed:\n{out.stderr[-4000:]}"
+        argv = [sys.executable, "-m", "repro.stencil.sweep",
+                "--worker", sub.to_json()]
+        if config.processes > 1:
+            from repro.launch.stencil import launch_grid
+
+            stdout = launch_grid(
+                argv, processes=config.processes,
+                local_devices=n // config.processes, timeout=timeout,
             )
-        records.extend(json.loads(out.stdout))
+        else:
+            out = subprocess.run(
+                argv, env=_worker_env(n), capture_output=True, text=True,
+                timeout=timeout,
+            )
+            if out.returncode != 0:
+                raise RuntimeError(
+                    f"sweep worker ({n} devices) failed:\n{out.stderr[-4000:]}"
+                )
+            stdout = out.stdout
+        records.extend(json.loads(stdout))
     return records
 
 
@@ -283,38 +330,56 @@ def summarize(records: Sequence[dict]) -> list[str]:
 def smoke_config(
     n_devices: int = 4, packers: tuple[str, ...] | None = None
 ) -> SweepConfig:
-    """A 1-cell in-process grid over ALL registered strategies x packers —
-    the CI ``sweep-smoke`` step: any strategy (or packer) whose exchange
-    regresses (crashes, diverges, loses its speedup record) surfaces here
-    in seconds."""
+    """A 1-cell grid over ALL registered strategies x ALL registered
+    packers (incl. the wire-compressed ones) — the CI ``sweep-smoke``
+    step: any strategy or packer whose exchange regresses (crashes,
+    diverges, loses its speedup record) surfaces here in seconds.
+
+    The decomposed extent scales with the device count (4 cells per
+    shard), so the smoke grid stays valid at any ``--processes`` fan-out
+    — the face (message) size is along the decomposed axis and does not
+    change with it.
+    """
+    from repro.core.transport import available_packers
     from repro.stencil.strategies import available_strategies
 
-    kw = {} if packers is None else {"packers": packers}
     return SweepConfig(
-        device_counts=(n_devices,), part_counts=(1, 2), sizes=((16, 8),),
+        device_counts=(n_devices,), part_counts=(1, 2),
+        sizes=((4 * n_devices, 8),),
         strategies=tuple(available_strategies()), n_cycles=3, repeats=1,
-        **kw,
+        packers=available_packers() if packers is None else packers,
     )
 
 
 def config_block(
-    config: SweepConfig, *, timeout: float, smoke: bool = False
+    config: SweepConfig,
+    *,
+    timeout: float,
+    smoke: bool = False,
+    processes: int | None = None,
 ) -> dict:
     """The BENCH config block: the full grid + run parameters (incl. the
     subprocess ``timeout``) and runtime provenance, so a recorded sweep is
     re-runnable as-is.  The one schema for every writer (this CLI and
-    ``benchmarks.run``)."""
+    ``benchmarks.run``).
+
+    ``processes`` is the per-cell grid size the records were measured
+    under; it defaults to this process's own ``jax.process_count()`` —
+    callers writing on behalf of a spawned grid (the ``--processes``
+    fan-out, whose launcher never joins the grid) must pass the real
+    count.
+    """
     import jax
 
-    from repro.core.transport import MultiHostTransport
-
+    n_proc = (max(config.processes, jax.process_count())
+              if processes is None else processes)
     return {
         "sweep": dataclasses.asdict(config),
         "timeout": timeout,
         "smoke": smoke,
         "backend": jax.default_backend(),
-        "n_processes": jax.process_count(),
-        "multihost": MultiHostTransport.is_multihost(),
+        "process_count": n_proc,
+        "is_multihost": n_proc > 1,
     }
 
 
@@ -332,8 +397,12 @@ def main(argv: Sequence[str] | None = None) -> None:
                          "smoke)")
     ap.add_argument("--packer", metavar="NAME",
                     help="restrict the packer axis to ONE registered packer "
-                         "(default: sweep the config's packers, normally "
-                         "slice AND pallas)")
+                         "(default: sweep the config's packers)")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="boot every device-count cell as an N-rank "
+                         "jax.distributed grid (real multihost transport; "
+                         "each rank pins devices/N local devices and rank 0 "
+                         "aggregates the records)")
     ap.add_argument("--timeout", type=float, default=1200.0,
                     help="per-subprocess timeout (seconds) for the "
                          "device-count fan-out; recorded in the BENCH "
@@ -341,9 +410,23 @@ def main(argv: Sequence[str] | None = None) -> None:
     args = ap.parse_args(argv)
 
     if args.worker:
+        # may be one rank of a --processes grid: join it before jax boots
+        from repro.launch.stencil import maybe_initialize_from_env
+
+        rank = maybe_initialize_from_env()
         config = SweepConfig.from_json(args.worker)
-        print(json.dumps(sweep_cells(config, n_devices=config.device_counts[0])))
+        import jax
+
+        assert jax.process_count() == config.processes, (
+            jax.process_count(), config.processes,
+        )
+        records = sweep_cells(config, n_devices=config.device_counts[0])
+        if rank == 0:
+            print(json.dumps(records))
         return
+
+    if args.processes < 1:
+        ap.error(f"--processes must be >= 1, got {args.processes}")
 
     if not is_bench_path(args.out):
         ap.error(f"--out must be named BENCH_*.json, got {args.out!r}")
@@ -356,27 +439,42 @@ def main(argv: Sequence[str] | None = None) -> None:
                      f"got {args.packer!r}")
 
     if args.smoke:
-        # in-process: the device count must be pinned before jax
-        # initializes.  An already-exported pin (a common local setting)
-        # is honored — the smoke grid runs at that count — rather than
-        # silently fighting the env and tripping a device-count mismatch.
-        pin = re.search(
-            r"--xla_force_host_platform_device_count=(\d+)",
-            os.environ.get("XLA_FLAGS", ""),
-        )
-        n = int(pin.group(1)) if pin else 4
-        if pin is None:
-            os.environ["XLA_FLAGS"] = (
-                os.environ.get("XLA_FLAGS", "")
-                + f" --xla_force_host_platform_device_count={n}"
-            ).strip()
-        config = smoke_config(
-            n, packers=(args.packer,) if args.packer else None
-        )
-        records = sweep_cells(config, n_devices=n)
+        if args.processes > 1:
+            # a real grid cannot be joined from this already-running
+            # process: spawn the 1-cell smoke as an N-rank worker grid
+            # (2 local devices per rank) through the multihost transport.
+            config = smoke_config(
+                2 * args.processes,
+                packers=(args.packer,) if args.packer else None,
+            )
+            config = dataclasses.replace(
+                config, processes=args.processes, transport="multihost",
+            )
+            records = run_sweep(config, timeout=args.timeout)
+        else:
+            # in-process: the device count must be pinned before jax
+            # initializes.  An already-exported pin (a common local
+            # setting) is honored — the smoke grid runs at that count —
+            # rather than silently fighting the env and tripping a
+            # device-count mismatch.
+            pin = re.search(
+                r"--xla_force_host_platform_device_count=(\d+)",
+                os.environ.get("XLA_FLAGS", ""),
+            )
+            n = int(pin.group(1)) if pin else 4
+            if pin is None:
+                os.environ["XLA_FLAGS"] = (
+                    os.environ.get("XLA_FLAGS", "")
+                    + f" --xla_force_host_platform_device_count={n}"
+                ).strip()
+            config = smoke_config(
+                n, packers=(args.packer,) if args.packer else None
+            )
+            records = sweep_cells(config, n_devices=n)
         write_bench_json(
             records, args.out,
-            config=config_block(config, timeout=args.timeout, smoke=True),
+            config=config_block(config, timeout=args.timeout, smoke=True,
+                                processes=args.processes),
         )
         for row in summarize(records):
             print(row)
@@ -390,9 +488,14 @@ def main(argv: Sequence[str] | None = None) -> None:
         )
     if args.packer:
         config = dataclasses.replace(config, packers=(args.packer,))
+    if args.processes > 1:
+        config = dataclasses.replace(
+            config, processes=args.processes, transport="multihost",
+        )
     records = run_sweep(config, timeout=args.timeout)
     write_bench_json(records, args.out,
-                     config=config_block(config, timeout=args.timeout))
+                     config=config_block(config, timeout=args.timeout,
+                                         processes=args.processes))
     for row in summarize(records):
         print(row)
     print(f"# wrote {len(records)} records -> {args.out}")

@@ -21,6 +21,10 @@ from repro.stencil.sweep import RECORD_KEYS, SCHEMA_VERSION, write_bench_json
 STRATEGIES = ("standard", "persistent", "partitioned", "fused", "overlap")
 
 
+#: wire bytes-per-element of the synthesized packers (f32 faces)
+_WIRE_ITEMSIZE = {"slice": 4, "pallas": 4, "bf16": 2, "scaled-int8": 1}
+
+
 def _record(strategy, n_devices, size, n_parts, us, base_us,
             packer="slice"):
     return {
@@ -31,9 +35,12 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
         "n_parts": n_parts,
         "packer": packer,
         "transport": "ppermute",
+        "process_count": 1,
+        "is_multihost": False,
         "global_interior": list(size),
         "mesh_shape": [n_devices],
         "message_bytes": size[1] * 4,
+        "wire_bytes": size[1] * _WIRE_ITEMSIZE[packer],
         "us_per_cycle": us,
         "init_us": 0.0 if strategy == "standard" else 120.0,
         "n_cycles": 3,
@@ -44,12 +51,14 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
 
 
 def _synth_records():
-    """Two device counts x two sizes x two packers; partitioned at p=1,2."""
+    """Two device counts x two sizes x three packers (one wire-compressed);
+    partitioned at p=1,2."""
     records = []
     for n_devices in (2, 4):
         for size in ((16, 8), (32, 16)):
             base_us = 100.0 * n_devices
-            for pk, gain in (("slice", 1.0), ("pallas", 1.25)):
+            for pk, gain in (("slice", 1.0), ("pallas", 1.25),
+                             ("bf16", 1.5)):
                 records.append(
                     _record("standard", n_devices, size, 1, base_us / gain,
                             base_us, pk)
@@ -107,7 +116,7 @@ def test_one_row_per_strategy_cell(emitted):
     for name in names:
         _, d, p, m, packer, strategy = name.split("/")
         assert strategy in STRATEGIES
-        assert packer in ("slice", "pallas")
+        assert packer in ("slice", "pallas", "bf16")
         assert d.startswith("d") and p.startswith("p") and m.startswith("m")
 
 
@@ -121,9 +130,11 @@ def test_no_nan_speedups(emitted):
             assert math.isfinite(pct)
 
 
-def test_curves_cover_all_four_sweep_axes(emitted):
+def test_curves_cover_all_five_sweep_axes(emitted):
     _, out = emitted
-    assert set(out["curves"]) == {"devices", "parts", "msgsize", "packer"}
+    assert set(out["curves"]) == {
+        "devices", "parts", "msgsize", "packer", "wirebytes",
+    }
     assert {d for _, d in out["curves"]["devices"]} == {2, 4}
     # the partition axis reaches 2 only for the partitioning strategy
     assert ("partitioned", 2) in out["curves"]["parts"]
@@ -135,9 +146,29 @@ def test_curves_cover_all_four_sweep_axes(emitted):
     # ...but DOES on the packer axis: standard@pallas vs standard@slice is
     # the packing effect itself
     packer_curve = out["curves"]["packer"]
-    assert {pk for _, pk in packer_curve} == {"slice", "pallas"}
+    assert {pk for _, pk in packer_curve} == {"slice", "pallas", "bf16"}
     assert packer_curve[("standard", "slice")] == pytest.approx(0.0)
     assert packer_curve[("standard", "pallas")] > 0.0
+
+
+def test_wire_bytes_axis_tracks_compression(emitted):
+    """The wirebytes curve separates the compressed wire format (bf16 at
+    half the face bytes) from the exact packers at the full face size."""
+    _, out = emitted
+    wire_curve = out["curves"]["wirebytes"]
+    coords = {w for _, w in wire_curve}
+    # faces are 8*4 and 16*4 logical bytes; bf16 adds the halved 16-byte
+    # point (its large-face wire of 32 coincides with the small slice face)
+    assert coords == {16, 32, 64}
+    # the 16-byte point exists ONLY via the compressed wire, and carries
+    # standard@bf16's gain over the uncompressed baseline
+    assert wire_curve[("standard", 16)] == pytest.approx(50.0)
+    # pre-compression records (no wire_bytes key) fall back to message_bytes
+    legacy = [dict(r) for r in _synth_records()]
+    for r in legacy:
+        del r["wire_bytes"]
+    out2 = fig_sweep(lambda *a: None, records=legacy)
+    assert {w for _, w in out2["curves"]["wirebytes"]} == {32, 64}
 
 
 def test_raw_latency_overlays_at_larger_sizes(emitted):

@@ -8,6 +8,7 @@ both registered packers and through multi-hop (corner) routes.
 """
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -16,11 +17,14 @@ import pytest
 
 from repro.core import compat
 from repro.core.transport import (
+    Bf16Packer,
     Message,
+    MultiHostTransport,
     Packer,
     PallasPacker,
     Partitioner,
     PpermuteTransport,
+    ScaledInt8Packer,
     ScheduleInfo,
     SlicePacker,
     Transport,
@@ -47,10 +51,14 @@ pytestmark = pytest.mark.skipif(
 
 
 def test_builtin_backends_registered():
-    assert set(available_packers()) >= {"slice", "pallas"}
+    assert set(available_packers()) >= {
+        "slice", "pallas", "bf16", "scaled-int8",
+    }
     assert set(available_transports()) >= {"ppermute", "multihost"}
     assert isinstance(get_packer("slice"), SlicePacker)
     assert isinstance(get_packer("pallas"), PallasPacker)
+    assert isinstance(get_packer("bf16"), Bf16Packer)
+    assert isinstance(get_packer("scaled-int8"), ScaledInt8Packer)
     assert isinstance(get_transport("ppermute"), PpermuteTransport)
 
 
@@ -327,3 +335,171 @@ def test_custom_packer_and_transport_are_exercised():
         step_over, mesh=mesh, in_specs=P("px", None), out_specs=P("px", None)
     )(x)
     assert calls == {"pack": 12, "unpack": 12, "permute": 12}
+
+
+# ---------------------------------------------------------------------------
+# wire-compressed packers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packer,wire_dtype,itemsize", [
+    ("bf16", jnp.bfloat16, 2),
+    ("scaled-int8", jnp.int8, 1),
+])
+def test_compressed_packer_roundtrip_within_documented_tolerance(
+    packer, wire_dtype, itemsize
+):
+    """pack -> unpack restores the window within wire_tolerance, restores
+    the block dtype EXACTLY, and ships the advertised wire dtype/bytes."""
+    p = get_packer(packer)
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.normal(size=(6, 10, 4)), jnp.float32)
+    start, shape = (1, 2, 0), (2, 7, 4)
+    buf = p.pack(x, start, shape)
+    assert buf.dtype == wire_dtype
+    assert p.wire_itemsize(jnp.float32) == itemsize
+    ghost = jnp.zeros_like(x)
+    out = p.unpack(ghost, buf, start, shape)
+    assert out.dtype == x.dtype  # exact dtype restoration
+    rtol, atol = p.wire_tolerance(jnp.float32)
+    assert rtol > 0 or atol > 0  # lossy packers must document a bound
+    window = np.asarray(x)[1:3, 2:9, :]
+    np.testing.assert_allclose(
+        np.asarray(out)[1:3, 2:9, :], window, rtol=rtol, atol=atol
+    )
+    # untouched cells stay untouched
+    np.testing.assert_array_equal(np.asarray(out)[0], 0.0)
+
+
+def test_exact_packers_declare_bit_exact_wire():
+    for name in ("slice", "pallas"):
+        p = get_packer(name)
+        assert p.wire_tolerance(jnp.float32) == (0.0, 0.0)
+        assert p.wire_itemsize(jnp.float32) == 4
+
+
+def test_bf16_wire_is_exact_for_bf16_blocks():
+    p = get_packer("bf16")
+    assert p.wire_tolerance(jnp.bfloat16) == (0.0, 0.0)
+    assert p.wire_itemsize(jnp.bfloat16) == 2
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(3, 5)), jnp.bfloat16)
+    out = p.unpack(jnp.zeros_like(x), p.pack(x, (0, 0), (3, 5)), (0, 0), (3, 5))
+    np.testing.assert_array_equal(
+        np.asarray(out, np.float32), np.asarray(x, np.float32)
+    )
+
+
+def test_scaled_int8_saturates_beyond_amax():
+    p = ScaledInt8Packer(name="int8-sat-test", amax=1.0)
+    x = jnp.asarray([[0.5, 2.0, -3.0]], jnp.float32)
+    buf = p.pack(x, (0, 0), (1, 3))
+    np.testing.assert_array_equal(np.asarray(buf), [[64, 127, -127]])
+
+
+@pytest.mark.parametrize("packer", ["bf16", "scaled-int8"])
+def test_deliver_through_compressed_packer_within_tolerance(packer):
+    """The same ring-ghost delivery as the exact-packer test, held to the
+    packer's wire tolerance instead of bitwise equality."""
+    from repro.core.compat import make_mesh
+    from jax.sharding import PartitionSpec as P
+
+    k = 4
+    mesh = make_mesh((k,), ("px",), devices=jax.devices()[:k])
+    blk = 4
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(k * blk, 3)), jnp.float32)
+
+    def step(xl):
+        return deliver(
+            xl, _ring_messages(xl.shape, "px", k),
+            packer=packer, transport="ppermute",
+        )
+
+    got = np.asarray(
+        compat.shard_map(
+            step, mesh=mesh, in_specs=P("px", None), out_specs=P("px", None)
+        )(x)
+    )
+    want = np.asarray(x).copy().reshape(k, blk, 3)
+    src = np.asarray(x).reshape(k, blk, 3)
+    for i in range(k):
+        want[i, 0] = src[(i - 1) % k, 2]
+        want[i, 3] = src[(i + 1) % k, 1]
+    rtol, atol = get_packer(packer).wire_tolerance(jnp.float32)
+    np.testing.assert_allclose(got, want.reshape(k * blk, 3),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# plan identity: the packer is part of the compiled schedule's key
+# ---------------------------------------------------------------------------
+
+
+def test_same_geometry_under_two_packers_is_two_plans():
+    """A shared PlanCache must MISS when only the packer differs (the wire
+    pipeline is baked into the executable) and HIT on a true repeat."""
+    from repro.core.plan import PlanCache
+    from repro.stencil.domain import Domain
+    from repro.stencil.strategies import StrategyConfig, make_driver
+    from repro.core.compat import make_mesh
+
+    mesh = make_mesh((4,), ("px",), devices=jax.devices()[:4])
+    domain = Domain(mesh, global_interior=(16, 8), mesh_axes=("px", None))
+    cache = PlanCache()
+
+    def drive(packer):
+        drv = make_driver(
+            StrategyConfig(name="persistent", packer=packer,
+                           plan_cache=cache),
+            domain.mesh, domain.halo_spec, ndim=2,
+        )
+        drv.wait(drv.step(domain.random(0)))
+        drv.free()
+
+    drive("slice")
+    drive("bf16")
+    assert len(cache) == 2, "packer change must not hit the cached plan"
+    assert cache.stats.inits == 2 and cache.stats.cache_hits == 0
+    drive("bf16")  # identical geometry AND packer: amortized
+    assert len(cache) == 2
+    assert cache.stats.cache_hits == 1
+    cache.free_all()
+
+
+# ---------------------------------------------------------------------------
+# multihost transport: single-process selection warns once
+# ---------------------------------------------------------------------------
+
+
+def test_multihost_single_process_warns_once_outside_tests(monkeypatch):
+    """Selecting `multihost` while jax.process_count() == 1 must warn (the
+    schedule silently degenerates to in-process ppermute) — once per
+    process, and never under pytest/the explicit escape hatch."""
+    assert jax.process_count() == 1  # this suite never runs in a grid
+    monkeypatch.delenv("PYTEST_CURRENT_TEST", raising=False)
+    monkeypatch.delenv("REPRO_ALLOW_SINGLE_PROCESS_MULTIHOST", raising=False)
+    monkeypatch.setattr(MultiHostTransport, "_warned_single_process", False)
+    with pytest.warns(RuntimeWarning, match="process_count\\(\\) == 1"):
+        resolve_transport("multihost")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second resolve: already warned
+        resolve_transport("multihost")
+
+
+def test_multihost_warning_suppressed_under_pytest(monkeypatch):
+    monkeypatch.setattr(MultiHostTransport, "_warned_single_process", False)
+    assert "PYTEST_CURRENT_TEST" in __import__("os").environ
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        resolve_transport("multihost")
+    assert not MultiHostTransport._warned_single_process
+
+
+def test_multihost_escape_hatch_env(monkeypatch):
+    monkeypatch.delenv("PYTEST_CURRENT_TEST", raising=False)
+    monkeypatch.setenv("REPRO_ALLOW_SINGLE_PROCESS_MULTIHOST", "1")
+    monkeypatch.setattr(MultiHostTransport, "_warned_single_process", False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        resolve_transport("multihost")
+    assert not MultiHostTransport._warned_single_process

@@ -13,10 +13,12 @@ The property draws (ndim, domain shape, halo width, n_parts, strategy,
 packer) through :mod:`repro.testing` (real hypothesis when installed, the
 deterministic seeded fallback otherwise); a deterministic parametrized pass
 guarantees every registered strategy is exercised on 1-D/2-D/3-D under BOTH
-transport-layer packers (``slice`` inline staging and the ``pallas`` copy
-kernel, which falls back to its jnp oracle on CPU — so this full matrix is
-CI-runnable on the 8 virtual devices) regardless of what the random draws
-hit.
+exact transport-layer packers (``slice`` inline staging and the ``pallas``
+copy kernel, which falls back to its jnp oracle on CPU — so this full
+matrix is CI-runnable on the 8 virtual devices) regardless of what the
+random draws hit; a second parametrized pass extends the matrix to the
+wire-compressed packers (``bf16``, ``scaled-int8``), asserted against the
+same oracle but within each packer's documented ``wire_tolerance``.
 """
 
 import zlib
@@ -26,7 +28,7 @@ import numpy as np
 import pytest
 
 from repro.core.compat import make_mesh
-from repro.stencil.domain import Domain
+from repro.stencil.domain import Domain, reference_exchange
 from repro.stencil.strategies import (
     StrategyConfig,
     available_strategies,
@@ -47,25 +49,9 @@ MESH_CHOICES = {
 AXIS_NAMES = ("px", "py", "pz")
 
 
-def reference_exchange(domain: Domain, interior: np.ndarray) -> np.ndarray:
-    """Single-device reference roll: the exchanged stored layout, by gather.
-
-    Along each decomposed axis (chunk ``c``, halo ``h``) shard ``i`` stores
-    ``[ghost_l | interior | ghost_r]`` = global indices
-    ``(i*c - h) .. (i*c + c + h)`` wrapped periodically; the full stored
-    array is the tensor product of those per-axis index maps.
-    """
-    out = np.asarray(interior, dtype=domain.dtype)
-    h = domain.halo
-    for axis, name in domain.decomposed:
-        k = domain.mesh.shape[name]
-        g = interior.shape[axis]
-        c = g // k
-        idx = [
-            (i * c + off - h) % g for i in range(k) for off in range(c + 2 * h)
-        ]
-        out = np.take(out, idx, axis=axis)
-    return out
+# the single-device reference roll now lives with the domain layer
+# (repro.stencil.domain.reference_exchange) so the multi-process check
+# program holds real cross-process exchanges to the SAME oracle.
 
 
 def _build_domain(ndim, mesh_idx, halo, extents):
@@ -94,6 +80,10 @@ PACKERS = ("slice", "pallas")
 def _assert_strategy_matches_reference(
     domain, strategy, n_parts, seed, packer="slice"
 ):
+    """Exact packers: bitwise.  Wire-compressed packers: the packer's own
+    documented ``wire_tolerance`` — tolerance-aware, never looser."""
+    from repro.core.transport import get_packer
+
     rng = np.random.default_rng(seed)
     interior = rng.normal(size=domain.global_interior).astype(domain.dtype)
     want = reference_exchange(domain, interior)
@@ -107,13 +97,16 @@ def _assert_strategy_matches_reference(
         )))
     finally:
         drv.free()
-    np.testing.assert_array_equal(
-        got, want,
-        err_msg=f"{strategy} n_parts={n_parts} packer={packer} "
-                f"halo={domain.halo} "
-                f"interior={domain.global_interior} "
-                f"mesh={dict(domain.mesh.shape)}",
-    )
+    err_msg = (f"{strategy} n_parts={n_parts} packer={packer} "
+               f"halo={domain.halo} "
+               f"interior={domain.global_interior} "
+               f"mesh={dict(domain.mesh.shape)}")
+    rtol, atol = get_packer(packer).wire_tolerance(domain.dtype)
+    if rtol == 0.0 and atol == 0.0:
+        np.testing.assert_array_equal(got, want, err_msg=err_msg)
+    else:
+        np.testing.assert_allclose(got, want, rtol=rtol, atol=atol,
+                                   err_msg=err_msg)
 
 
 @settings(max_examples=12, deadline=None)
@@ -166,6 +159,23 @@ def test_every_strategy_on_8_devices(strategy, packer, ndim, shape, interior,
     )
     _assert_strategy_matches_reference(
         domain, strategy, n_parts=3, seed=7, packer=packer
+    )
+
+
+#: the wire-compressed packers, asserted via their documented tolerances
+LOSSY_PACKERS = ("bf16", "scaled-int8")
+
+
+@pytest.mark.parametrize("packer", LOSSY_PACKERS)
+@pytest.mark.parametrize("strategy", available_strategies())
+def test_every_strategy_under_compressed_packers(strategy, packer):
+    """The oracle matrix extended to the wire-compressed packers: every
+    strategy's ghosts stay within the packer's wire_tolerance of the
+    bitwise reference (2-D, two decomposed axes — edges included)."""
+    mesh = make_mesh((4, 2), ("px", "py"), devices=jax.devices()[:8])
+    domain = Domain(mesh, global_interior=(16, 8), mesh_axes=("px", "py"))
+    _assert_strategy_matches_reference(
+        domain, strategy, n_parts=3, seed=11, packer=packer
     )
 
 

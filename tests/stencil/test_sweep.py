@@ -169,6 +169,77 @@ def test_config_rejects_undecomposable_grid():
         SweepConfig(strategies=("persistent",))  # baseline not swept
     with pytest.raises(AssertionError):
         SweepConfig(packers=())  # at least one packer
+    with pytest.raises(AssertionError, match="process"):
+        SweepConfig(device_counts=(2, 4), processes=3)  # 2 % 3 != 0
+    with pytest.raises(AssertionError):
+        SweepConfig(processes=0)
+
+
+def test_records_stamp_process_provenance(records):
+    """Every record carries the REAL runtime process shape — this in-process
+    suite is single-process, so the multihost stamps must be honest."""
+    for rec in records:
+        assert rec["process_count"] == 1
+        assert rec["is_multihost"] is False
+
+
+def test_wire_bytes_equals_message_bytes_for_exact_packers(records):
+    for rec in records:
+        assert rec["wire_bytes"] == rec["message_bytes"], rec["packer"]
+
+
+def test_compressed_packers_shrink_wire_bytes():
+    """A grid swept with the wire-compressed packers records the reduced
+    wire cost (bf16: /2, scaled-int8: /4 for f32 fields) while
+    message_bytes keeps the logical face size."""
+    cfg = SweepConfig(
+        device_counts=(4,), part_counts=(1,), sizes=((16, 8),),
+        strategies=("standard", "persistent"),
+        packers=("slice", "bf16", "scaled-int8"),
+        n_cycles=2, repeats=1,
+    )
+    recs = sweep_cells(cfg, n_devices=4)
+    assert {r["packer"] for r in recs} == {"slice", "bf16", "scaled-int8"}
+    by_packer = {r["packer"]: r for r in recs if r["strategy"] == "persistent"}
+    face = by_packer["slice"]["message_bytes"]
+    assert by_packer["slice"]["wire_bytes"] == face
+    assert by_packer["bf16"]["wire_bytes"] == face // 2
+    assert by_packer["scaled-int8"]["wire_bytes"] == face // 4
+    for r in recs:
+        assert r["message_bytes"] == face
+        for key in RECORD_KEYS:
+            assert key in r
+        json.dumps(r)
+
+
+def test_config_block_stamps_process_shape(tmp_path, records):
+    from repro.stencil.sweep import config_block
+
+    block = config_block(SMALL, timeout=90.0, smoke=True)
+    assert block["process_count"] == 1 and block["is_multihost"] is False
+    assert block["sweep"]["processes"] == 1
+    # a launcher writing on behalf of a spawned grid passes the real count
+    block2 = config_block(SMALL, timeout=90.0, processes=2)
+    assert block2["process_count"] == 2 and block2["is_multihost"] is True
+    # and the multihost stamps round-trip through the BENCH interchange
+    path = tmp_path / "BENCH_mh.json"
+    write_bench_json(records, str(path), config=block2)
+    got, cfg = read_bench_json(str(path))
+    assert got == records
+    assert cfg["process_count"] == 2 and cfg["is_multihost"] is True
+
+
+def test_multihost_config_carries_processes_axis():
+    """--processes fan-out config: processes travels through the worker
+    json, and a grid-borne config validates device divisibility."""
+    cfg = SweepConfig(device_counts=(4,), sizes=((16, 8),), processes=2,
+                      transport="multihost")
+    assert SweepConfig.from_json(cfg.to_json()) == cfg
+    # a pre-processes-axis config json defaults to the in-process grid
+    raw = json.loads(cfg.to_json())
+    del raw["processes"]
+    raw["transport"] = "ppermute"
+    assert SweepConfig.from_json(json.dumps(raw)).processes == 1
 
 
 def test_bench_json_config_block_roundtrip(tmp_path, records):

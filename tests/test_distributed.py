@@ -19,6 +19,10 @@ PROGS = [
     ("check_stencil.py", "STENCIL"),
     ("check_models_dist.py", "MODEL-DIST"),
     ("check_elastic.py", "ELASTIC"),
+    # dual-mode: spawns its own 2-rank jax.distributed grid (2 CPU devices
+    # per rank) and forwards rank 0's report — the 8-device env the driver
+    # exports below is stripped by the grid's worker_env.
+    ("check_multihost.py", "MULTIHOST"),
 ]
 
 _DIR = os.path.join(os.path.dirname(__file__), "distributed_progs")
