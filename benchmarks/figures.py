@@ -128,9 +128,10 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
               baseline: str = "standard") -> dict:
     """The §VI study from MEASURED records: speedup-vs-baseline curves over
     device count (Fig. 6 analogue: process count), partition count (Fig. 7:
-    thread count), message size (Fig. 8), and the packer axis (the
-    transport layer's packing dimension), plus raw-latency overlays at the
-    larger message sizes and the paper-claim comparison rows.
+    thread count), message size (Fig. 8), the packer axis (the transport
+    layer's packing dimension), and the wire-buffer coalesce axis, plus
+    raw-latency overlays at the larger message sizes, plan-cache/collective
+    amortization rows, and the paper-claim comparison rows.
 
     Unlike fig2-fig5 (calibrated model projections) this section renders
     what the sweep actually measured on this host.  Returns the structured
@@ -148,6 +149,10 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         # pre-compression records shipped the face dtype unchanged
         return r.get("wire_bytes", r["message_bytes"])
 
+    def coalesce_of(r: dict) -> bool:
+        # pre-coalescing records ran the per-message pipeline
+        return bool(r.get("coalesce", False))
+
     # --- per-(strategy, cell) rows; every cell must carry its baseline ----
     cells: dict[tuple, set] = {}
     rows = []
@@ -157,7 +162,8 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         sp = r["speedup_vs_baseline"]
         assert math.isfinite(sp) and sp > 0, (r["strategy"], cell, sp)
         name = (f"fig_sweep/d{r['n_devices']}/p{r['n_parts']}"
-                f"/m{r['message_bytes']}/{packer_of(r)}/{r['strategy']}")
+                f"/m{r['message_bytes']}/{packer_of(r)}"
+                f"/c{int(coalesce_of(r))}/{r['strategy']}")
         pct = (sp - 1.0) * 100.0
         rows.append((name, r["us_per_cycle"], pct))
         emit(name, r["us_per_cycle"], f"speedup={pct:.1f}%")
@@ -188,13 +194,36 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         # under each record's packer (bf16/scaled-int8 shrink it) — the
         # baseline stays in for the same reason as the packer axis.
         "wirebytes": curve(wire_bytes_of, keep_baseline=True),
+        # message-coalescing axis: standard@coalesced vs standard@uncoalesced
+        # IS the one-collective-per-neighbor effect, so the baseline stays.
+        "coalesce": curve(coalesce_of, keep_baseline=True),
     }
     for axis, fig in (("devices", 6), ("parts", 7), ("msgsize", 8),
-                      ("packer", None), ("wirebytes", None)):
+                      ("packer", None), ("wirebytes", None),
+                      ("coalesce", None)):
         for (strategy, coord), pct in sorted(curves[axis].items()):
             fig_tag = f";paper_fig={fig}" if fig else ""
             emit(f"fig_sweep/curve_{axis}/{strategy}/{coord}", None,
                  f"speedup={pct:.1f}%{fig_tag}")
+
+    # --- amortization + coalescing evidence rows --------------------------
+    # The persistent-amortization claim (plans initialized once, then cache
+    # hits) and the coalescing claim (fewer collectives per step) rendered
+    # straight from the recorded counters; legacy records without the
+    # counters emit nothing.
+    amortization = []
+    for r in records:
+        if "plan_cache_inits" not in r and "collective_count" not in r:
+            continue
+        name = (f"fig_sweep/amortization/d{r['n_devices']}"
+                f"/p{r['n_parts']}/m{r['message_bytes']}/{packer_of(r)}"
+                f"/c{int(coalesce_of(r))}/{r['strategy']}")
+        inits = r.get("plan_cache_inits", 0)
+        hits = r.get("plan_cache_hits", 0)
+        colls = r.get("collective_count")
+        amortization.append((name, inits, hits, colls))
+        emit(name, None,
+             f"plan_inits={inits};plan_hits={hits};collectives={colls}")
 
     # --- raw-latency overlays at the larger message sizes -----------------
     # Speedup curves hide *where the time goes*; these rows overlay the
@@ -210,7 +239,8 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         if r["message_bytes"] not in top_sizes:
             continue
         name = (f"fig_sweep/raw/m{r['message_bytes']}/d{r['n_devices']}"
-                f"/p{r['n_parts']}/{packer_of(r)}/{r['strategy']}")
+                f"/p{r['n_parts']}/{packer_of(r)}"
+                f"/c{int(coalesce_of(r))}/{r['strategy']}")
         raw.append((name, r["us_per_cycle"], r["strategy"]))
         emit(name, r["us_per_cycle"],
              f"raw_us={r['us_per_cycle']:.1f};strategy={r['strategy']}")
@@ -234,7 +264,8 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         claims.append((cid, desc, paper_pct, measured))
         emit(f"fig_sweep/claims/{cid}", measured,
              f"paper={paper_pct} :: {desc}")
-    return {"rows": rows, "curves": curves, "raw": raw, "claims": claims}
+    return {"rows": rows, "curves": curves, "raw": raw, "claims": claims,
+            "amortization": amortization}
 
 
 # paper-claim validation table (C1-C6 of DESIGN.md §1)

@@ -2,7 +2,8 @@
 
 Without real TPU timing, the partitioned win is verified structurally: the
 compiled HLO of a partitioned exchange must contain ``n_parts`` independent
-``collective-permute`` chains per direction, interleaved with the per-chunk
+``collective-permute`` rounds per direction (per hop chain when coalesced —
+partition rounds stay pipelined either way), interleaved with the per-chunk
 pack/unpack compute, so a latency-hiding scheduler can overlap them.  The
 fused (standard/persistent) exchange has one collective per direction and no
 interleaving freedom.
@@ -36,19 +37,22 @@ def _run_inner() -> None:
 
     for strategy, parts in (("persistent", 1), ("partitioned", 2),
                             ("partitioned", 4), ("partitioned", 8)):
-        drv = ExchangeDriver(
-            dom.mesh,
-            lambda s=strategy, p=parts: dom.halo_spec(s, p),
-            ndim=3, strategy=strategy,
-        )
-        x = dom.random(0)
-        text = drv.compiled_text(x)
-        stats = parse_collectives(text, default_group=1)
-        n_cp = stats.by_op_counts.get("collective-permute", 0)
-        wire = stats.wire_bytes
-        label = f"{strategy}_p{parts}"
-        print(f"overlap/{label}/collective_permutes,{n_cp},wire_bytes={wire:.0f}")
-        drv.free()
+        for coalesce in (False, True):
+            drv = ExchangeDriver(
+                dom.mesh,
+                lambda s=strategy, p=parts, c=coalesce:
+                    dom.halo_spec(s, p).with_(coalesce=c),
+                ndim=3, strategy=strategy,
+            )
+            x = dom.random(0)
+            text = drv.compiled_text(x)
+            stats = parse_collectives(text, default_group=1)
+            n_cp = stats.by_op_counts.get("collective-permute", 0)
+            wire = stats.wire_bytes
+            label = f"{strategy}_p{parts}/c{int(coalesce)}"
+            print(f"overlap/{label}/collective_permutes,{n_cp},"
+                  f"wire_bytes={wire:.0f}")
+            drv.free()
 
 
 def main() -> None:

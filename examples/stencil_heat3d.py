@@ -37,7 +37,12 @@ def main() -> None:
                     help="transport-layer pack backend every message stages "
                          "through (pallas = the Comb-style copy kernel; "
                          "falls back to its oracle off-TPU)")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="disable wire-buffer coalescing (per-message "
+                         "pack/permute/unpack instead of one buffer + one "
+                         "composed collective per neighbor hop chain)")
     args = ap.parse_args()
+    coalesce = not args.no_coalesce
 
     mesh = make_mesh((4, 2), ("pz", "py"))  # compat shim handles axis_types
     dom = Domain(mesh, global_interior=(args.size, args.size, args.size // 2),
@@ -58,19 +63,22 @@ def main() -> None:
     )
     strategies = tuple(
         StrategyConfig(
-            name=s, packer=args.packer,
+            name=s, packer=args.packer, coalesce=coalesce,
             n_parts=args.parts if s == "partitioned" else 1,
         )
         for s in names
     )
     print(f"domain {dom.global_interior} on mesh {dict(mesh.shape)}; "
           f"{args.cycles} cycles per strategy: {', '.join(names)} "
-          f"(packer={args.packer})")
+          f"(packer={args.packer}, "
+          f"{'coalesced' if coalesce else 'uncoalesced'})")
     results = comb_measure(dom, strategies=strategies, update_fn=update,
                            n_cycles=args.cycles, repeats=3)
     from repro.stencil.comb import result_label
 
-    base = results[result_label("standard", args.packer)].us_per_cycle
+    base = results[
+        result_label("standard", args.packer, coalesce)
+    ].us_per_cycle
     for s, r in results.items():
         sp = (base / r.us_per_cycle - 1.0) * 100.0
         print(f"  {s:12s} {r.us_per_cycle:9.1f} us/cycle  "
@@ -87,7 +95,7 @@ def main() -> None:
     verify_with = args.strategy or "persistent"
     drv = make_driver(
         StrategyConfig(name=verify_with, n_parts=args.parts,
-                       packer=args.packer),
+                       packer=args.packer, coalesce=coalesce),
         dom.mesh, dom.halo_spec, ndim=3, update_fn=update,
     )
     x = dom.from_global_interior(interior)

@@ -59,7 +59,9 @@ class HaloSpec:
     ``array_axes[i]``.  ``halo`` is the ghost width (paper: 1).
     ``packer``/``transport`` name the registered transport-layer backends
     every message of this exchange goes through
-    (:mod:`repro.core.transport`).
+    (:mod:`repro.core.transport`); ``coalesce`` aggregates each delivery
+    group's messages into one wire buffer + ONE composed collective per hop
+    chain (default on — the pMR message-aggregation optimization).
     """
 
     mesh_axes: tuple[str, ...]
@@ -72,6 +74,7 @@ class HaloSpec:
     n_parts: int = 1
     packer: str = "slice"
     transport: str = "ppermute"
+    coalesce: bool = True
 
     def __post_init__(self):
         assert len(self.mesh_axes) == len(self.array_axes)
@@ -91,6 +94,7 @@ class HaloSpec:
         return ScheduleInfo(
             kind=kind, mesh_axes=self.mesh_axes,
             packer=self.packer, transport=self.transport,
+            coalesce=self.coalesce,
         )
 
 
@@ -205,13 +209,15 @@ def exchange_axis(
     n_parts: int = 1,
     packer: str = "slice",
     transport: str = "ppermute",
+    coalesce: bool = True,
 ) -> jax.Array:
     """Exchange ghost rims along one decomposed axis (inside ``shard_map``)."""
     group = axis_message_group(
         x.shape, axis_name, array_axis, k=compat.axis_size(axis_name),
         halo=halo, periodic=periodic, n_parts=n_parts,
     )
-    return exchange_messages(x, (group,), packer=packer, transport=transport)
+    return exchange_messages(x, (group,), packer=packer, transport=transport,
+                             coalesce=coalesce)
 
 
 def exchange(x: jax.Array, spec: HaloSpec) -> jax.Array:
@@ -227,7 +233,8 @@ def exchange(x: jax.Array, spec: HaloSpec) -> jax.Array:
     """
     groups = sequential_message_groups(x.shape, spec, _mesh_sizes(spec))
     return exchange_messages(
-        x, groups, packer=spec.packer, transport=spec.transport
+        x, groups, packer=spec.packer, transport=spec.transport,
+        coalesce=spec.coalesce,
     )
 
 
@@ -336,7 +343,8 @@ def exchange_fused(x: jax.Array, spec: HaloSpec) -> jax.Array:
     """
     group = fused_message_group(x.shape, spec, _mesh_sizes(spec))
     return exchange_messages(
-        x, (group,), packer=spec.packer, transport=spec.transport
+        x, (group,), packer=spec.packer, transport=spec.transport,
+        coalesce=spec.coalesce,
     )
 
 

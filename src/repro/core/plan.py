@@ -76,6 +76,10 @@ class CommPlan:
         name: str | None = None,
     ):
         self.name = name or getattr(fn, "__name__", "plan")
+        #: transport-schedule identity + coalesced wire-layout offset
+        #: tables, stamped by :func:`transport_plan` at init
+        self.schedule = None
+        self.wire_layouts: tuple = ()
         self._freed = False
         t0 = time.perf_counter()
         kw: dict[str, Any] = dict(
@@ -241,6 +245,7 @@ def transport_plan(
     example_args: Sequence[Any],
     *,
     schedule: Any,
+    layouts: Sequence[Any] | Callable[[], Sequence[Any]] | None = None,
     donate_argnums: tuple[int, ...] = (),
     cache: "PlanCache | None" = None,
     key: Hashable | None = None,
@@ -249,21 +254,34 @@ def transport_plan(
     """Compile ONE persistent plan for a transport schedule.
 
     ``schedule`` is a :class:`repro.core.transport.ScheduleInfo` naming the
-    choreography (sequential/fused), the mesh axes it spans, and the
-    registered packer/transport backends every message resolves — so the
-    compiled executable's identity (plan name, and the structural cache
-    ``key`` the caller derives from its spec) always records *which*
-    pack/transport pipeline was baked in.  This is the one place the
-    free-floating "compile this exchange step" call used to live; every
-    persistent-style strategy now initializes through it.
+    choreography (sequential/fused), the mesh axes it spans, the registered
+    packer/transport backends every message resolves, and whether messages
+    coalesce — so the compiled executable's identity (plan name, and the
+    structural cache ``key`` the caller derives from its spec) always
+    records *which* pack/transport pipeline was baked in.  ``layouts`` is
+    the coalesced schedule's static :class:`~repro.core.transport.
+    WireLayout` offset tables (one per wire buffer) — a sequence, or a
+    zero-arg factory invoked only when the plan is freshly stamped —
+    recorded on the plan (``plan.wire_layouts``) as introspection the way
+    ``MPI_Send_init`` records its amortized buffers: computed once at the
+    plan's first init, never per ``start`` and never again on a cache hit.
+    This is the one place the free-floating "compile this exchange step"
+    call used to live; every persistent-style strategy now initializes
+    through it.
     """
     axes = tuple(schedule.mesh_axes)
     assert axes, "a transport plan needs at least one mesh axis"
     assert len(set(axes)) == len(axes), f"duplicate mesh axes: {axes}"
-    return build_plan(
+    plan = build_plan(
         step_factory, example_args, donate_argnums=donate_argnums,
         cache=cache, key=key, name=name or schedule.tag(),
     )
+    if plan.schedule is None:  # a cache hit keeps its original stamp
+        plan.schedule = schedule
+        if callable(layouts):
+            layouts = layouts()
+        plan.wire_layouts = tuple(layouts) if layouts is not None else ()
+    return plan
 
 
 def multi_axis_plan(
@@ -273,6 +291,8 @@ def multi_axis_plan(
     mesh_axes: Sequence[str],
     packer: str = "slice",
     transport: str = "ppermute",
+    coalesce: bool = False,
+    layouts: Sequence[Any] | None = None,
     donate_argnums: tuple[int, ...] = (),
     cache: "PlanCache | None" = None,
     key: Hashable | None = None,
@@ -294,8 +314,9 @@ def multi_axis_plan(
         step_factory, example_args,
         schedule=ScheduleInfo(
             kind="fused", mesh_axes=tuple(mesh_axes),
-            packer=packer, transport=transport,
+            packer=packer, transport=transport, coalesce=coalesce,
         ),
+        layouts=layouts,
         donate_argnums=donate_argnums, cache=cache, key=key, name=name,
     )
 

@@ -44,6 +44,17 @@ The partition policy (equal-size rule, paper §II-B) lives here as
 window (offsets on the equal-size grid, the zero-padding never crosses the
 wire) and unpacks it into the ghost region on arrival (``MPI_Parrived``).
 
+**Coalescing** (the pMR / MPI-Advance message-aggregation optimization) is
+the third knob: with ``coalesce=True`` a delivery group's messages are
+grouped by hop chain, every slab bound for one neighbor is packed into ONE
+contiguous wire buffer (a static :class:`WireLayout` offset table, computed
+at trace time and recorded in the persistent plan — the ``MPI_Send_init``
+buffer-amortization analogue), and the whole chain is routed with a SINGLE
+collective (multi-hop corner chains compose into one joint multi-axis
+permutation).  Partitioned messages stay pipelined: round *k+1* packs from
+the original buffer while round *k*'s coalesced buffer is in flight, and
+each round's buffers unpack on arrival (``MPI_Parrived``).
+
 All delivery functions run **inside** ``jax.shard_map``; message tables are
 built at trace time, so permutation tables and slab geometry are baked into
 the compiled plan — the "tag matching at init" the paper's persistent mode
@@ -54,6 +65,8 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import itertools
+import math
 import os
 import warnings
 from typing import Any, Callable, ClassVar, Iterable, Mapping, Sequence
@@ -182,22 +195,184 @@ class Message:
 
 
 @dataclasses.dataclass(frozen=True)
+class WireSegment:
+    """One slab's place inside a coalesced wire buffer.
+
+    ``offset`` is the segment's start in wire *elements* (the wire dtype is
+    uniform across a buffer, so element offsets are itemsize-free);
+    ``src_start``/``dst_start``/``shape`` are the slab windows exactly as on
+    :class:`Message`.  All fields are trace-time python ints — the layout is
+    a static table baked into the compiled plan.
+    """
+
+    offset: int
+    src_start: tuple[int, ...]
+    dst_start: tuple[int, ...]
+    shape: tuple[int, ...]
+
+    @property
+    def numel(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireLayout:
+    """Static offset table of ONE coalesced wire buffer (one hop chain).
+
+    Every segment's slab is packed at ``segments[i].offset`` into a single
+    contiguous buffer of ``total`` wire elements, routed with one composed
+    collective along ``hops``, and scatter-unpacked on arrival.
+    ``wire_itemsize`` records what one element costs on the wire under the
+    packer the layout was built for (compressed packers shrink it), so
+    ``wire_bytes`` is the buffer's true wire footprint.
+    """
+
+    hops: tuple[Hop, ...]
+    segments: tuple[WireSegment, ...]
+    total: int
+    wire_itemsize: int
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.total * self.wire_itemsize
+
+
+def coalesced_layout(
+    parts: Sequence[Message], hops: tuple[Hop, ...], packer: "Packer",
+    dtype: Any,
+) -> WireLayout:
+    """Lay single-partition messages sharing ``hops`` end-to-end in one wire
+    buffer (segment order = message order, offsets in wire elements)."""
+    segments, offset = [], 0
+    for m in parts:
+        assert m.hops == hops, (m.hops, hops)
+        assert m.n_parts == 1, "layouts are built from expanded partitions"
+        segments.append(
+            WireSegment(offset, m.src_start, m.dst_start, m.shape)
+        )
+        offset += math.prod(m.shape)
+    return WireLayout(
+        hops=tuple(hops), segments=tuple(segments), total=offset,
+        wire_itemsize=packer.wire_itemsize(dtype),
+    )
+
+
+def coalesced_rounds(
+    messages: Iterable[Message],
+) -> list[list[tuple[tuple[Hop, ...], list[Message]]]]:
+    """The pipelined partition schedule of one delivery group.
+
+    Round *r* holds every message's *r*-th (clipped) partition, grouped by
+    hop chain in first-seen order: each ``(chain, parts)`` cell becomes one
+    coalesced buffer and one composed collective, and successive rounds
+    pack/fly/unpack independently (the threaded-partitioned-send analogue —
+    round *k+1* may pack while round *k* is in flight)."""
+    per_msg = [m.partitions() for m in messages]
+    n_rounds = max((len(p) for p in per_msg), default=0)
+    rounds = []
+    for r in range(n_rounds):
+        chains: dict[tuple[Hop, ...], list[Message]] = {}
+        for parts in per_msg:
+            if r < len(parts):
+                chains.setdefault(parts[r].hops, []).append(parts[r])
+        rounds.append(list(chains.items()))
+    return rounds
+
+
+def composed_hop(hops: Sequence[Hop]) -> Hop | None:
+    """Compose a hop chain into ONE joint permutation (a single collective).
+
+    Per-axis neighbor tables act independently, so the chain equals the
+    product map over the tuple of axis names: source coords ``(i_1..i_d)``
+    reach ``(p_1(i_1)..p_d(i_d))`` iff every per-axis table defines the hop
+    (clipped non-periodic edges drop the whole path — identical to what
+    chained per-hop permutes deliver, where a missing hop zeros the buffer).
+    Indices linearize row-major over the axis tuple, ``lax.ppermute``'s rule
+    for multi-axis collectives.  Must run at trace time inside ``shard_map``
+    (axis sizes come from the mesh).  ``None`` means a hop-free self-copy.
+    """
+    hops = tuple(hops)
+    if not hops:
+        return None
+    if len(hops) == 1:
+        return hops[0]
+    from repro.core import compat
+
+    names = tuple(name for name, _ in hops)
+    sizes = [compat.axis_size(name) for name in names]
+    maps = [dict(perm) for _, perm in hops]
+
+    def lin(coords: Sequence[int]) -> int:
+        idx = 0
+        for c, k in zip(coords, sizes):
+            idx = idx * k + c
+        return idx
+
+    pairs = []
+    for coords in itertools.product(*[range(k) for k in sizes]):
+        if all(c in m for c, m in zip(coords, maps)):
+            pairs.append(
+                (lin(coords), lin([m[c] for c, m in zip(coords, maps)]))
+            )
+    return (names, tuple(pairs))
+
+
+def scheduled_collective_count(
+    groups: Sequence[Sequence[Message]], *, coalesce: bool
+) -> int:
+    """Collectives one schedule launches per step (hop-free self-copies are
+    free).  Uncoalesced: one per hop of every partition of every message.
+    Coalesced: one per non-empty (round, hop chain) cell — the composed
+    joint permutation — exactly mirroring the delivery choreography."""
+    total = 0
+    for group in groups:
+        if coalesce:
+            for chains in coalesced_rounds(group):
+                total += sum(1 for hops, _ in chains if hops)
+        else:
+            for msg in group:
+                for part in msg.partitions():
+                    total += len(part.hops)
+    return total
+
+
+def schedule_layouts(
+    groups: Sequence[Sequence[Message]],
+    packer: "str | Packer",
+    dtype: Any,
+) -> tuple[WireLayout, ...]:
+    """All wire-buffer offset tables of a coalesced schedule, in delivery
+    order (group, partition round, hop chain) — what a persistent plan
+    records at init (:func:`repro.core.plan.transport_plan`)."""
+    p = resolve_packer(packer)
+    out = []
+    for group in groups:
+        for chains in coalesced_rounds(group):
+            for hops, parts in chains:
+                out.append(coalesced_layout(parts, hops, p, dtype))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
 class ScheduleInfo:
     """Identity of one compiled transport schedule (for plan names/keys).
 
     ``kind`` names the choreography (``"sequential"`` axis passes,
-    ``"fused"`` single pass, ...); ``mesh_axes`` the axes it spans; and
-    ``packer``/``transport`` the registered backends it resolves.
+    ``"fused"`` single pass, ...); ``mesh_axes`` the axes it spans;
+    ``packer``/``transport`` the registered backends it resolves; and
+    ``coalesce`` whether messages aggregate into per-neighbor wire buffers.
     """
 
     kind: str
     mesh_axes: tuple[str, ...]
     packer: str = "slice"
     transport: str = "ppermute"
+    coalesce: bool = False
 
     def tag(self) -> str:
         axes = "x".join(self.mesh_axes) or "-"
-        return f"{self.kind}[{axes}]@{self.packer}/{self.transport}"
+        base = f"{self.kind}[{axes}]@{self.packer}/{self.transport}"
+        return base + ("+coalesced" if self.coalesce else "")
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +408,37 @@ class Packer(abc.ABC):
         shape: Sequence[int],
     ) -> jax.Array:
         """Write a received wire buffer into the ghost window of ``x``."""
+
+    # -- coalesced wire buffers (one buffer per neighbor) -------------------
+    def pack_coalesced(self, x: jax.Array, layout: WireLayout) -> jax.Array:
+        """Fill one coalesced 1-D wire buffer: every segment's slab packed
+        at its static offset.  The default stages each segment through
+        :meth:`pack` and concatenates (offsets are consecutive by
+        construction); kernel-backed packers override this with a single
+        fused gather-pack launch."""
+        bufs = [
+            jnp.ravel(self.pack(x, s.src_start, s.shape))
+            for s in layout.segments
+        ]
+        return bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs)
+
+    def unpack_coalesced(
+        self, x: jax.Array, buf: jax.Array, layout: WireLayout
+    ) -> jax.Array:
+        """Scatter an arrived coalesced buffer into its ghost windows."""
+        flat = jnp.ravel(buf)
+        for s in layout.segments:
+            seg = lax.slice(flat, (s.offset,), (s.offset + s.numel,))
+            x = self._unpack_segment(x, seg, s)
+        return x
+
+    def _unpack_segment(
+        self, x: jax.Array, seg: jax.Array, s: WireSegment
+    ) -> jax.Array:
+        """One segment of :meth:`unpack_coalesced`; ``seg`` is the 1-D wire
+        slice.  Packers whose :meth:`unpack` expects a non-slab wire view
+        (the 2-D kernel form) override this reshape."""
+        return self.unpack(x, seg.reshape(s.shape), s.dst_start, s.shape)
 
     # -- wire-format introspection (the sweep's wire-bytes axis) ------------
     def wire_itemsize(self, dtype: Any) -> int:
@@ -297,6 +503,21 @@ class PallasPacker(Packer):
         )
         return lax.dynamic_update_slice(x, ghost, tuple(dst_start))
 
+    def pack_coalesced(self, x, layout):
+        # Comb's combined pack: ONE kernel launch fills the whole coalesced
+        # buffer instead of one tiled copy per slab.
+        from repro.kernels.pack.ops import gather_pack
+
+        return gather_pack(
+            x, layout.segments, total=layout.total,
+            force_kernel=self.force_kernel, interpret=self.interpret,
+        )
+
+    def _unpack_segment(self, x, seg, s):
+        # unpack_slab consumes the kernel's 2-D (lead, lane) wire view
+        lead = s.numel // s.shape[-1] if len(s.shape) > 1 else 1
+        return self.unpack(x, seg.reshape(lead, -1), s.dst_start, s.shape)
+
 
 @dataclasses.dataclass(frozen=True)
 class Bf16Packer(Packer):
@@ -324,6 +545,17 @@ class Bf16Packer(Packer):
 
         ghost = unpack_slab(buf, tuple(shape), out_dtype=x.dtype)
         return lax.dynamic_update_slice(x, ghost, tuple(dst_start))
+
+    def pack_coalesced(self, x, layout):
+        # one fused gather-pack launch, casting to the bf16 wire on the fly
+        from repro.kernels.pack.ops import gather_pack
+
+        return gather_pack(x, layout.segments, total=layout.total,
+                           out_dtype=jnp.bfloat16)
+
+    def _unpack_segment(self, x, seg, s):
+        lead = s.numel // s.shape[-1] if len(s.shape) > 1 else 1
+        return self.unpack(x, seg.reshape(lead, -1), s.dst_start, s.shape)
 
     def wire_itemsize(self, dtype):
         return 2  # the wire dtype is always bfloat16
@@ -380,20 +612,37 @@ class Transport(abc.ABC):
 
     @abc.abstractmethod
     def permute(
-        self, buf: jax.Array, axis_name: str, perm: Sequence[tuple[int, int]]
+        self,
+        buf: jax.Array,
+        axis_name: str | tuple[str, ...],
+        perm: Sequence[tuple[int, int]],
     ) -> jax.Array:
-        """One hop: send ``buf`` along ``axis_name`` per the (src, dst)
-        table; shards receiving nothing get zeros (XLA ppermute rule)."""
+        """One collective: send ``buf`` along ``axis_name`` per the
+        (src, dst) table; shards receiving nothing get zeros (XLA ppermute
+        rule).  ``axis_name`` may be a tuple of mesh axes — a composed
+        multi-hop chain as ONE joint permutation over the row-major
+        linearization of those axes (the coalesced corner route)."""
 
     def validate(self) -> None:
         """Runtime sanity check, run when the backend is resolved for a
-        delivery (cheap: called per exchange trace, not per message)."""
+        schedule (cheap: called once per exchange trace, never per group
+        or per message)."""
 
     def route(self, buf: jax.Array, hops: Iterable[Hop]) -> jax.Array:
         """Chain the hops of one message (edges/corners hop per axis)."""
         for axis_name, perm in hops:
             buf = self.permute(buf, axis_name, list(perm))
         return buf
+
+    def route_composed(self, buf: jax.Array, hops: Sequence[Hop]) -> jax.Array:
+        """Route a whole hop chain as a SINGLE collective (the coalesced
+        path): multi-axis chains compose into one joint permutation via
+        :func:`composed_hop`; an empty chain is the hop-free self-copy."""
+        hop = composed_hop(hops)
+        if hop is None:
+            return buf
+        axis_name, perm = hop
+        return self.permute(buf, axis_name, list(perm))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -537,12 +786,52 @@ register_transport(MultiHostTransport())
 # ---------------------------------------------------------------------------
 
 
+def _deliver_group(
+    x: jax.Array,
+    messages: Iterable[Message],
+    p: Packer,
+    t: Transport,
+    coalesce: bool,
+) -> jax.Array:
+    """One delivery group with *resolved* backends (no registry lookups,
+    no re-validation — :func:`exchange_messages` hoists those once per
+    schedule)."""
+    if not coalesce:
+        arrived: list[tuple[Message, jax.Array]] = []
+        for msg in messages:
+            for part in msg.partitions():
+                buf = p.pack(x, part.src_start, part.shape)  # pack
+                buf = t.route(buf, part.hops)  # start/send
+                arrived.append((part, buf))
+        for part, buf in arrived:  # unpack (disjoint ghost windows)
+            x = p.unpack(x, buf, part.dst_start, part.shape)
+        return x
+
+    # Coalesced: one wire buffer and ONE composed collective per (partition
+    # round, hop chain) cell.  Every round packs from the group's ORIGINAL
+    # buffer — round k+1's pack has no data dependency on round k's route
+    # or unpack, so XLA may pack the next partition while the previous
+    # coalesced buffer is in flight (the threaded-partitioned-send
+    # analogue), and each round's arrivals unpack immediately
+    # (``MPI_Parrived``).  Src slabs and dst ghost windows are disjoint
+    # within a group, so packing from ``x0`` equals the uncoalesced order.
+    x0 = x
+    for chains in coalesced_rounds(messages):
+        for hops, parts in chains:
+            layout = coalesced_layout(parts, hops, p, x0.dtype)
+            buf = p.pack_coalesced(x0, layout)
+            buf = t.route_composed(buf, hops)
+            x = p.unpack_coalesced(x, buf, layout)
+    return x
+
+
 def deliver(
     x: jax.Array,
     messages: Iterable[Message],
     *,
     packer: str | Packer = "slice",
     transport: str | Transport = "ppermute",
+    coalesce: bool = False,
 ) -> jax.Array:
     """Deliver one *group* of independent messages: pack and route every
     message (and every partition, ``MPI_Pready``-style), then unpack all
@@ -551,18 +840,13 @@ def deliver(
     Within a group no message depends on another, so XLA is free to overlap
     all packs, transfers, and unpacks; sequencing *between* groups (the
     sequential schedule's axis passes) is the caller's ``exchange_messages``.
+    With ``coalesce=True`` messages aggregate into one wire buffer and one
+    composed collective per hop chain (partitions stay pipelined rounds).
     """
-    p = resolve_packer(packer)
-    t = resolve_transport(transport)
-    arrived: list[tuple[Message, jax.Array]] = []
-    for msg in messages:
-        for part in msg.partitions():
-            buf = p.pack(x, part.src_start, part.shape)  # pack
-            buf = t.route(buf, part.hops)  # start/send
-            arrived.append((part, buf))
-    for part, buf in arrived:  # unpack (disjoint ghost windows)
-        x = p.unpack(x, buf, part.dst_start, part.shape)
-    return x
+    return _deliver_group(
+        x, messages, resolve_packer(packer), resolve_transport(transport),
+        coalesce,
+    )
 
 
 def exchange_messages(
@@ -571,12 +855,14 @@ def exchange_messages(
     *,
     packer: str | Packer = "slice",
     transport: str | Transport = "ppermute",
+    coalesce: bool = False,
 ) -> jax.Array:
     """Deliver a full schedule: groups run in order (group *i+1* packs from
     the buffer group *i* unpacked into — the sequential corner trick),
-    messages within a group are independent."""
+    messages within a group are independent.  Backends resolve (and the
+    transport validates) exactly ONCE per schedule, not per group."""
     p = resolve_packer(packer)
     t = resolve_transport(transport)
     for group in groups:
-        x = deliver(x, group, packer=p, transport=t)
+        x = _deliver_group(x, group, p, t, coalesce)
     return x

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pack.pack import pack_2d, unpack_2d
+from repro.kernels.pack.pack import gather_pack_1d, pack_2d, unpack_2d
 from repro.kernels.pack import ref as _ref
 
 
@@ -59,6 +59,50 @@ def unpack_slab(
     else:
         vals = _ref.unpack_2d_ref(buf, out_dtype=out_dtype, scale=scale)
     return vals.reshape(shape)
+
+
+#: the gather kernel is untiled (the whole local block rides in VMEM, so
+#: every window is gatherable in one launch); blocks beyond this budget
+#: fall back to the jnp gather, which XLA tiles itself.  ~16 MB VMEM per
+#: core, minus headroom for the output buffer and double-buffering.
+GATHER_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def gather_pack(
+    x: jax.Array,
+    segments,
+    *,
+    total: int,
+    out_dtype=None,
+    scale: float = 1.0,
+    force_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fill one coalesced wire buffer in a single fused launch.
+
+    ``segments`` is a static offset table — ``WireSegment``-like values (or
+    ``(offset, src_start, shape)`` tuples) tiling ``[0, total)`` in order —
+    of every slab bound for one neighbor
+    (:meth:`repro.core.transport.Packer.pack_coalesced`).  One kernel launch
+    gathers all windows instead of one tiled copy per slab; off-TPU (and
+    for blocks too large for the untiled kernel's VMEM residency,
+    :data:`GATHER_VMEM_BUDGET_BYTES`) the jnp oracle keeps identical
+    semantics.
+    """
+    segs = tuple(
+        (int(s[0]), tuple(int(v) for v in s[1]), tuple(int(v) for v in s[2]))
+        if isinstance(s, tuple)
+        else (int(s.offset), tuple(int(v) for v in s.src_start),
+              tuple(int(v) for v in s.shape))
+        for s in segments
+    )
+    fits_vmem = x.size * x.dtype.itemsize <= GATHER_VMEM_BUDGET_BYTES
+    if force_kernel or (jax.default_backend() == "tpu" and fits_vmem):
+        return gather_pack_1d(x, segments=segs, total=total,
+                              out_dtype=out_dtype, scale=scale,
+                              interpret=interpret)
+    return _ref.gather_pack_ref(x, segs, total=total, out_dtype=out_dtype,
+                                scale=scale)
 
 
 def pack_face(

@@ -33,6 +33,31 @@ def unpack_slab_ref(
     return unpack_2d_ref(buf, out_dtype=out_dtype, scale=scale).reshape(shape)
 
 
+def gather_pack_ref(
+    x: jax.Array,
+    segments,
+    *,
+    total: int,
+    out_dtype=None,
+    scale: float = 1.0,
+) -> jax.Array:
+    """jnp oracle of the fused gather-pack: every ``(offset, start, shape)``
+    window of ``x`` laid end-to-end in one 1-D wire buffer."""
+    out_dtype = out_dtype or x.dtype
+    bufs = []
+    covered = 0
+    for offset, start, shape in segments:
+        assert offset == covered, "segments must tile the buffer in order"
+        limits = [s + n for s, n in zip(start, shape)]
+        slab = jax.lax.slice(x, list(start), limits).reshape(-1)
+        if scale != 1.0:
+            slab = slab.astype(jnp.float32) * scale
+        bufs.append(slab.astype(out_dtype))
+        covered += bufs[-1].size
+    assert covered == total, (covered, total)
+    return bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs)
+
+
 def pack_face_ref(
     x: jax.Array, array_axis: int, side: str, halo: int,
     *, out_dtype=None, scale: float = 1.0,

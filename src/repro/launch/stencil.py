@@ -215,6 +215,7 @@ def verify_strategy_cell(
     transport: str = "multihost",
     n_parts: int = 3,
     seed: int = 7,
+    coalesce: bool = True,
 ) -> None:
     """One correctness cell: exchange on the (possibly multi-process) mesh,
     then compare every *addressable* shard against the reference roll.
@@ -235,7 +236,8 @@ def verify_strategy_cell(
     want = reference_exchange(domain, interior)
     drv = make_driver(
         StrategyConfig(
-            name=strategy, n_parts=n_parts, packer=packer, transport=transport
+            name=strategy, n_parts=n_parts, packer=packer,
+            transport=transport, coalesce=coalesce,
         ),
         domain.mesh, domain.halo_spec, ndim=len(domain.global_interior),
     )
@@ -248,6 +250,7 @@ def verify_strategy_cell(
         data = np.asarray(shard.data)
         ref = want[shard.index]
         msg = (f"{strategy}@{packer}/{transport} n_parts={n_parts} "
+               f"coalesce={coalesce} "
                f"shard={shard.index} (rank {shard.device.process_index})")
         if rtol == 0.0 and atol == 0.0:
             np.testing.assert_array_equal(data, ref, err_msg=msg)

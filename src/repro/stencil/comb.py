@@ -60,6 +60,14 @@ class CycleResult:
     n_parts: int = 1
     packer: str = "slice"
     transport: str = "ppermute"
+    coalesce: bool = True
+    #: collectives ONE step launches (coalescing's one-per-neighbor claim,
+    #: verified against compiled HLO by tests/core/test_coalesce.py)
+    collective_count: int | None = None
+    #: persistent-plan amortization counters for THIS measurement's init
+    #: (hits > 0 means setup was skipped — the paper's amortized case)
+    plan_cache_inits: int = 0
+    plan_cache_hits: int = 0
 
     def record(self) -> dict:
         """Flat, json-serializable form (the BENCH_*.json row body)."""
@@ -78,13 +86,29 @@ def run_cycles(
 
     ``init_us`` is the measured one-time setup (trace+lower+compile) and is
     only charged to strategies declaring ``amortizes_init`` (no-op inits
-    would otherwise record timer noise).
+    would otherwise record timer noise).  The plan-cache hit/miss delta of
+    this init and the step's scheduled collective count ride along in the
+    result, so BENCH records can show the persistent-amortization and
+    message-coalescing effects directly.
     """
+    cache = driver.config.resolve_cache()
+    hits0, inits0 = (
+        (cache.stats.cache_hits, cache.stats.inits) if cache else (0, 0)
+    )
     t0 = time.perf_counter()
     driver.init(x)
     init_us = (time.perf_counter() - t0) * 1e6
     if not driver.amortizes_init:
         init_us = 0.0
+    if cache is not None:
+        plan_hits = cache.stats.cache_hits - hits0
+        plan_inits = cache.stats.inits - inits0
+    else:  # private plan: one init when the strategy amortizes, never a hit
+        plan_hits, plan_inits = 0, int(driver.amortizes_init)
+    try:
+        collective_count = driver.scheduled_collectives(x)
+    except NotImplementedError:
+        collective_count = None
 
     for _ in range(warmup):
         x = driver.step(x)
@@ -109,6 +133,10 @@ def run_cycles(
         n_parts=driver.n_parts,
         packer=driver.config.packer,
         transport=driver.config.transport,
+        coalesce=driver.config.coalesce,
+        collective_count=collective_count,
+        plan_cache_inits=plan_inits,
+        plan_cache_hits=plan_hits,
     )
 
 
@@ -121,12 +149,15 @@ def _as_config(
     return StrategyConfig(name=strategy, n_parts=n_parts)
 
 
-def result_label(name: str, packer: str = "slice") -> str:
+def result_label(name: str, packer: str = "slice",
+                 coalesce: bool = True) -> str:
     """The one definition of ``comb_measure``'s result-key convention:
     the strategy name, suffixed ``@packer`` for non-default packers (the
-    §VI packing axis).  Callers resolving a measurement by name — e.g. the
-    sweep's baseline lookup — must build the key through this."""
-    return name if packer == "slice" else f"{name}@{packer}"
+    §VI packing axis) and ``~uncoalesced`` for the coalesce-off baseline
+    cells.  Callers resolving a measurement by name — e.g. the sweep's
+    baseline lookup — must build the key through this."""
+    label = name if packer == "slice" else f"{name}@{packer}"
+    return label if coalesce else f"{label}~uncoalesced"
 
 
 def comb_measure(
@@ -155,7 +186,7 @@ def comb_measure(
     results: dict[str, CycleResult] = {}
     for strategy in strategies:
         config = _as_config(strategy, n_parts)
-        label = result_label(config.name, config.packer)
+        label = result_label(config.name, config.packer, config.coalesce)
         if label in results:
             label = f"{label}#p{config.n_parts}"
         if label in results:

@@ -49,6 +49,9 @@ def ExchangeDriver(
     config = StrategyConfig(
         name=strategy or spec.strategy,
         n_parts=max(1, spec.n_parts),
+        packer=spec.packer,
+        transport=spec.transport,
+        coalesce=spec.coalesce,
         plan_cache=plan_cache if plan_cache is not None else "private",
     )
     return make_driver(

@@ -39,14 +39,26 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import compat
-from repro.core.halo import HaloSpec, exchange, exchange_fused, ghost_pspec
+from repro.core.halo import (
+    HaloSpec,
+    exchange,
+    exchange_fused,
+    fused_message_group,
+    ghost_pspec,
+    sequential_message_groups,
+)
 from repro.core.plan import (
     PLANS,
     CommPlan,
     PlanCache,
     transport_plan,
 )
-from repro.core.transport import get_packer, get_transport
+from repro.core.transport import (
+    get_packer,
+    get_transport,
+    schedule_layouts,
+    scheduled_collective_count,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +86,13 @@ class StrategyConfig:
     ``transport``    — registered :class:`~repro.core.transport.Transport`
                        backend moving the packed buffers (``"ppermute"``
                        in-process; ``"multihost"`` is the multi-process seam).
+    ``coalesce``     — aggregate each delivery group's messages into ONE
+                       contiguous wire buffer + one composed collective per
+                       hop chain (static :class:`~repro.core.transport.
+                       WireLayout` offset tables recorded in the persistent
+                       plan; partitions stay pipelined rounds).  Default on;
+                       the off-path is the uncoalesced baseline cell of the
+                       §VI sweep's coalesce axis.
     """
 
     name: str = "standard"
@@ -82,6 +101,7 @@ class StrategyConfig:
     donate: bool = True
     packer: str = "slice"
     transport: str = "ppermute"
+    coalesce: bool = True
 
     def __post_init__(self):
         assert self.n_parts >= 1, self.n_parts
@@ -177,6 +197,7 @@ class ExchangeStrategy(abc.ABC):
         return spec.with_(
             strategy=self.name, n_parts=n_parts,
             packer=self.config.packer, transport=self.config.transport,
+            coalesce=self.config.coalesce,
         )
 
     # -- plan assembly ------------------------------------------------------
@@ -194,6 +215,45 @@ class ExchangeStrategy(abc.ABC):
         return compat.shard_map(
             step, mesh=self.mesh, in_specs=pspec, out_specs=pspec
         )
+
+    # -- schedule introspection ---------------------------------------------
+    def _local_block_shape(self, example_shape: tuple[int, ...]) -> tuple[int, ...]:
+        """Per-shard ghosted block shape of a globally stored example."""
+        spec = self.build_spec()
+        shape = list(example_shape)
+        for name, a in zip(spec.mesh_axes, spec.array_axes):
+            shape[a] //= self.mesh.shape[name]
+        return tuple(shape)
+
+    def _message_groups(
+        self, shape: tuple[int, ...], spec: HaloSpec
+    ) -> tuple[tuple, ...]:
+        """The strategy's message tables for one local block shape — the
+        same assembler the traced step runs, evaluated outside the trace
+        (axis sizes come from the mesh, not ``lax.axis_size``)."""
+        sizes = {name: self.mesh.shape[name] for name in spec.mesh_axes}
+        return sequential_message_groups(shape, spec, sizes)
+
+    def scheduled_collectives(self, example: jax.Array) -> int:
+        """Collectives one step launches — the §VI sweep records this next
+        to the plan-cache counters so coalescing's one-collective-per-
+        neighbor claim is visible in BENCH artifacts."""
+        spec = self.build_spec()
+        groups = self._message_groups(
+            self._local_block_shape(example.shape), spec
+        )
+        return scheduled_collective_count(groups, coalesce=spec.coalesce)
+
+    def wire_layouts(self, example: jax.Array) -> tuple:
+        """The coalesced schedule's static offset tables (empty when the
+        strategy runs uncoalesced) — what persistent plans record."""
+        spec = self.build_spec()
+        if not spec.coalesce:
+            return ()
+        groups = self._message_groups(
+            self._local_block_shape(example.shape), spec
+        )
+        return schedule_layouts(groups, spec.packer, example.dtype)
 
     # -- lifecycle ----------------------------------------------------------
     @abc.abstractmethod
@@ -340,11 +400,15 @@ class PersistentStrategy(ExchangeStrategy):
 
         The compiled executable is a *transport schedule*: its identity
         (plan name + structural cache key via :meth:`_plan_key` -> spec)
-        records the choreography kind and the packer/transport backends.
+        records the choreography kind, the packer/transport backends, and
+        the coalesce mode; a coalesced plan also records its static wire-
+        buffer offset tables (``plan.wire_layouts``), computed here exactly
+        once — the ``MPI_Send_init`` buffer-amortization analogue.
         """
         return transport_plan(
             self._build_step, example_args,
             schedule=self.build_spec().schedule_info(self.schedule_kind),
+            layouts=lambda: self.wire_layouts(example),
             donate_argnums=donate,
             cache=self.config.resolve_cache(), key=self._plan_key(example),
             name=f"halo_{self.name}@{self.config.packer}",
@@ -414,6 +478,10 @@ class FusedStrategy(PersistentStrategy):
 
     name = "fused"
     schedule_kind = "fused"
+
+    def _message_groups(self, shape, spec):
+        sizes = {name: self.mesh.shape[name] for name in spec.mesh_axes}
+        return (fused_message_group(shape, spec, sizes),)
 
     def _build_step(self) -> Callable[[jax.Array], jax.Array]:
         spec = self.build_spec()

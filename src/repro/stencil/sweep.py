@@ -13,10 +13,17 @@ swept here:
   ``global_interior``;
 * **packer**                — the registered transport-layer pack backend
   (``"slice"`` inline staging vs the ``"pallas"`` copy kernel,
-  :mod:`repro.core.transport`), swept as a first-class dimension.
+  :mod:`repro.core.transport`), swept as a first-class dimension;
+* **coalesce**              — wire-buffer message aggregation on/off
+  (``StrategyConfig.coalesce``): one contiguous buffer and ONE composed
+  collective per hop chain vs the historical per-message pipeline.  The
+  uncoalesced first mode hosts the baseline cell.
 
-Each cell's records carry ``packer``, ``transport``, ``process_count``,
-``is_multihost``, and ``wire_bytes`` fields.  The transport backend
+Each cell's records carry ``packer``, ``transport``, ``coalesce``,
+``process_count``, ``is_multihost``, ``wire_bytes``,
+``collective_count`` (what one step launches — the coalescing effect), and
+``plan_cache_inits``/``plan_cache_hits`` (the persistent-amortization
+counters) fields.  The transport backend
 (``"ppermute"`` in-process, ``"multihost"`` for multi-process meshes) is
 one ``SweepConfig.transport`` knob, and the fan-out is per-*process grid*:
 ``--processes N`` (``SweepConfig.processes``) boots every device-count cell
@@ -59,11 +66,32 @@ SCHEMA_VERSION = 1
 #: keys every sweep record carries (validated by tests/stencil/test_sweep.py)
 RECORD_KEYS = (
     "bench", "schema_version", "strategy", "n_devices", "n_parts",
-    "packer", "transport", "process_count", "is_multihost",
+    "packer", "transport", "coalesce", "process_count", "is_multihost",
     "global_interior", "mesh_shape", "message_bytes", "wire_bytes",
-    "us_per_cycle",
+    "us_per_cycle", "collective_count",
+    "plan_cache_inits", "plan_cache_hits",
     "init_us", "n_cycles", "repeats", "checksum", "speedup_vs_baseline",
 )
+
+
+def mesh_shape_for(n_devices: int, mesh_ndim: int) -> tuple[int, ...]:
+    """The cell's mesh shape: a 1-D row, or an ``(n/2, 2)`` torus when a
+    2-D cell is requested and the device count allows one."""
+    if mesh_ndim == 2 and n_devices >= 4 and n_devices % 2 == 0:
+        return (n_devices // 2, 2)
+    return (n_devices,)
+
+
+def _assert_decomposable(
+    size: tuple[int, ...], mesh_shape: tuple[int, ...], halo: int, why: str
+) -> None:
+    """The one size-vs-mesh validity rule (config construction AND the
+    in-process worker check use it — no drift)."""
+    assert len(size) >= len(mesh_shape), (size, mesh_shape)
+    for extent, k in zip(size, mesh_shape):
+        assert extent % k == 0 and extent // k >= 3 * halo, (
+            f"size {size} not decomposable over mesh {mesh_shape}; {why}"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,9 +109,17 @@ class SweepConfig:
     packers: tuple[str, ...] = ("slice", "pallas")
     #: transport backend every cell's messages move through
     transport: str = "ppermute"
+    #: wire-buffer coalescing modes to sweep; the FIRST entry hosts the
+    #: baseline cell (default: uncoalesced baseline, then coalesced)
+    coalesce_modes: tuple[bool, ...] = (False, True)
     #: jax.distributed grid size per cell (1 = the historical in-process
     #: fan-out; >1 boots each device count as a real multi-process grid)
     processes: int = 1
+    #: mesh dimensionality per cell: 1 = the paper's 1-D process row
+    #: (historical); 2 = an (n/2, 2) torus decomposing the first two array
+    #: axes — edges/corners exist, so wire-buffer coalescing has chains to
+    #: merge (the smoke grid uses this)
+    mesh_ndim: int = 1
     baseline: str = "standard"
     halo: int = 1
     n_cycles: int = 20
@@ -95,6 +131,13 @@ class SweepConfig:
             f"baseline {self.baseline!r} must be swept"
         )
         assert self.packers, "at least one packer must be swept"
+        assert self.coalesce_modes, "at least one coalesce mode must be swept"
+        assert all(isinstance(c, bool) for c in self.coalesce_modes), (
+            self.coalesce_modes
+        )
+        assert len(set(self.coalesce_modes)) == len(self.coalesce_modes), (
+            self.coalesce_modes
+        )
         assert self.processes >= 1, self.processes
         # fail at construction, not minutes later in a worker subprocess
         from repro.core.transport import get_packer, get_transport
@@ -102,14 +145,16 @@ class SweepConfig:
         for p in self.packers:
             get_packer(p)
         get_transport(self.transport)
+        assert self.mesh_ndim in (1, 2), self.mesh_ndim
         for n in self.device_counts:
             assert n % self.processes == 0, (
                 f"device count {n} not divisible into {self.processes} "
                 f"process ranks"
             )
             for size in self.sizes:
-                assert size[0] % n == 0 and size[0] // n >= 3 * self.halo, (
-                    f"size {size} not decomposable over {n} devices"
+                _assert_decomposable(
+                    size, mesh_shape_for(n, self.mesh_ndim), self.halo,
+                    f"device count {n}",
                 )
 
     def to_json(self) -> str:
@@ -123,6 +168,12 @@ class SweepConfig:
         raw["sizes"] = tuple(tuple(s) for s in raw["sizes"])
         raw["strategies"] = tuple(raw["strategies"])
         raw["packers"] = tuple(raw.get("packers", ("slice",)))
+        # pre-coalescing config jsons ran the historical uncoalesced path
+        # on 1-D mesh rows
+        raw["coalesce_modes"] = tuple(
+            bool(c) for c in raw.get("coalesce_modes", (False,))
+        )
+        raw.setdefault("mesh_ndim", 1)
         return cls(**raw)
 
 
@@ -143,26 +194,31 @@ def _size_records(
     from repro.stencil.domain import Domain
     from repro.stencil.strategies import StrategyConfig, get_strategy
 
-    mesh = make_mesh((n_devices,), ("px",),
+    mesh_shape = mesh_shape_for(n_devices, config.mesh_ndim)
+    axis_names = ("px", "py")[: len(mesh_shape)]
+    mesh = make_mesh(mesh_shape, axis_names,
                      devices=jax.devices()[:n_devices])
     domain = Domain(
         mesh,
         global_interior=tuple(size),
-        mesh_axes=("px",) + (None,) * (len(size) - 1),
+        mesh_axes=axis_names + (None,) * (len(size) - len(mesh_shape)),
         halo=config.halo,
     )
     strat_configs = []
-    for packer in config.packers:
-        knobs = dict(packer=packer, transport=config.transport)
-        for s in config.strategies:
-            if get_strategy(s).uses_partitions:
-                strat_configs.extend(
-                    StrategyConfig(name=s, n_parts=p, **knobs)
-                    for p in config.part_counts
-                )
-            else:
-                # the partition-count axis does not apply: once per packer
-                strat_configs.append(StrategyConfig(name=s, **knobs))
+    for coalesce in config.coalesce_modes:
+        for packer in config.packers:
+            knobs = dict(packer=packer, transport=config.transport,
+                         coalesce=coalesce)
+            for s in config.strategies:
+                if get_strategy(s).uses_partitions:
+                    strat_configs.extend(
+                        StrategyConfig(name=s, n_parts=p, **knobs)
+                        for p in config.part_counts
+                    )
+                else:
+                    # the partition-count axis does not apply: once per
+                    # (packer, coalesce mode)
+                    strat_configs.append(StrategyConfig(name=s, **knobs))
     results = comb_measure(
         domain,
         strategies=tuple(strat_configs),
@@ -170,11 +226,14 @@ def _size_records(
         repeats=config.repeats,
         seed=config.seed,
     )
-    # every cell (incl. both packers) is normalized to the ONE baseline run
-    # — the first-packer `standard` — so the packing axis shows up in the
-    # speedup, not as a moving denominator.
+    # every cell (incl. all packers and coalesce modes) is normalized to
+    # the ONE baseline run — the first-packer first-mode `standard` — so
+    # the packing and coalescing axes show up in the speedup, not as a
+    # moving denominator.
     speedups = speedup_vs_baseline(
-        results, result_label(config.baseline, config.packers[0])
+        results,
+        result_label(config.baseline, config.packers[0],
+                     config.coalesce_modes[0]),
     )
     import numpy as _np
 
@@ -192,7 +251,7 @@ def _size_records(
             "process_count": n_proc,
             "is_multihost": n_proc > 1,
             "global_interior": list(size),
-            "mesh_shape": [n_devices],
+            "mesh_shape": list(mesh_shape),
             "message_bytes": message_bytes,
             # what the face actually costs on the wire under this record's
             # packer (compressed packers shrink it)
@@ -218,9 +277,9 @@ def sweep_cells(
     n = n_devices or min(max(config.device_counts), len(jax.devices()))
     assert n <= len(jax.devices()), (n, len(jax.devices()))
     for size in config.sizes:
-        assert size[0] % n == 0 and size[0] // n >= 3 * config.halo, (
-            f"size {size} not decomposable over the {n} devices this "
-            f"process ended up with; pass n_devices= explicitly"
+        _assert_decomposable(
+            size, mesh_shape_for(n, config.mesh_ndim), config.halo,
+            "this process's device count; pass n_devices= explicitly",
         )
     records = []
     for size in config.sizes:
@@ -320,6 +379,7 @@ def summarize(records: Sequence[dict]) -> list[str]:
     for r in records:
         name = (f"sweep/d{r['n_devices']}/p{r['n_parts']}"
                 f"/m{r['message_bytes']}/{r.get('packer', 'slice')}"
+                f"/c{int(bool(r.get('coalesce', False)))}"
                 f"/{r['strategy']}")
         pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
         rows.append(f"{name},{r['us_per_cycle']:.1f},"
@@ -327,13 +387,66 @@ def summarize(records: Sequence[dict]) -> list[str]:
     return rows
 
 
+def regression_failures(
+    baseline_records: Sequence[dict],
+    records: Sequence[dict],
+    *,
+    threshold: float = 0.25,
+) -> list[str]:
+    """Compare a fresh sweep against a committed baseline sweep.
+
+    Per *strategy* present in BOTH record sets, the best
+    ``speedup_vs_baseline`` across all its cells must not fall more than
+    ``threshold`` below the committed best.  Speedups (not absolute
+    microseconds) are compared, so the guard survives CI machines of
+    different speeds; keying by strategy (not per-cell coordinate) keeps
+    the max over ~a dozen cells, whose run-to-run noise is far below any
+    single tiny cell's — single-cell jitter on the 3-cycle smoke grid
+    exceeds 25%, so a finer key would flash red on identical code.  The
+    check is only meaningful when both runs swept comparable grids (CI
+    runs it on the full-matrix smoke job, never the restricted ``--packer``
+    cells).  Returns human-readable failure lines (empty = pass).
+    """
+
+    def best(recs: Sequence[dict]) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in recs:
+            out[r["strategy"]] = max(r["speedup_vs_baseline"],
+                                     out.get(r["strategy"], 0.0))
+        return out
+
+    old, new = best(baseline_records), best(records)
+    fails = []
+    for strategy in sorted(set(old) & set(new)):
+        floor = old[strategy] * (1.0 - threshold)
+        if new[strategy] < floor:
+            fails.append(
+                f"{strategy}: best speedup {new[strategy]:.3f} fell below "
+                f"{floor:.3f} (committed {old[strategy]:.3f}, threshold "
+                f"{threshold:.0%})"
+            )
+    return fails
+
+
+def check_against_baseline(
+    records: Sequence[dict], baseline_path: str, *, threshold: float = 0.25
+) -> list[str]:
+    """CLI helper: load the committed BENCH baseline and diff ``records``."""
+    baseline_records, _config = read_bench_json(baseline_path)
+    return regression_failures(baseline_records, records,
+                               threshold=threshold)
+
+
 def smoke_config(
-    n_devices: int = 4, packers: tuple[str, ...] | None = None
+    n_devices: int = 4,
+    packers: tuple[str, ...] | None = None,
+    coalesce_modes: tuple[bool, ...] | None = None,
 ) -> SweepConfig:
     """A 1-cell grid over ALL registered strategies x ALL registered
-    packers (incl. the wire-compressed ones) — the CI ``sweep-smoke``
-    step: any strategy or packer whose exchange regresses (crashes,
-    diverges, loses its speedup record) surfaces here in seconds.
+    packers (incl. the wire-compressed ones) x both coalesce modes — the
+    CI ``sweep-smoke`` step: any strategy, packer, or coalesce path whose
+    exchange regresses (crashes, diverges, loses its speedup record)
+    surfaces here in seconds.
 
     The decomposed extent scales with the device count (4 cells per
     shard), so the smoke grid stays valid at any ``--processes`` fan-out
@@ -348,6 +461,12 @@ def smoke_config(
         sizes=((4 * n_devices, 8),),
         strategies=tuple(available_strategies()), n_cycles=3, repeats=1,
         packers=available_packers() if packers is None else packers,
+        coalesce_modes=(
+            (False, True) if coalesce_modes is None else coalesce_modes
+        ),
+        # a 2-D (n/2, 2) torus: edges/corners exist, so the coalesce axis
+        # has hop chains to merge (3 vs 12 collectives for a fused cell)
+        mesh_ndim=2,
     )
 
 
@@ -398,6 +517,18 @@ def main(argv: Sequence[str] | None = None) -> None:
     ap.add_argument("--packer", metavar="NAME",
                     help="restrict the packer axis to ONE registered packer "
                          "(default: sweep the config's packers)")
+    ap.add_argument("--coalesce", choices=("on", "off", "both"),
+                    default="both",
+                    help="restrict the wire-buffer coalescing axis "
+                         "(default: sweep both modes; the uncoalesced cell "
+                         "hosts the baseline when present)")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="after the run, diff the records against this "
+                         "committed BENCH baseline and exit non-zero if any "
+                         "strategy's speedup regressed beyond the threshold")
+    ap.add_argument("--check-threshold", type=float, default=0.25,
+                    help="allowed fractional speedup regression for --check "
+                         "(default 0.25)")
     ap.add_argument("--processes", type=int, default=1,
                     help="boot every device-count cell as an N-rank "
                          "jax.distributed grid (real multihost transport; "
@@ -438,6 +569,21 @@ def main(argv: Sequence[str] | None = None) -> None:
             ap.error(f"--packer must be one of {available_packers()}, "
                      f"got {args.packer!r}")
 
+    coalesce_modes = {"on": (True,), "off": (False,), "both": None}[
+        args.coalesce
+    ]
+
+    def maybe_check(records) -> None:
+        if not args.check:
+            return
+        fails = check_against_baseline(records, args.check,
+                                       threshold=args.check_threshold)
+        if fails:
+            for line in fails:
+                print(f"REGRESSION: {line}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"# regression check vs {args.check}: ok")
+
     if args.smoke:
         if args.processes > 1:
             # a real grid cannot be joined from this already-running
@@ -446,6 +592,7 @@ def main(argv: Sequence[str] | None = None) -> None:
             config = smoke_config(
                 2 * args.processes,
                 packers=(args.packer,) if args.packer else None,
+                coalesce_modes=coalesce_modes,
             )
             config = dataclasses.replace(
                 config, processes=args.processes, transport="multihost",
@@ -468,7 +615,8 @@ def main(argv: Sequence[str] | None = None) -> None:
                     + f" --xla_force_host_platform_device_count={n}"
                 ).strip()
             config = smoke_config(
-                n, packers=(args.packer,) if args.packer else None
+                n, packers=(args.packer,) if args.packer else None,
+                coalesce_modes=coalesce_modes,
             )
             records = sweep_cells(config, n_devices=n)
         write_bench_json(
@@ -479,6 +627,7 @@ def main(argv: Sequence[str] | None = None) -> None:
         for row in summarize(records):
             print(row)
         print(f"# smoke: {len(records)} records -> {args.out}")
+        maybe_check(records)
         return
 
     config = SweepConfig()
@@ -488,6 +637,8 @@ def main(argv: Sequence[str] | None = None) -> None:
         )
     if args.packer:
         config = dataclasses.replace(config, packers=(args.packer,))
+    if coalesce_modes is not None:
+        config = dataclasses.replace(config, coalesce_modes=coalesce_modes)
     if args.processes > 1:
         config = dataclasses.replace(
             config, processes=args.processes, transport="multihost",
@@ -499,6 +650,7 @@ def main(argv: Sequence[str] | None = None) -> None:
     for row in summarize(records):
         print(row)
     print(f"# wrote {len(records)} records -> {args.out}")
+    maybe_check(records)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ _WIRE_ITEMSIZE = {"slice": 4, "pallas": 4, "bf16": 2, "scaled-int8": 1}
 
 
 def _record(strategy, n_devices, size, n_parts, us, base_us,
-            packer="slice"):
+            packer="slice", coalesce=False):
     return {
         "bench": "stencil_sweep",
         "schema_version": SCHEMA_VERSION,
@@ -35,6 +35,7 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
         "n_parts": n_parts,
         "packer": packer,
         "transport": "ppermute",
+        "coalesce": coalesce,
         "process_count": 1,
         "is_multihost": False,
         "global_interior": list(size),
@@ -42,6 +43,9 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
         "message_bytes": size[1] * 4,
         "wire_bytes": size[1] * _WIRE_ITEMSIZE[packer],
         "us_per_cycle": us,
+        "collective_count": (n_parts if coalesce else 2 * n_parts),
+        "plan_cache_inits": 0 if strategy == "standard" else 1,
+        "plan_cache_hits": 0,
         "init_us": 0.0 if strategy == "standard" else 120.0,
         "n_cycles": 3,
         "repeats": 1,
@@ -51,28 +55,32 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
 
 
 def _synth_records():
-    """Two device counts x two sizes x three packers (one wire-compressed);
-    partitioned at p=1,2."""
+    """Two device counts x two sizes x three packers (one wire-compressed)
+    x both coalesce modes; partitioned at p=1,2."""
     records = []
     for n_devices in (2, 4):
         for size in ((16, 8), (32, 16)):
             base_us = 100.0 * n_devices
-            for pk, gain in (("slice", 1.0), ("pallas", 1.25),
-                             ("bf16", 1.5)):
-                records.append(
-                    _record("standard", n_devices, size, 1, base_us / gain,
-                            base_us, pk)
-                )
-                for i, s in enumerate(("persistent", "fused", "overlap")):
+            for coalesce, cgain in ((False, 1.0), (True, 1.2)):
+                for pk, gain in (("slice", 1.0), ("pallas", 1.25),
+                                 ("bf16", 1.5)):
+                    gain = gain * cgain
                     records.append(
-                        _record(s, n_devices, size, 1,
-                                base_us / (2 + i) / gain, base_us, pk)
+                        _record("standard", n_devices, size, 1,
+                                base_us / gain, base_us, pk, coalesce)
                     )
-                for p in (1, 2):
-                    records.append(
-                        _record("partitioned", n_devices, size, p,
-                                base_us / (3 + p) / gain, base_us, pk)
-                    )
+                    for i, s in enumerate(("persistent", "fused", "overlap")):
+                        records.append(
+                            _record(s, n_devices, size, 1,
+                                    base_us / (2 + i) / gain, base_us, pk,
+                                    coalesce)
+                        )
+                    for p in (1, 2):
+                        records.append(
+                            _record("partitioned", n_devices, size, p,
+                                    base_us / (3 + p) / gain, base_us, pk,
+                                    coalesce)
+                        )
     return records
 
 
@@ -113,10 +121,12 @@ def test_one_row_per_strategy_cell(emitted):
     names = [name for name, _, _ in out["rows"]]
     assert len(names) == len(set(names))  # (strategy, cell) keys are unique
     # and each row's name encodes the full cell coordinate incl. packer
+    # and coalesce mode
     for name in names:
-        _, d, p, m, packer, strategy = name.split("/")
+        _, d, p, m, packer, coal, strategy = name.split("/")
         assert strategy in STRATEGIES
         assert packer in ("slice", "pallas", "bf16")
+        assert coal in ("c0", "c1")
         assert d.startswith("d") and p.startswith("p") and m.startswith("m")
 
 
@@ -130,10 +140,10 @@ def test_no_nan_speedups(emitted):
             assert math.isfinite(pct)
 
 
-def test_curves_cover_all_five_sweep_axes(emitted):
+def test_curves_cover_all_six_sweep_axes(emitted):
     _, out = emitted
     assert set(out["curves"]) == {
-        "devices", "parts", "msgsize", "packer", "wirebytes",
+        "devices", "parts", "msgsize", "packer", "wirebytes", "coalesce",
     }
     assert {d for _, d in out["curves"]["devices"]} == {2, 4}
     # the partition axis reaches 2 only for the partitioning strategy
@@ -144,11 +154,51 @@ def test_curves_cover_all_five_sweep_axes(emitted):
     for axis in ("devices", "parts", "msgsize"):
         assert all(s != "standard" for s, _ in out["curves"][axis])
     # ...but DOES on the packer axis: standard@pallas vs standard@slice is
-    # the packing effect itself
+    # the packing effect itself (best across coalesce modes: the coalesced
+    # slice cell carries the 20% synthetic coalescing gain)
     packer_curve = out["curves"]["packer"]
     assert {pk for _, pk in packer_curve} == {"slice", "pallas", "bf16"}
-    assert packer_curve[("standard", "slice")] == pytest.approx(0.0)
-    assert packer_curve[("standard", "pallas")] > 0.0
+    assert packer_curve[("standard", "slice")] == pytest.approx(20.0)
+    assert packer_curve[("standard", "pallas")] > 20.0
+
+
+def test_coalesce_axis_isolates_aggregation_gain(emitted):
+    """The coalesce curve separates the aggregation effect: each strategy's
+    coalesced point beats its uncoalesced one by the synthetic 1.2x gain
+    (the best standard cells are bf16-packed: +50% -> +80%)."""
+    _, out = emitted
+    coalesce_curve = out["curves"]["coalesce"]
+    assert {c for _, c in coalesce_curve} == {False, True}
+    assert coalesce_curve[("standard", False)] == pytest.approx(50.0)
+    assert coalesce_curve[("standard", True)] == pytest.approx(80.0)
+    for strategy in STRATEGIES:
+        assert coalesce_curve[(strategy, True)] > coalesce_curve[
+            (strategy, False)
+        ], strategy
+
+
+def test_amortization_rows_render_counters(emitted):
+    """Plan-cache hit/miss counters and per-cell collective counts reach
+    the rendered output (the persistent-amortization evidence rows)."""
+    rows, out = emitted
+    amort = out["amortization"]
+    assert len(amort) == len(_synth_records())
+    for name, inits, hits, colls in amort:
+        assert name.startswith("fig_sweep/amortization/")
+        assert inits in (0, 1) and hits == 0
+        assert isinstance(colls, int) and colls > 0
+    emitted_amort = [r for r in rows if "/amortization/" in r[0]]
+    assert len(emitted_amort) == len(amort)
+    for _, _, derived in emitted_amort:
+        assert derived.startswith("plan_inits=")
+        assert "collectives=" in derived
+    # legacy records (no counters) render no amortization rows
+    legacy = [dict(r) for r in _synth_records()]
+    for r in legacy:
+        del r["plan_cache_inits"], r["plan_cache_hits"]
+        del r["collective_count"]
+    out2 = fig_sweep(lambda *a: None, records=legacy)
+    assert out2["amortization"] == []
 
 
 def test_wire_bytes_axis_tracks_compression(emitted):
@@ -161,8 +211,9 @@ def test_wire_bytes_axis_tracks_compression(emitted):
     # point (its large-face wire of 32 coincides with the small slice face)
     assert coords == {16, 32, 64}
     # the 16-byte point exists ONLY via the compressed wire, and carries
-    # standard@bf16's gain over the uncompressed baseline
-    assert wire_curve[("standard", 16)] == pytest.approx(50.0)
+    # standard@bf16's gain over the uncompressed baseline (best across
+    # coalesce modes: 1.5 packing x 1.2 coalescing -> +80%)
+    assert wire_curve[("standard", 16)] == pytest.approx(80.0)
     # pre-compression records (no wire_bytes key) fall back to message_bytes
     legacy = [dict(r) for r in _synth_records()]
     for r in legacy:

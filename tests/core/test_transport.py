@@ -102,6 +102,9 @@ def test_schedule_info_tag_records_backends():
     info = ScheduleInfo("fused", ("px", "py"), packer="pallas",
                         transport="multihost")
     assert info.tag() == "fused[pxxpy]@pallas/multihost"
+    coalesced = ScheduleInfo("fused", ("px", "py"), packer="pallas",
+                             transport="multihost", coalesce=True)
+    assert coalesced.tag() == "fused[pxxpy]@pallas/multihost+coalesced"
 
 
 # ---------------------------------------------------------------------------

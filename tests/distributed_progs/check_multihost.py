@@ -80,6 +80,21 @@ for strategy in available_strategies():
     )
 ok("2-axis mesh (px crosses ranks): all strategies incl. fused corners")
 
+# --- both coalesce modes cross the process boundary ------------------------
+# (the default above is the coalesced path: composed joint-axis collectives;
+# this pins the per-message baseline to the same bitwise oracle, so the
+# coalesce knob can never silently change what crosses the wire)
+for coalesce in (True, False):
+    verify_strategy_cell(
+        dom2, strategy="fused", packer="slice", transport="multihost",
+        n_parts=1, coalesce=coalesce,
+    )
+    verify_strategy_cell(
+        dom2, strategy="partitioned", packer="slice", transport="multihost",
+        n_parts=3, coalesce=coalesce,
+    )
+ok("coalesced AND uncoalesced fused/partitioned bitwise across ranks")
+
 # --- wire-compressed packers within documented tolerance -------------------
 for packer in ("bf16", "scaled-int8"):
     verify_strategy_cell(

@@ -10,7 +10,7 @@ bitwise equality — a far stronger oracle than the historical mean-checksum
 agreement check in ``comb_measure``.
 
 The property draws (ndim, domain shape, halo width, n_parts, strategy,
-packer) through :mod:`repro.testing` (real hypothesis when installed, the
+packer, coalesce mode) through :mod:`repro.testing` (real hypothesis when installed, the
 deterministic seeded fallback otherwise); a deterministic parametrized pass
 guarantees every registered strategy is exercised on 1-D/2-D/3-D under BOTH
 exact transport-layer packers (``slice`` inline staging and the ``pallas``
@@ -78,7 +78,7 @@ PACKERS = ("slice", "pallas")
 
 
 def _assert_strategy_matches_reference(
-    domain, strategy, n_parts, seed, packer="slice"
+    domain, strategy, n_parts, seed, packer="slice", coalesce=True
 ):
     """Exact packers: bitwise.  Wire-compressed packers: the packer's own
     documented ``wire_tolerance`` — tolerance-aware, never looser."""
@@ -88,7 +88,8 @@ def _assert_strategy_matches_reference(
     interior = rng.normal(size=domain.global_interior).astype(domain.dtype)
     want = reference_exchange(domain, interior)
     drv = make_driver(
-        StrategyConfig(name=strategy, n_parts=n_parts, packer=packer),
+        StrategyConfig(name=strategy, n_parts=n_parts, packer=packer,
+                       coalesce=coalesce),
         domain.mesh, domain.halo_spec, ndim=len(domain.global_interior),
     )
     try:
@@ -98,7 +99,7 @@ def _assert_strategy_matches_reference(
     finally:
         drv.free()
     err_msg = (f"{strategy} n_parts={n_parts} packer={packer} "
-               f"halo={domain.halo} "
+               f"coalesce={coalesce} halo={domain.halo} "
                f"interior={domain.global_interior} "
                f"mesh={dict(domain.mesh.shape)}")
     rtol, atol = get_packer(packer).wire_tolerance(domain.dtype)
@@ -120,9 +121,10 @@ def _assert_strategy_matches_reference(
     n_parts=st.integers(1, 6),
     strategy=st.sampled_from(available_strategies()),
     packer=st.sampled_from(PACKERS),
+    coalesce=st.sampled_from((True, False)),
 )
 def test_any_strategy_matches_reference_roll(
-    ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy, packer
+    ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy, packer, coalesce
 ):
     domain = _build_domain(ndim, mesh_idx, halo, (e0, e1, e2))
     # stable across processes (hash() of a str varies with PYTHONHASHSEED,
@@ -130,7 +132,8 @@ def test_any_strategy_matches_reference_roll(
     seed = zlib.crc32(
         repr((ndim, mesh_idx, halo, e0, e1, e2, n_parts, strategy)).encode()
     )
-    _assert_strategy_matches_reference(domain, strategy, n_parts, seed, packer)
+    _assert_strategy_matches_reference(domain, strategy, n_parts, seed,
+                                       packer, coalesce)
 
 
 # deterministic floor: every registered strategy, every dimensionality,
@@ -159,6 +162,18 @@ def test_every_strategy_on_8_devices(strategy, packer, ndim, shape, interior,
     )
     _assert_strategy_matches_reference(
         domain, strategy, n_parts=3, seed=7, packer=packer
+    )
+
+
+@pytest.mark.parametrize("strategy", available_strategies())
+def test_every_strategy_uncoalesced_on_8_devices(strategy):
+    """The coalesce-off baseline path stays held to the same oracle: every
+    strategy, 3-D corners included, per-message delivery (the default-on
+    coalesced path is what the matrix above exercises)."""
+    mesh = make_mesh((2, 2, 2), AXIS_NAMES, devices=jax.devices()[:8])
+    domain = Domain(mesh, global_interior=(8, 6, 4), mesh_axes=AXIS_NAMES)
+    _assert_strategy_matches_reference(
+        domain, strategy, n_parts=3, seed=5, coalesce=False
     )
 
 

@@ -32,12 +32,12 @@ SMALL = SweepConfig(
 
 
 def _expected_cells(cfg: SweepConfig) -> int:
-    """Partitioning strategies get one record per (partition count, packer);
-    the partition-count axis does not apply to the others (one record per
-    packer each)."""
+    """Partitioning strategies get one record per (partition count, packer,
+    coalesce mode); the partition-count axis does not apply to the others
+    (one record per packer x coalesce mode each)."""
     from repro.stencil.strategies import get_strategy
 
-    return len(cfg.packers) * sum(
+    return len(cfg.packers) * len(cfg.coalesce_modes) * sum(
         len(cfg.part_counts) if get_strategy(s).uses_partitions else 1
         for s in cfg.strategies
     )
@@ -77,8 +77,9 @@ def test_init_only_charged_to_non_standard(records):
 
 def test_speedup_vs_baseline_per_cell(records):
     for rec in records:
-        if rec["strategy"] == "standard" and rec["packer"] == "slice":
-            # the one denominator: the first-packer standard run
+        if (rec["strategy"] == "standard" and rec["packer"] == "slice"
+                and rec["coalesce"] is SMALL.coalesce_modes[0]):
+            # the one denominator: the first-packer first-mode standard run
             assert rec["speedup_vs_baseline"] == pytest.approx(1.0)
         else:
             assert rec["speedup_vs_baseline"] > 0.0
@@ -86,9 +87,10 @@ def test_speedup_vs_baseline_per_cell(records):
 
 def test_no_duplicate_coordinates(records):
     """Non-partitioned strategies must not be re-measured per partition cell
-    — every (strategy, n_parts, size, devices) coordinate appears once."""
+    — every (strategy, n_parts, packer, coalesce, size, devices) coordinate
+    appears once."""
     coords = [
-        (r["strategy"], r["n_parts"], r["packer"],
+        (r["strategy"], r["n_parts"], r["packer"], r["coalesce"],
          tuple(r["global_interior"]), r["n_devices"])
         for r in records
     ]
@@ -104,11 +106,14 @@ def test_partition_axis_swept(records):
 
 def test_new_overlap_strategies_in_sweep_output(records):
     """Acceptance: fused and overlap appear with finite speedups, once per
-    swept packer."""
+    (packer, coalesce mode)."""
     for strategy in ("fused", "overlap"):
         rows = [r for r in records if r["strategy"] == strategy]
-        assert len(rows) == len(SMALL.packers), strategy
+        assert len(rows) == len(SMALL.packers) * len(SMALL.coalesce_modes), (
+            strategy
+        )
         assert {r["packer"] for r in rows} == set(SMALL.packers)
+        assert {r["coalesce"] for r in rows} == set(SMALL.coalesce_modes)
         for row in rows:
             sp = row["speedup_vs_baseline"]
             assert np.isfinite(sp) and sp > 0, (strategy, sp)
@@ -212,6 +217,93 @@ def test_compressed_packers_shrink_wire_bytes():
         json.dumps(r)
 
 
+def test_coalesce_axis_swept(records):
+    """Acceptance: every (strategy, packer) cell exists under BOTH coalesce
+    modes, and the mode is stamped on the record."""
+    assert {r["coalesce"] for r in records} == {False, True}
+    by_mode = {}
+    for r in records:
+        by_mode.setdefault(r["coalesce"], set()).add(
+            (r["strategy"], r["n_parts"], r["packer"])
+        )
+    assert by_mode[False] == by_mode[True]
+
+
+def test_collective_counts_recorded_and_shrunk_by_coalescing(records):
+    """Every record carries the step's scheduled collective count, and the
+    coalesced cell of a given coordinate never launches more collectives
+    than its uncoalesced twin (composed chains + shared-neighbor merging)."""
+    by_coord = {}
+    for r in records:
+        assert isinstance(r["collective_count"], int)
+        assert r["collective_count"] > 0  # multi-device: something moves
+        by_coord[(r["strategy"], r["n_parts"], r["packer"],
+                  r["coalesce"])] = r["collective_count"]
+    for (strategy, n_parts, packer, coalesce), n in by_coord.items():
+        if coalesce:
+            assert n <= by_coord[(strategy, n_parts, packer, False)], (
+                strategy, n_parts, packer
+            )
+
+
+def test_plan_cache_counters_recorded(records):
+    """Private-plan strategies record one init and no hits; the standard
+    baseline records neither (nothing is amortized)."""
+    for r in records:
+        if r["strategy"] == "standard":
+            assert r["plan_cache_inits"] == 0
+        else:
+            assert r["plan_cache_inits"] == 1, r["strategy"]
+        assert r["plan_cache_hits"] == 0
+
+
+def test_regression_failures_guard():
+    from repro.stencil.sweep import regression_failures
+
+    def rec(strategy, speedup):
+        return {"strategy": strategy, "speedup_vs_baseline": speedup}
+
+    committed = [rec("persistent", 2.0), rec("fused", 3.0)]
+    # within threshold: 2.0 -> 1.6 is exactly -20% (< 25%)
+    assert regression_failures(
+        committed, [rec("persistent", 1.6), rec("fused", 3.1)]
+    ) == []
+    # beyond threshold: fused collapsed
+    fails = regression_failures(
+        committed, [rec("persistent", 2.0), rec("fused", 1.0)]
+    )
+    assert len(fails) == 1 and "fused" in fails[0]
+    # a strategy only one side measured is ignored
+    assert regression_failures(committed, [rec("persistent", 2.0)]) == []
+    # the BEST cell per strategy is what is guarded (single-cell jitter on
+    # the 3-cycle smoke grid must not flash red on identical code)
+    assert regression_failures(
+        committed, [rec("fused", 0.5), rec("fused", 2.9),
+                    rec("persistent", 1.9)]
+    ) == []
+
+
+def test_committed_bench_baseline_matches_smoke_grid():
+    """The repo-committed BENCH_stencil_sweep.json (the CI regression
+    baseline) must carry the smoke grid's schema and the coalesce axis."""
+    import os
+
+    from repro.stencil.sweep import read_bench_json
+
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "BENCH_stencil_sweep.json")
+    records, config = read_bench_json(path)
+    assert config is not None and config["smoke"] is True
+    assert records, "committed baseline is empty"
+    for rec in records:
+        for key in RECORD_KEYS:
+            assert key in rec, f"committed baseline missing {key}"
+    assert {r["coalesce"] for r in records} == {False, True}
+    strategies = {r["strategy"] for r in records}
+    assert {"standard", "persistent", "partitioned", "fused",
+            "overlap"} <= strategies
+
+
 def test_config_block_stamps_process_shape(tmp_path, records):
     from repro.stencil.sweep import config_block
 
@@ -259,7 +351,8 @@ def test_bench_json_config_block_roundtrip(tmp_path, records):
 
 def test_config_json_roundtrip():
     cfg = SweepConfig(device_counts=(2, 4), part_counts=(1, 2),
-                      sizes=((32, 16),), packers=("pallas",))
+                      sizes=((32, 16),), packers=("pallas",),
+                      coalesce_modes=(True,))
     assert SweepConfig.from_json(cfg.to_json()) == cfg
     # a pre-packer-axis config json (no "packers" key) defaults to slice
     import json as _json
@@ -267,6 +360,13 @@ def test_config_json_roundtrip():
     raw = _json.loads(cfg.to_json())
     del raw["packers"]
     assert SweepConfig.from_json(_json.dumps(raw)).packers == ("slice",)
+    # a pre-coalescing config json ran the historical uncoalesced path
+    del raw["coalesce_modes"]
+    assert SweepConfig.from_json(_json.dumps(raw)).coalesce_modes == (False,)
+    with pytest.raises(AssertionError):
+        SweepConfig(coalesce_modes=())  # at least one mode
+    with pytest.raises(AssertionError):
+        SweepConfig(coalesce_modes=(True, True))  # duplicate cells
 
 
 @pytest.mark.slow
