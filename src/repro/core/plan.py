@@ -50,6 +50,9 @@ class PlanStats:
     cache_hits: int = 0
     init_seconds: float = 0.0
     frees: int = 0
+    #: plans dropped because their topology died under them (elastic
+    #: re-meshing); the next get_or_init on the new mesh pays a fresh init
+    invalidations: int = 0
 
 
 class CommPlan:
@@ -193,6 +196,29 @@ class PlanCache:
             self.stats.inits += 1
             self.stats.init_seconds += plan.init_seconds
         return plan
+
+    def invalidate(self, predicate: Callable[[Hashable], bool] | None = None) -> int:
+        """Drop (and free) cached plans whose topology no longer exists.
+
+        This is the elastic re-mesh path: after rank loss the surviving
+        processes re-form the mesh, and every plan compiled against the old
+        device assignment is garbage — its permutation tables name shards
+        that are gone.  ``predicate`` selects which keys to drop (default:
+        all).  Returns the number of invalidated plans; the count is also
+        accumulated in ``stats.invalidations`` (a BENCH-recorded metric).
+
+        A plan build *in flight* during the failure never lands here:
+        :meth:`get_or_init` inserts only after a successful init, so an
+        aborted build cannot poison the cache.
+        """
+        with self._lock:
+            doomed = [k for k in self._plans
+                      if predicate is None or predicate(k)]
+            for k in doomed:
+                self._plans.pop(k).free()
+                self.stats.frees += 1
+            self.stats.invalidations += len(doomed)
+        return len(doomed)
 
     def free_all(self) -> None:
         with self._lock:

@@ -64,6 +64,7 @@ amortizes.
 from __future__ import annotations
 
 import abc
+import contextlib
 import dataclasses
 import itertools
 import math
@@ -785,6 +786,33 @@ register_transport(MultiHostTransport())
 # delivery choreography (runs inside shard_map)
 # ---------------------------------------------------------------------------
 
+#: trace-time chaos seam: when set (via :func:`chaos_scope`), the delivery
+#: choreography calls it at labeled points — ``"group"`` on entering a
+#: delivery group, ``"round"`` before each pipelined partition round.  The
+#: points fire while the step is being *traced* (message tables are built at
+#: trace time), so a probe raising ``SimulatedFailure`` aborts a plan build
+#: mid-assembly — exactly the adversarial window the elastic chaos tests
+#: inject into.  ``None`` (the default) is a zero-cost no-op.
+_CHAOS_PROBE: Callable[[str], None] | None = None
+
+
+@contextlib.contextmanager
+def chaos_scope(probe: Callable[[str], None] | None):
+    """Install ``probe`` as the delivery chaos hook for the dynamic extent
+    of the block (``None`` leaves the seam disabled — callers can pass
+    their maybe-configured injector through unconditionally)."""
+    global _CHAOS_PROBE
+    prev, _CHAOS_PROBE = _CHAOS_PROBE, probe
+    try:
+        yield
+    finally:
+        _CHAOS_PROBE = prev
+
+
+def _chaos(point: str) -> None:
+    if _CHAOS_PROBE is not None:
+        _CHAOS_PROBE(point)
+
 
 def _deliver_group(
     x: jax.Array,
@@ -796,6 +824,7 @@ def _deliver_group(
     """One delivery group with *resolved* backends (no registry lookups,
     no re-validation — :func:`exchange_messages` hoists those once per
     schedule)."""
+    _chaos("group")
     if not coalesce:
         arrived: list[tuple[Message, jax.Array]] = []
         for msg in messages:
@@ -817,6 +846,7 @@ def _deliver_group(
     # within a group, so packing from ``x0`` equals the uncoalesced order.
     x0 = x
     for chains in coalesced_rounds(messages):
+        _chaos("round")
         for hops, parts in chains:
             layout = coalesced_layout(parts, hops, p, x0.dtype)
             buf = p.pack_coalesced(x0, layout)

@@ -1,0 +1,431 @@
+"""Elastic stencil grids: rank loss -> re-mesh -> re-plan -> resume.
+
+The paper's persistent plans amortize setup cost over a run's iterations;
+this layer is what makes that argument hold *in production*, where the
+topology can change under a running exchange.  It connects the fault-
+tolerance machinery (:mod:`repro.train.fault_tolerance`) to the stencil
+stack (:mod:`repro.launch.stencil`):
+
+* a :class:`FailureInjector` stands in for the missed-heartbeat signal and
+  raises :class:`SimulatedFailure` at adversarial points — before a step,
+  mid-exchange (dispatch in flight, wait not yet issued), or inside a plan
+  build (between pipelined partition rounds, via the trace-time chaos seam
+  of :mod:`repro.core.transport`);
+* on failure the runner re-forms the mesh on the *surviving* device
+  topology, invalidates every cached plan compiled against the dead one
+  (:meth:`repro.core.plan.PlanCache.invalidate` — counted), re-derives the
+  static ``Message``/``WireLayout`` tables for the new grid (asserting the
+  derivation is deterministic: same topology in, identical offset tables
+  out), and resumes the domain from the last committed checkpoint;
+* re-plan latency (``replan_us`` — pure table math, separate from the
+  recompile's ``init_us``) is recorded per event, the same metric the §VI
+  sweep now stamps into every BENCH record.
+
+The resumed trajectory is held to the single-device oracle **bitwise** for
+exact packers: the per-cell update graph is identical across topologies,
+ghost values cross the wire losslessly, and checkpoint restore is exact.
+Wire-compressed packers (``bf16``, ``scaled-int8``) re-encode ghosts on
+the wire, so a resumed run still matches a same-packer oracle bitwise but
+drifts from the exact-wire reference within the packer's documented
+``wire_tolerance`` per step (see README's fault-tolerance section).
+
+In-process chaos (the 8-virtual-device test form)::
+
+    runner = ElasticStencilRunner(
+        ElasticConfig(n_steps=6), ckpt_dir,
+        injector=FailureInjector(fail_at_steps=(3,), phases=("mid-exchange",)),
+        devices=jax.devices()[:4],
+    )
+    result = runner.run()          # fails at step 3, re-plans on 2 devices,
+    result.final_interior          # ... bitwise == the 1-device oracle
+
+Across real processes, ``tests/distributed_progs/check_elastic_stencil.py``
+boots a 2-rank grid of this runner with an injected mid-run failure
+(``max_replans=0`` — a real dead rank cannot be dropped from a live
+``jax.distributed`` grid, so the whole grid dies and the *relaunch* on the
+survivor topology is the re-plan), then resumes from the shared checkpoint
+directory and verifies against the oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.plan import PlanCache
+from repro.core.transport import chaos_scope
+from repro.train.fault_tolerance import FailureInjector, SimulatedFailure
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """One elastic stencil run: geometry, strategy cell, and chaos budget."""
+
+    global_interior: tuple[int, ...] = (16, 8)
+    halo: int = 1
+    strategy: str = "persistent"
+    packer: str = "slice"
+    transport: str = "ppermute"
+    coalesce: bool = True
+    n_parts: int = 1
+    n_steps: int = 8
+    #: commit a checkpoint every k completed steps (and at the end);
+    #: 0 disables checkpointing (oracle runs — nothing to resume)
+    checkpoint_every: int = 1
+    seed: int = 0
+    #: failures survived in-process before the last one propagates; 0 lets
+    #: the first failure kill the process (the multi-rank grid mode, where
+    #: recovery is a relaunch on the survivor topology, not an in-process
+    #: re-mesh)
+    max_replans: int = 3
+
+    def __post_init__(self):
+        assert self.n_steps >= 1, self.n_steps
+        assert self.checkpoint_every >= 0, self.checkpoint_every
+        assert self.max_replans >= 0, self.max_replans
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One (re-)planning of the exchange on a topology."""
+
+    step: int
+    n_devices: int
+    #: re-deriving the static Message/WireLayout tables (table math only)
+    replan_us: float
+    #: the trace+lower+compile the topology change also pays
+    init_us: float
+    #: cached plans dropped because their topology died
+    plan_invalidations: int
+    cause: str = "initial"
+
+
+@dataclasses.dataclass
+class ElasticResult:
+    final_interior: np.ndarray
+    steps: int
+    #: failures survived (re-meshes performed)
+    replans: int
+    events: list[ReplanEvent]
+    #: step of the last checkpoint the run committed (None: never saved)
+    checkpoint_step: int | None
+
+
+def diffusion_update(halo: int = 1) -> Callable:
+    """Three-point diffusion along array axis 0 (the decomposed axis).
+
+    Satisfies the overlap/elastic update contract — shift-invariant radius
+    ``halo``, writes only the interior, leaves the rim untouched — and its
+    per-cell op graph is independent of the decomposition, so trajectories
+    are bitwise identical across topologies (the elastic resume oracle).
+    """
+    from jax import lax
+
+    h = halo
+
+    def update(x):
+        s = x.shape[0]
+        up = lax.slice_in_dim(x, 0, s - 2 * h, axis=0)
+        mid = lax.slice_in_dim(x, h, s - h, axis=0)
+        down = lax.slice_in_dim(x, 2 * h, s, axis=0)
+        interior = (0.5 * mid + 0.25 * up + 0.25 * down).astype(x.dtype)
+        return lax.dynamic_update_slice(
+            x, interior, (h,) + (0,) * (x.ndim - 1)
+        )
+
+    return update
+
+
+def initial_interior(config: ElasticConfig) -> np.ndarray:
+    """The run's deterministic initial condition (every rank derives it)."""
+    rng = np.random.default_rng(config.seed)
+    return rng.normal(size=config.global_interior).astype(np.float32)
+
+
+def _fetch_global_interior(domain, x) -> np.ndarray:
+    """Dense global interior of a (possibly multi-process) stored array.
+
+    On a ``jax.distributed`` grid the stored array is not fully
+    addressable; a jitted fully-replicated identity gives every rank the
+    whole array (the ``_mean_checksum`` trick, without the reduction).
+    """
+    if getattr(x, "is_fully_addressable", True):
+        return domain.to_global_interior(np.asarray(x))
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    rep = jax.jit(
+        lambda a: a,
+        out_shardings=NamedSharding(domain.mesh, PartitionSpec()),
+    )(x)
+    stored = np.asarray(rep.addressable_shards[0].data)
+    return domain.to_global_interior(stored)
+
+
+class ElasticStencilRunner:
+    """Drive a checkpointed stencil run that survives injected rank loss.
+
+    The runner owns a private :class:`~repro.core.plan.PlanCache` (its
+    table of initialized persistent requests) and a device list (its view
+    of the live topology).  ``survivor_fn`` models which devices outlive a
+    failure — the default keeps the first half, the "lost a pod slice"
+    shape; the surviving count must still decompose the domain.
+    """
+
+    def __init__(
+        self,
+        config: ElasticConfig,
+        ckpt_dir: str | None,
+        *,
+        injector: FailureInjector | None = None,
+        devices: Sequence | None = None,
+        survivor_fn: Callable[[list], list] | None = None,
+        update_fn: Callable | None = None,
+    ):
+        import jax
+
+        self.config = config
+        self.ckpt_dir = ckpt_dir
+        self.injector = injector
+        self.devices = list(jax.devices() if devices is None else devices)
+        self.survivor_fn = survivor_fn or (
+            lambda devs: devs[: max(1, len(devs) // 2)]
+        )
+        self.update_fn = update_fn or diffusion_update(config.halo)
+        #: this runner's table of initialized persistent plans
+        self.cache = PlanCache()
+        self.events: list[ReplanEvent] = []
+        self.checkpoint_step: int | None = None
+
+    # -- topology ------------------------------------------------------------
+    def _domain(self):
+        from repro.core.compat import make_mesh
+        from repro.stencil.domain import Domain
+
+        cfg = self.config
+        n = len(self.devices)
+        assert cfg.global_interior[0] % n == 0, (
+            f"interior {cfg.global_interior} not decomposable over "
+            f"{n} surviving devices"
+        )
+        mesh = make_mesh((n,), ("px",), devices=self.devices)
+        return Domain(
+            mesh,
+            global_interior=cfg.global_interior,
+            mesh_axes=("px",) + (None,) * (len(cfg.global_interior) - 1),
+            halo=cfg.halo,
+        )
+
+    # -- planning ------------------------------------------------------------
+    def _plan(self, domain, step: int, cause: str, invalidated: int):
+        """Build the exchange driver for ``domain``; record one
+        :class:`ReplanEvent` (re-derivation timed + determinism asserted).
+        """
+        import jax
+
+        from repro.stencil.strategies import StrategyConfig, make_driver
+
+        cfg = self.config
+        drv = make_driver(
+            StrategyConfig(
+                name=cfg.strategy, n_parts=cfg.n_parts, packer=cfg.packer,
+                transport=cfg.transport, coalesce=cfg.coalesce,
+                plan_cache=self.cache,
+            ),
+            domain.mesh, domain.halo_spec,
+            ndim=len(cfg.global_interior), update_fn=self.update_fn,
+        )
+        example = jax.ShapeDtypeStruct(
+            domain.stored_global, np.dtype(domain.dtype),
+            sharding=domain.sharding(),
+        )
+        # static re-planning: re-derive the Message tables + WireLayout
+        # offsets for this topology, timed — and derived twice, because the
+        # whole elastic story rests on the derivation being a deterministic
+        # pure function of the topology (same mesh in, same offsets out).
+        t0 = time.perf_counter()
+        tables = drv.replan_tables(example)
+        replan_us = (time.perf_counter() - t0) * 1e6
+        again = drv.replan_tables(example)
+        assert tables == again, (
+            "static re-planning is not deterministic on this topology"
+        )
+        probe = None
+        if self.injector is not None:
+            injector = self.injector
+
+            def probe(point: str) -> None:
+                # fires at trace time inside the delivery choreography —
+                # i.e. DURING the plan build ("group" entry / between
+                # pipelined partition "round"s)
+                injector.check(step, phase=f"plan-build:{point}")
+
+        t0 = time.perf_counter()
+        with chaos_scope(probe):
+            drv.init(example)
+        init_us = (time.perf_counter() - t0) * 1e6
+        event = ReplanEvent(
+            step=step, n_devices=len(self.devices), replan_us=replan_us,
+            init_us=init_us, plan_invalidations=invalidated, cause=cause,
+        )
+        self.events.append(event)
+        return drv
+
+    # -- state ---------------------------------------------------------------
+    def _checkpoint(self, interior: np.ndarray, step: int) -> None:
+        if self.ckpt_dir is None:
+            return
+        import jax
+
+        from repro.train import checkpoint
+
+        if jax.process_index() == 0:
+            checkpoint.save(
+                {"interior": interior, "step": np.int64(step)},
+                self.ckpt_dir, step,
+            )
+        self.checkpoint_step = step
+
+    def _restore_or_init(self) -> tuple[np.ndarray, int]:
+        """Last committed checkpoint, or the deterministic initial state.
+
+        Restores structure-free (``like=None``): a replacement process
+        never held the pre-failure state object, only the directory.
+        """
+        from repro.train import checkpoint
+
+        if (self.ckpt_dir is not None
+                and checkpoint.latest_step(self.ckpt_dir) is not None):
+            state, step = checkpoint.restore(self.ckpt_dir)
+            return np.asarray(state["interior"]), int(state["step"])
+        return initial_interior(self.config), 0
+
+    # -- the run loop --------------------------------------------------------
+    def _check(self, step: int, phase: str) -> None:
+        if self.injector is not None:
+            self.injector.check(step, phase=phase)
+
+    def run(self) -> ElasticResult:
+        cfg = self.config
+        replans = 0
+        pending_invalidated = 0
+        interior, step = self._restore_or_init()
+        while True:
+            drv = None
+            try:
+                domain = self._domain()
+                # plan-build chaos can fire inside _plan's init trace
+                drv = self._plan(
+                    domain, step,
+                    cause="initial" if not replans else "rank-loss",
+                    invalidated=pending_invalidated,
+                )
+                pending_invalidated = 0
+                x = domain.from_global_interior(interior)
+                while step < cfg.n_steps:
+                    self._check(step, "pre-step")
+                    y = drv.step(x)  # exchange+update dispatched (async)
+                    self._check(step, "mid-exchange")
+                    x = drv.wait(y)
+                    step += 1
+                    if cfg.checkpoint_every and (
+                            step % cfg.checkpoint_every == 0
+                            or step == cfg.n_steps):
+                        interior = _fetch_global_interior(domain, x)
+                        self._checkpoint(interior, step)
+                final = _fetch_global_interior(domain, x)
+                return ElasticResult(
+                    final_interior=final, steps=step, replans=replans,
+                    events=list(self.events),
+                    checkpoint_step=self.checkpoint_step,
+                )
+            except SimulatedFailure:
+                replans += 1
+                if replans > cfg.max_replans:
+                    raise
+                # the dead topology's plans are garbage: drop them all (the
+                # counter feeds the next ReplanEvent), shrink to the
+                # survivors, and resume from the last committed checkpoint
+                pending_invalidated += self.cache.invalidate()
+                survivors = list(self.survivor_fn(self.devices))
+                assert survivors, "no surviving devices"
+                self.devices = survivors
+                interior, step = self._restore_or_init()
+            finally:
+                if drv is not None:
+                    drv.free()
+
+    @property
+    def plan_stats(self):
+        return self.cache.stats
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    """Demo CLI: run one in-process chaos cycle and report the events."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", default="16,8")
+    ap.add_argument("--strategy", default="persistent")
+    ap.add_argument("--packer", default="slice")
+    ap.add_argument("--n-parts", type=int, default=1)
+    ap.add_argument("--n-steps", type=int, default=8)
+    ap.add_argument("--fail-step", type=int, default=None,
+                    help="inject a mid-exchange failure at this step "
+                         "(default: n_steps // 2)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: a temp dir)")
+    args = ap.parse_args(argv)
+
+    import tempfile
+
+    import jax
+
+    size = tuple(int(s) for s in args.size.split(","))
+    fail_at = args.fail_step if args.fail_step is not None else args.n_steps // 2
+    cfg = ElasticConfig(
+        global_interior=size, strategy=args.strategy, packer=args.packer,
+        n_parts=args.n_parts, n_steps=args.n_steps,
+    )
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="elastic_ckpt_")
+    runner = ElasticStencilRunner(
+        cfg, ckpt,
+        injector=FailureInjector(fail_at_steps=(fail_at,),
+                                 phases=("mid-exchange",)),
+    )
+    result = runner.run()
+    for e in result.events:
+        print(f"plan[{e.cause}] step={e.step} devices={e.n_devices} "
+              f"replan_us={e.replan_us:.0f} init_us={e.init_us:.0f} "
+              f"invalidated={e.plan_invalidations}")
+    oracle = ElasticStencilRunner(
+        dataclasses.replace(cfg, checkpoint_every=0), None,
+        devices=jax.devices()[:1],
+    ).run()
+    from repro.core.transport import get_packer
+
+    rtol, atol = get_packer(cfg.packer).wire_tolerance(np.float32)
+    if (rtol, atol) == (0.0, 0.0):
+        match = np.array_equal(result.final_interior, oracle.final_interior)
+        kind = "bitwise"
+    else:
+        # lossy wire: topologies legitimately drift within the per-step
+        # wire tolerance (scale-aware atol — see tests/stencil/test_elastic)
+        scale = float(np.abs(oracle.final_interior).max())
+        match = np.allclose(
+            result.final_interior, oracle.final_interior,
+            rtol=cfg.n_steps * rtol,
+            atol=cfg.n_steps * max(atol, rtol * scale),
+        )
+        kind = "tolerance-aware"
+    print(f"{result.steps} steps, {result.replans} re-plans; "
+          f"{kind} vs 1-device oracle: {match}")
+    if not match:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

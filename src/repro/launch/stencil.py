@@ -27,6 +27,7 @@ under the site launcher by exporting the three variables per rank.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import re
 import socket
@@ -116,6 +117,28 @@ def maybe_initialize_from_env() -> int:
     return process_id
 
 
+@dataclasses.dataclass(frozen=True)
+class GridResult:
+    """Per-rank outcome of a ``check=False`` grid launch.
+
+    The chaos tests launch grids that are *expected* to die mid-run (an
+    injected rank loss); they need the returncodes and streams of every
+    rank instead of the raise-on-failure contract.
+    """
+
+    outs: tuple[str, ...]
+    errs: tuple[str, ...]
+    returncodes: tuple[int, ...]
+
+    @property
+    def ok(self) -> bool:
+        return all(rc == 0 for rc in self.returncodes)
+
+    @property
+    def failed_ranks(self) -> tuple[int, ...]:
+        return tuple(r for r, rc in enumerate(self.returncodes) if rc != 0)
+
+
 def launch_grid(
     argv: Sequence[str],
     *,
@@ -123,14 +146,18 @@ def launch_grid(
     local_devices: int = 2,
     timeout: float = 900.0,
     env: Mapping[str, str] | None = None,
-) -> str:
+    check: bool = True,
+) -> str | GridResult:
     """Run ``argv`` as an N-process ``jax.distributed`` grid; return rank
     0's stdout.
 
     All ranks execute the same SPMD program; by convention only rank 0
     prints results (the others' stdout is discarded).  Any rank exiting
     nonzero fails the whole grid with that rank's stderr tail — mirroring
-    ``run_sweep``'s single-subprocess error contract.
+    ``run_sweep``'s single-subprocess error contract.  With ``check=False``
+    no rank failure raises: the full :class:`GridResult` (every rank's
+    stdout/stderr/returncode) is returned instead, for callers that
+    *expect* the grid to die — the fault-injection chaos checks.
     """
     assert processes >= 1, processes
     coordinator = f"127.0.0.1:{pick_coordinator_port()}"
@@ -173,6 +200,11 @@ def launch_grid(
             errs.append(err_f.read())
             out_f.close()
             err_f.close()
+    if not check:
+        return GridResult(
+            outs=tuple(outs), errs=tuple(errs),
+            returncodes=tuple(p.returncode for p in procs),
+        )
     failed = [r for r, p in enumerate(procs) if p.returncode != 0]
     if failed:
         detail = "\n".join(

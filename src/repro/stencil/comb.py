@@ -68,6 +68,13 @@ class CycleResult:
     #: (hits > 0 means setup was skipped — the paper's amortized case)
     plan_cache_inits: int = 0
     plan_cache_hits: int = 0
+    #: time to re-derive the full static transport schedule (Message tables
+    #: + WireLayout offsets) for the current topology — what an elastic
+    #: re-mesh pays *besides* the recompile; static offsets keep it cheap
+    replan_us: float = 0.0
+    #: plans this measurement's cache dropped to a topology change (zero in
+    #: a steady-state sweep; the elastic runner drives it up)
+    plan_cache_invalidations: int = 0
 
     def record(self) -> dict:
         """Flat, json-serializable form (the BENCH_*.json row body)."""
@@ -92,8 +99,9 @@ def run_cycles(
     message-coalescing effects directly.
     """
     cache = driver.config.resolve_cache()
-    hits0, inits0 = (
-        (cache.stats.cache_hits, cache.stats.inits) if cache else (0, 0)
+    hits0, inits0, invals0 = (
+        (cache.stats.cache_hits, cache.stats.inits,
+         cache.stats.invalidations) if cache else (0, 0, 0)
     )
     t0 = time.perf_counter()
     driver.init(x)
@@ -103,12 +111,18 @@ def run_cycles(
     if cache is not None:
         plan_hits = cache.stats.cache_hits - hits0
         plan_inits = cache.stats.inits - inits0
+        plan_invals = cache.stats.invalidations - invals0
     else:  # private plan: one init when the strategy amortizes, never a hit
-        plan_hits, plan_inits = 0, int(driver.amortizes_init)
+        plan_hits, plan_inits, plan_invals = 0, int(driver.amortizes_init), 0
     try:
         collective_count = driver.scheduled_collectives(x)
     except NotImplementedError:
         collective_count = None
+    # the elastic re-plan cost: re-deriving the static Message/WireLayout
+    # tables for this topology from scratch (table math only — no compile)
+    t0 = time.perf_counter()
+    driver.replan_tables(x)
+    replan_us = (time.perf_counter() - t0) * 1e6
 
     for _ in range(warmup):
         x = driver.step(x)
@@ -137,6 +151,8 @@ def run_cycles(
         collective_count=collective_count,
         plan_cache_inits=plan_inits,
         plan_cache_hits=plan_hits,
+        replan_us=replan_us,
+        plan_cache_invalidations=plan_invals,
     )
 
 

@@ -244,16 +244,36 @@ class ExchangeStrategy(abc.ABC):
         )
         return scheduled_collective_count(groups, coalesce=spec.coalesce)
 
+    def replan_tables(self, example) -> tuple[tuple, tuple]:
+        """Re-derive the FULL static transport schedule for the current
+        topology: ``(message groups, wire layouts)``.
+
+        This is the elastic re-plan primitive — after a mesh change the
+        surviving topology's :class:`~repro.core.transport.Message` tables
+        and :class:`~repro.core.transport.WireLayout` offset tables are
+        recomputed from scratch.  The derivation is a pure function of
+        (block shape, spec, mesh axis sizes): no device identity, rank id,
+        or runtime state enters, so repeated calls — and calls on meshes
+        with permuted devices — return identical tables (asserted by the
+        elastic runner and tests/core/test_replan_purity.py).  Everything
+        here is table math; the expensive trace+compile a topology change
+        *also* triggers is measured separately as ``init_us``, while this
+        call's time is the sweep's ``replan_us`` metric.
+        """
+        spec = self.build_spec()
+        groups = self._message_groups(
+            self._local_block_shape(tuple(example.shape)), spec
+        )
+        layouts = (
+            schedule_layouts(groups, spec.packer, example.dtype)
+            if spec.coalesce else ()
+        )
+        return groups, layouts
+
     def wire_layouts(self, example: jax.Array) -> tuple:
         """The coalesced schedule's static offset tables (empty when the
         strategy runs uncoalesced) — what persistent plans record."""
-        spec = self.build_spec()
-        if not spec.coalesce:
-            return ()
-        groups = self._message_groups(
-            self._local_block_shape(example.shape), spec
-        )
-        return schedule_layouts(groups, spec.packer, example.dtype)
+        return self.replan_tables(example)[1]
 
     # -- lifecycle ----------------------------------------------------------
     @abc.abstractmethod

@@ -21,9 +21,12 @@ swept here:
 
 Each cell's records carry ``packer``, ``transport``, ``coalesce``,
 ``process_count``, ``is_multihost``, ``wire_bytes``,
-``collective_count`` (what one step launches — the coalescing effect), and
+``collective_count`` (what one step launches — the coalescing effect),
 ``plan_cache_inits``/``plan_cache_hits`` (the persistent-amortization
-counters) fields.  The transport backend
+counters), and ``replan_us``/``plan_cache_invalidations`` (the elastic
+re-planning axis: how long re-deriving the static Message/WireLayout
+tables takes for the cell's topology, and how many cached plans a
+topology change dropped — see :mod:`repro.launch.elastic`) fields.  The transport backend
 (``"ppermute"`` in-process, ``"multihost"`` for multi-process meshes) is
 one ``SweepConfig.transport`` knob, and the fan-out is per-*process grid*:
 ``--processes N`` (``SweepConfig.processes``) boots every device-count cell
@@ -70,6 +73,7 @@ RECORD_KEYS = (
     "global_interior", "mesh_shape", "message_bytes", "wire_bytes",
     "us_per_cycle", "collective_count",
     "plan_cache_inits", "plan_cache_hits",
+    "replan_us", "plan_cache_invalidations",
     "init_us", "n_cycles", "repeats", "checksum", "speedup_vs_baseline",
 )
 
@@ -383,7 +387,8 @@ def summarize(records: Sequence[dict]) -> list[str]:
                 f"/{r['strategy']}")
         pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
         rows.append(f"{name},{r['us_per_cycle']:.1f},"
-                    f"speedup={pct:.1f}%;init_us={r['init_us']:.0f}")
+                    f"speedup={pct:.1f}%;init_us={r['init_us']:.0f};"
+                    f"replan_us={r.get('replan_us', 0.0):.0f}")
     return rows
 
 
@@ -402,7 +407,11 @@ def regression_failures(
     different speeds; keying by strategy (not per-cell coordinate) keeps
     the max over ~a dozen cells, whose run-to-run noise is far below any
     single tiny cell's — single-cell jitter on the 3-cycle smoke grid
-    exceeds 25%, so a finer key would flash red on identical code.  The
+    exceeds 25%, so a finer key would flash red on identical code.  Only
+    ``speedup_vs_baseline`` is compared: newer record fields (e.g. the
+    ``replan_us`` re-plan latency or ``plan_cache_invalidations``) are
+    tolerated in either record set and simply travel along — a baseline
+    written before a field existed never trips the guard.  The
     check is only meaningful when both runs swept comparable grids (CI
     runs it on the full-matrix smoke job, never the restricted ``--packer``
     cells).  Returns human-readable failure lines (empty = pass).

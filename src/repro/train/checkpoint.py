@@ -124,9 +124,34 @@ def latest_step(ckpt_dir: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def _tree_from_paths(paths: list[str], leaves: list) -> Params:
+    """Rebuild a nested-dict tree from manifest leaf paths (``"a/b/c"``).
+
+    This is the structure-free restore used by elastic resume: a process
+    that replaces a dead rank knows the checkpoint *directory* but not the
+    state's treedef.  Dict-of-dicts trees round-trip exactly; sequence
+    nodes come back as dicts keyed by their stringified index (pass
+    ``like`` when that distinction matters).
+    """
+    root: dict = {}
+    for path, leaf in zip(paths, leaves):
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
 def restore(ckpt_dir: str, step: int | None = None, *, like: Params = None,
             shardings: Any = None, verify: bool = True) -> tuple[Params, int]:
-    """Load a checkpoint; optionally re-shard onto ``shardings`` (elastic)."""
+    """Load a checkpoint; optionally re-shard onto ``shardings`` (elastic).
+
+    ``like`` supplies the tree structure; without it the structure is
+    reconstructed from the manifest's leaf paths (nested dicts — what the
+    elastic stencil runner checkpoints and resumes without ever having
+    held the pre-failure state object).
+    """
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
@@ -142,9 +167,10 @@ def restore(ckpt_dir: str, step: int | None = None, *, like: Params = None,
                 raise IOError(f"checksum mismatch in {meta['file']}")
         leaves.append(_from_numpy(arr, meta["dtype"]))
     if like is None:
-        raise ValueError("restore requires `like` (an abstract/concrete tree)")
-    treedef = jax.tree.structure(like)
-    state = jax.tree.unflatten(treedef, leaves)
+        state = _tree_from_paths(manifest["paths"], leaves)
+    else:
+        treedef = jax.tree.structure(like)
+        state = jax.tree.unflatten(treedef, leaves)
     if shardings is not None:
         state = jax.tree.map(
             lambda x, s: jax.device_put(x, s), state, shardings)

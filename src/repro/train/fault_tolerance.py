@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
+import zlib
 from typing import Any, Callable
 
 import jax
@@ -27,24 +28,44 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Deterministically fail at the given steps (or with probability p)."""
+    """Deterministically fail at the given steps (or with probability p).
+
+    ``phases`` restricts firing to labeled chaos points: callers tag each
+    :meth:`check` with where in the iteration it sits (e.g.
+    ``"mid-exchange"``, ``"plan-build:round"`` — the elastic runner's
+    adversarial injection points); with a non-empty ``phases`` only checks
+    whose tag is listed may fire.  Every fire — deterministic *or*
+    probabilistic — is recorded in ``_fired`` keyed by ``(step, phase)``,
+    so a restart that replays the same step never refires: without the
+    dedup the probability path is seeded by ``seed + step`` and a resumed
+    run would deterministically hit the same failure forever.
+    """
 
     fail_at_steps: tuple[int, ...] = ()
     probability: float = 0.0
     seed: int = 0
     enabled: bool = True
+    phases: tuple[str, ...] = ()
     _fired: set = dataclasses.field(default_factory=set)
 
-    def check(self, step: int) -> None:
+    def check(self, step: int, phase: str | None = None) -> None:
         if not self.enabled:
             return
-        if step in self.fail_at_steps and step not in self._fired:
-            self._fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
+        if self.phases and phase not in self.phases:
+            return
+        key = (step, phase)
+        if key in self._fired:
+            return
+        at = f"step {step}" + (f" ({phase})" if phase else "")
+        if step in self.fail_at_steps:
+            self._fired.add(key)
+            raise SimulatedFailure(f"injected failure at {at}")
         if self.probability > 0:
-            rng = np.random.default_rng(self.seed + step)
+            salt = zlib.crc32((phase or "").encode())
+            rng = np.random.default_rng(self.seed + step + salt)
             if rng.random() < self.probability:
-                raise SimulatedFailure(f"random failure at step {step}")
+                self._fired.add(key)
+                raise SimulatedFailure(f"random failure at {at}")
 
 
 @dataclasses.dataclass

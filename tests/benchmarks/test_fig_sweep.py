@@ -47,6 +47,8 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
         "plan_cache_inits": 0 if strategy == "standard" else 1,
         "plan_cache_hits": 0,
         "init_us": 0.0 if strategy == "standard" else 120.0,
+        "replan_us": 0.0 if strategy == "standard" else 15.0,
+        "plan_cache_invalidations": 0,
         "n_cycles": 3,
         "repeats": 1,
         "checksum": 0.25,

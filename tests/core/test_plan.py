@@ -42,6 +42,35 @@ def test_plan_cache_amortizes():
     assert len(cache) == 0 and cache.stats.frees == 2
 
 
+def test_plan_cache_invalidate():
+    """The elastic re-mesh path: invalidate drops (and frees) plans whose
+    topology died, counts them in stats.invalidations, and leaves
+    non-matching plans live."""
+    cache = PlanCache()
+
+    def f(x):
+        return x + 1
+
+    cache.get_or_init(f, (jnp.ones((4,)),))
+    cache.get_or_init(f, (jnp.ones((8,)),))
+    assert len(cache) == 2
+
+    # predicate selects by key (here: the 4-element signature only)
+    n = cache.invalidate(lambda key: "(4,)" in str(key))
+    assert n == 1
+    assert len(cache) == 1
+    assert cache.stats.invalidations == 1 and cache.stats.frees == 1
+    # surviving plan is still a cache hit (no re-init)
+    cache.get_or_init(f, (jnp.ones((8,)),))
+    assert cache.stats.inits == 2 and cache.stats.cache_hits == 1
+
+    # default predicate: drop everything (whole-topology loss)
+    assert cache.invalidate() == 1
+    assert len(cache) == 0 and cache.stats.invalidations == 2
+    # idempotent on an empty cache
+    assert cache.invalidate() == 0 and cache.stats.invalidations == 2
+
+
 def test_persistent_decorator():
     cache = PlanCache()
     calls = []

@@ -1,0 +1,116 @@
+"""Property tests: static re-planning is a pure function of the topology.
+
+The elastic-resume contract (repro.launch.elastic) rests on
+``ExchangeStrategy.replan_tables`` being deterministic: after a rank loss
+the survivors re-derive their ``Message`` tables and ``WireLayout`` offset
+tables from scratch, and every survivor must derive the *same* schedule or
+the exchange deadlocks.  These properties pin that down: repeated
+derivations are equal, fresh drivers derive equal tables, and the result
+depends only on (mesh axis sizes, spec, block shape) — never on device
+identity or ordering.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.compat import make_mesh
+from repro.core.transport import schedule_layouts
+from repro.stencil.domain import Domain
+from repro.stencil.strategies import StrategyConfig, make_driver
+from repro.testing import given, settings, st  # hypothesis or deterministic fallback
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 virtual devices (conftest)"
+)
+
+STRATEGIES = ("standard", "persistent", "partitioned", "fused", "overlap")
+#: axis-0 extent 24 divides every device count and keeps local >= 3*halo
+SIZE = (24, 6)
+
+
+def _driver_and_example(devices, *, strategy, n_parts, packer, coalesce):
+    mesh = make_mesh((len(devices),), ("px",), devices=list(devices))
+    dom = Domain(mesh, global_interior=SIZE, mesh_axes=("px", None), halo=1)
+    drv = make_driver(
+        StrategyConfig(name=strategy, n_parts=n_parts, packer=packer,
+                       coalesce=coalesce),
+        mesh, dom.halo_spec, ndim=2,
+    )
+    example = jax.ShapeDtypeStruct(dom.stored_global, np.dtype(dom.dtype))
+    return drv, example
+
+
+def _tables(devices, **kw):
+    drv, example = _driver_and_example(devices, **kw)
+    return drv.replan_tables(example)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    strategy=st.sampled_from(STRATEGIES),
+    n_devices=st.sampled_from((2, 4, 8)),
+    n_parts=st.integers(1, 3),
+    packer=st.sampled_from(("slice", "bf16")),
+    coalesce=st.booleans(),
+)
+def test_replan_tables_is_pure(strategy, n_devices, n_parts, packer, coalesce):
+    """Same topology in, same tables out — on one driver and across
+    independently constructed drivers."""
+    if strategy != "partitioned":
+        n_parts = 1
+    kw = dict(strategy=strategy, n_parts=n_parts, packer=packer,
+              coalesce=coalesce)
+    devices = jax.devices()[:n_devices]
+    drv, example = _driver_and_example(devices, **kw)
+    first = drv.replan_tables(example)
+    assert first == drv.replan_tables(example)
+    # a fresh driver (fresh spec, fresh tables) derives the same schedule
+    assert first == _tables(devices, **kw)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    strategy=st.sampled_from(STRATEGIES),
+    n_devices=st.sampled_from((2, 4, 8)),
+    n_parts=st.integers(1, 3),
+    seed=st.integers(0, 1_000_000),
+)
+def test_replan_tables_ignores_device_permutation(
+    strategy, n_devices, n_parts, seed
+):
+    """Rank permutations must not change the derived schedule: the tables
+    are a function of the mesh *shape*, not of which physical device holds
+    which coordinate (the survivors of a rank loss are an arbitrary
+    subset/reordering of the original devices)."""
+    if strategy != "partitioned":
+        n_parts = 1
+    kw = dict(strategy=strategy, n_parts=n_parts, packer="slice",
+              coalesce=True)
+    devices = list(jax.devices()[:n_devices])
+    permuted = list(devices)
+    np.random.default_rng(seed).shuffle(permuted)
+    assert _tables(devices, **kw) == _tables(permuted, **kw)
+    # ...and a *different* subset of the same cardinality (survivor choice)
+    tail = list(jax.devices()[-n_devices:])
+    assert _tables(devices, **kw) == _tables(tail, **kw)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_devices=st.sampled_from((2, 4)),
+    n_parts=st.integers(1, 3),
+    packer=st.sampled_from(("slice", "bf16", "scaled-int8")),
+)
+def test_schedule_layouts_is_pure(n_devices, n_parts, packer):
+    """The WireLayout offset tables are a pure function of
+    (message groups, packer, dtype)."""
+    drv, example = _driver_and_example(
+        jax.devices()[:n_devices], strategy="partitioned", n_parts=n_parts,
+        packer=packer, coalesce=True,
+    )
+    groups, layouts = drv.replan_tables(example)
+    assert layouts == schedule_layouts(groups, packer, np.float32)
+    assert schedule_layouts(groups, packer, np.float32) == schedule_layouts(
+        groups, packer, np.float32
+    )

@@ -1,0 +1,160 @@
+"""2-process elastic chaos check: a REAL grid killed mid-run and resumed.
+
+The in-process chaos tests (tests/stencil/test_elastic.py) re-mesh inside
+one process; this program exercises the grid form of the same contract.
+A live ``jax.distributed`` rank cannot be dropped from its process grid,
+so grid-mode recovery is a *relaunch*: the whole grid dies with the lost
+rank, and the re-plan is booting the run again on the survivor topology.
+
+Phase A — this file spawns a 2-rank grid of itself (``launch_grid`` with
+``check=False``), every rank checkpointing each step, with a mid-exchange
+failure injected at a fixed step (``max_replans=0``: the failure kills
+the process, as a real node loss would).  The launcher asserts the grid
+died AND that the last checkpoint committed before death survived.
+
+Phase B — the launcher reboots the run as a single-process 2-device
+"survivor" worker pointed at the same checkpoint directory.  The worker
+resumes from the committed step, re-derives its transport tables for the
+new topology, finishes the run, and holds the final interior to the
+single-device oracle **bitwise** (exact-wire packer).
+
+Dual-mode like the sibling check programs: grid workers are selected by
+the ``REPRO_COORDINATOR`` env var, the resume worker by
+``REPRO_ELASTIC_RESUME``; with neither set this file is the launcher.
+"""
+
+import os
+import subprocess
+import sys
+
+CKPT_VAR = "REPRO_ELASTIC_CKPT"
+FAIL_VAR = "REPRO_ELASTIC_FAIL_STEP"
+RESUME_VAR = "REPRO_ELASTIC_RESUME"
+
+FAIL_STEP = 3
+N_STEPS = 6
+
+
+def _config():
+    from repro.launch.elastic import ElasticConfig
+
+    # multihost transport in phase A (the exchange really crosses the
+    # process boundary); the same cell resumes single-process in phase B
+    return ElasticConfig(
+        global_interior=(16, 8), n_steps=N_STEPS, checkpoint_every=1,
+        strategy="persistent", packer="slice", transport="multihost",
+        max_replans=0,
+    )
+
+
+if os.environ.get("REPRO_COORDINATOR") is not None:
+    # ---- phase A worker: one rank of the doomed grid ----------------------
+    from repro.launch.stencil import maybe_initialize_from_env
+
+    RANK = maybe_initialize_from_env()
+
+    import jax
+
+    from repro.launch.elastic import ElasticStencilRunner
+    from repro.train.fault_tolerance import FailureInjector
+
+    assert jax.process_count() == 2, jax.process_count()
+    runner = ElasticStencilRunner(
+        _config(), os.environ[CKPT_VAR],
+        injector=FailureInjector(
+            fail_at_steps=(int(os.environ[FAIL_VAR]),),
+            phases=("mid-exchange",),
+        ),
+        devices=jax.devices(),
+    )
+    # max_replans=0: the SimulatedFailure propagates and kills this rank —
+    # the expected outcome; a clean exit here is the FAILURE mode
+    runner.run()
+    print(f"rank {RANK}: survived a run that should have died", flush=True)
+    sys.exit(17)
+
+if os.environ.get(RESUME_VAR) is not None:
+    # ---- phase B worker: single-process survivor resumes the run ----------
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.launch.elastic import ElasticConfig, ElasticStencilRunner
+
+    fail_step = int(os.environ[FAIL_VAR])
+    cfg = _config()
+    runner = ElasticStencilRunner(
+        cfg, os.environ[CKPT_VAR], devices=jax.devices()[:2],
+    )
+    result = runner.run()
+    assert result.steps == N_STEPS, result.steps
+    assert result.replans == 0, result.replans
+    # the one plan event is the survivor boot, picking up at the
+    # checkpointed step with freshly derived tables for the new topology
+    assert result.events[0].step == fail_step, result.events
+    assert result.events[0].n_devices == 2, result.events
+    assert result.events[0].replan_us > 0.0, result.events
+
+    oracle = ElasticStencilRunner(
+        dataclasses.replace(cfg, checkpoint_every=0), None,
+        devices=jax.devices()[:1],
+    ).run()
+    assert np.array_equal(result.final_interior, oracle.final_interior), (
+        "resumed run diverged from the single-device oracle"
+    )
+    print(f"RESUME-BITWISE-OK resumed_at={fail_step} "
+          f"replan_us={result.events[0].replan_us:.0f}", flush=True)
+    sys.exit(0)
+
+# ---- launcher -------------------------------------------------------------
+import tempfile
+
+from repro.launch.stencil import launch_grid, worker_env
+from repro.train import checkpoint
+
+PASS = []
+
+
+def ok(name):
+    print(f"OK {name}")
+    PASS.append(name)
+
+
+ckpt_dir = tempfile.mkdtemp(prefix="elastic_grid_ckpt_")
+chaos_env = dict(os.environ, **{CKPT_VAR: ckpt_dir, FAIL_VAR: str(FAIL_STEP)})
+
+# phase A: the grid is EXPECTED to die mid-exchange at FAIL_STEP
+grid = launch_grid(
+    [sys.executable, os.path.abspath(__file__)],
+    processes=2, local_devices=2, timeout=1200.0,
+    env=chaos_env, check=False,
+)
+assert not grid.ok, "chaos grid exited clean — injected failure never fired"
+assert 17 not in grid.returncodes, "a rank ran past the injected failure"
+assert any("SimulatedFailure" in e for e in grid.errs), grid.errs
+ok(f"2-rank grid died from the injected mid-exchange failure "
+   f"(ranks {grid.failed_ranks})")
+
+committed = checkpoint.committed_steps(ckpt_dir)
+assert committed and committed[-1] == FAIL_STEP, (committed, FAIL_STEP)
+ok(f"checkpoint committed at step {FAIL_STEP} survived the crash "
+   f"(committed: {committed})")
+
+# phase B: relaunch on the survivor topology (1 process, 2 devices)
+resume_env = worker_env(local_devices=2, base=chaos_env)
+resume_env[RESUME_VAR] = "1"
+out = subprocess.run(
+    [sys.executable, os.path.abspath(__file__)],
+    env=resume_env, capture_output=True, text=True, timeout=1200,
+)
+if out.returncode != 0:
+    sys.stderr.write(out.stdout[-4000:])
+    sys.stderr.write(out.stderr[-4000:])
+    sys.exit(1)
+assert "RESUME-BITWISE-OK" in out.stdout, out.stdout[-2000:]
+print(out.stdout, end="")
+ok("survivor relaunch resumed from the checkpoint and matched the "
+   "1-device oracle bitwise")
+
+print(f"ALL {len(PASS)} ELASTIC-STENCIL CHECKS PASSED")

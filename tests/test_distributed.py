@@ -23,6 +23,10 @@ PROGS = [
     # per rank) and forwards rank 0's report — the 8-device env the driver
     # exports below is stripped by the grid's worker_env.
     ("check_multihost.py", "MULTIHOST"),
+    # chaos: boots a 2-rank grid that is EXPECTED to die (injected
+    # mid-exchange rank loss), then relaunches on the survivor topology
+    # and holds the resumed run to the single-device oracle bitwise.
+    ("check_elastic_stencil.py", "ELASTIC-STENCIL"),
 ]
 
 _DIR = os.path.join(os.path.dirname(__file__), "distributed_progs")

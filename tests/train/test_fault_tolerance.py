@@ -65,6 +65,69 @@ def test_injector_raises_once_per_step():
     inj.check(2)  # second pass after restart: no refire
 
 
+def test_injector_phase_filter_and_keying():
+    """With ``phases`` set only tagged chaos points may fire, and the
+    dedup key is (step, phase): the same step's OTHER phases still pass
+    after a fire."""
+    inj = FailureInjector(fail_at_steps=(2,), phases=("mid-exchange",))
+    inj.check(2)  # untagged check at a fail step: filtered, no fire
+    inj.check(2, phase="pre-step")  # unlisted phase: filtered
+    with pytest.raises(SimulatedFailure):
+        inj.check(2, phase="mid-exchange")
+    inj.check(2, phase="mid-exchange")  # replay after restart: deduped
+    # a later fail step still fires on its own key
+    inj2 = FailureInjector(fail_at_steps=(2, 5), phases=("mid-exchange",))
+    with pytest.raises(SimulatedFailure):
+        inj2.check(2, phase="mid-exchange")
+    with pytest.raises(SimulatedFailure):
+        inj2.check(5, phase="mid-exchange")
+
+
+def test_injector_probability_path_is_deterministic_and_dedups():
+    """The probability path is seeded by (seed, step, phase) — two
+    injectors agree on WHICH steps fail — and records fires in ``_fired``
+    so a restart replaying the same step never refires (without the dedup
+    the deterministic seeding would re-kill the resumed run forever)."""
+
+    def fired_steps(inj, n=64):
+        fired = []
+        for step in range(n):
+            try:
+                inj.check(step, phase="mid-exchange")
+            except SimulatedFailure:
+                fired.append(step)
+        return fired
+
+    a = fired_steps(FailureInjector(probability=0.25, seed=7))
+    b = fired_steps(FailureInjector(probability=0.25, seed=7))
+    assert a == b and a, "seeded probability path must fire reproducibly"
+    # replaying the exact same steps on the SAME injector: all deduped
+    inj = FailureInjector(probability=0.25, seed=7)
+    first = fired_steps(inj)
+    assert first == a
+    assert fired_steps(inj) == [], "restart replay must not refire"
+    assert {(s, "mid-exchange") for s in a} <= inj._fired
+    # phase participates in the draw: a different phase is an independent
+    # (but still deterministic) failure pattern
+    c = fired_steps(FailureInjector(probability=0.25, seed=7, phases=()))
+    d = []
+    inj_d = FailureInjector(probability=0.25, seed=7)
+    for step in range(64):
+        try:
+            inj_d.check(step, phase="plan-build:round")
+        except SimulatedFailure:
+            d.append(step)
+    assert c != d  # the crc32 phase salt separates the streams
+
+
+def test_injector_disabled_never_fires():
+    inj = FailureInjector(fail_at_steps=(0, 1), probability=1.0,
+                          enabled=False)
+    for step in range(4):
+        inj.check(step, phase="mid-exchange")
+    assert not inj._fired
+
+
 def test_straggler_monitor_flags_outliers():
     mon = StragglerMonitor(ewma=0.5, factor=2.0)
     hits = []
