@@ -129,7 +129,8 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
     """The §VI study from MEASURED records: speedup-vs-baseline curves over
     device count (Fig. 6 analogue: process count), partition count (Fig. 7:
     thread count), message size (Fig. 8), the packer axis (the transport
-    layer's packing dimension), and the wire-buffer coalesce axis, plus
+    layer's packing dimension), the wire-buffer coalesce axis, and the
+    process-to-node mapping axis (repro.launch.mapping), plus
     raw-latency overlays at the larger message sizes, plan-cache/collective
     amortization rows, and the paper-claim comparison rows.
 
@@ -153,6 +154,17 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         # pre-coalescing records ran the per-message pipeline
         return bool(r.get("coalesce", False))
 
+    def mapping_of(r: dict) -> str:
+        # pre-mapping records ran the identity (row-major) placement
+        return r.get("mapping", "row-major")
+
+    def strat_tag(r: dict) -> str:
+        # non-default placements suffix the strategy segment (the same
+        # `%mapping` convention as ScheduleInfo.tag()), keeping row names
+        # unique across the mapping axis without changing their arity
+        m = mapping_of(r)
+        return r["strategy"] if m == "row-major" else f"{r['strategy']}%{m}"
+
     # --- per-(strategy, cell) rows; every cell must carry its baseline ----
     cells: dict[tuple, set] = {}
     rows = []
@@ -163,7 +175,7 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         assert math.isfinite(sp) and sp > 0, (r["strategy"], cell, sp)
         name = (f"fig_sweep/d{r['n_devices']}/p{r['n_parts']}"
                 f"/m{r['message_bytes']}/{packer_of(r)}"
-                f"/c{int(coalesce_of(r))}/{r['strategy']}")
+                f"/c{int(coalesce_of(r))}/{strat_tag(r)}")
         pct = (sp - 1.0) * 100.0
         rows.append((name, r["us_per_cycle"], pct))
         emit(name, r["us_per_cycle"], f"speedup={pct:.1f}%")
@@ -197,10 +209,14 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         # message-coalescing axis: standard@coalesced vs standard@uncoalesced
         # IS the one-collective-per-neighbor effect, so the baseline stays.
         "coalesce": curve(coalesce_of, keep_baseline=True),
+        # process-to-node placement axis: standard@blocked vs
+        # standard@row-major IS the topology-mapping effect, so the
+        # baseline stays here too.
+        "mapping": curve(mapping_of, keep_baseline=True),
     }
     for axis, fig in (("devices", 6), ("parts", 7), ("msgsize", 8),
                       ("packer", None), ("wirebytes", None),
-                      ("coalesce", None)):
+                      ("coalesce", None), ("mapping", None)):
         for (strategy, coord), pct in sorted(curves[axis].items()):
             fig_tag = f";paper_fig={fig}" if fig else ""
             emit(f"fig_sweep/curve_{axis}/{strategy}/{coord}", None,
@@ -217,7 +233,7 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
             continue
         name = (f"fig_sweep/amortization/d{r['n_devices']}"
                 f"/p{r['n_parts']}/m{r['message_bytes']}/{packer_of(r)}"
-                f"/c{int(coalesce_of(r))}/{r['strategy']}")
+                f"/c{int(coalesce_of(r))}/{strat_tag(r)}")
         inits = r.get("plan_cache_inits", 0)
         hits = r.get("plan_cache_hits", 0)
         colls = r.get("collective_count")
@@ -240,7 +256,7 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
             continue
         name = (f"fig_sweep/raw/m{r['message_bytes']}/d{r['n_devices']}"
                 f"/p{r['n_parts']}/{packer_of(r)}"
-                f"/c{int(coalesce_of(r))}/{r['strategy']}")
+                f"/c{int(coalesce_of(r))}/{strat_tag(r)}")
         raw.append((name, r["us_per_cycle"], r["strategy"]))
         emit(name, r["us_per_cycle"],
              f"raw_us={r['us_per_cycle']:.1f};strategy={r['strategy']}")

@@ -62,6 +62,12 @@ class HaloSpec:
     (:mod:`repro.core.transport`); ``coalesce`` aggregates each delivery
     group's messages into one wire buffer + ONE composed collective per hop
     chain (default on — the pMR message-aggregation optimization).
+    ``mapping`` names the registered process-to-node placement the mesh was
+    built under (:mod:`repro.launch.mapping`): it never changes the
+    schedule the spec assembles (the tables are a pure function of mesh
+    shape), but it IS part of the exchange's identity — it lands in
+    :class:`~repro.core.transport.ScheduleInfo` and therefore in every
+    persistent plan key.
     """
 
     mesh_axes: tuple[str, ...]
@@ -75,6 +81,7 @@ class HaloSpec:
     packer: str = "slice"
     transport: str = "ppermute"
     coalesce: bool = True
+    mapping: str = "row-major"
 
     def __post_init__(self):
         assert len(self.mesh_axes) == len(self.array_axes)
@@ -83,9 +90,13 @@ class HaloSpec:
         # unknown backend names fail at the spec's construction site, not
         # buried in a shard_map trace stack (mirrors StrategyConfig)
         from repro.core.transport import get_packer, get_transport
+        from repro.launch.mapping import canonical_mapping
 
         get_packer(self.packer)
         get_transport(self.transport)
+        # aliases ("rb") canonicalize here so equal placements hash equal
+        # wherever the spec becomes a plan key
+        object.__setattr__(self, "mapping", canonical_mapping(self.mapping))
 
     def with_(self, **kw) -> "HaloSpec":
         return dataclasses.replace(self, **kw)
@@ -94,7 +105,7 @@ class HaloSpec:
         return ScheduleInfo(
             kind=kind, mesh_axes=self.mesh_axes,
             packer=self.packer, transport=self.transport,
-            coalesce=self.coalesce,
+            coalesce=self.coalesce, mapping=self.mapping,
         )
 
 

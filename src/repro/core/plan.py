@@ -318,6 +318,7 @@ def multi_axis_plan(
     packer: str = "slice",
     transport: str = "ppermute",
     coalesce: bool = False,
+    mapping: str = "row-major",
     layouts: Sequence[Any] | None = None,
     donate_argnums: tuple[int, ...] = (),
     cache: "PlanCache | None" = None,
@@ -341,6 +342,7 @@ def multi_axis_plan(
         schedule=ScheduleInfo(
             kind="fused", mesh_axes=tuple(mesh_axes),
             packer=packer, transport=transport, coalesce=coalesce,
+            mapping=mapping,
         ),
         layouts=layouts,
         donate_argnums=donate_argnums, cache=cache, key=key, name=name,

@@ -360,8 +360,12 @@ class ScheduleInfo:
 
     ``kind`` names the choreography (``"sequential"`` axis passes,
     ``"fused"`` single pass, ...); ``mesh_axes`` the axes it spans;
-    ``packer``/``transport`` the registered backends it resolves; and
-    ``coalesce`` whether messages aggregate into per-neighbor wire buffers.
+    ``packer``/``transport`` the registered backends it resolves;
+    ``coalesce`` whether messages aggregate into per-neighbor wire buffers;
+    and ``mapping`` the registered process-to-node placement the mesh was
+    built under (:mod:`repro.launch.mapping`) — two meshes of identical
+    shape but different rank placement are different plans, never a silent
+    cache hit.
     """
 
     kind: str
@@ -369,11 +373,126 @@ class ScheduleInfo:
     packer: str = "slice"
     transport: str = "ppermute"
     coalesce: bool = False
+    mapping: str = "row-major"
 
     def tag(self) -> str:
         axes = "x".join(self.mesh_axes) or "-"
         base = f"{self.kind}[{axes}]@{self.packer}/{self.transport}"
+        if self.mapping != "row-major":
+            base += f"%{self.mapping}"
         return base + ("+coalesced" if self.coalesce else "")
+
+
+# ---------------------------------------------------------------------------
+# hop locality: which scheduled sends cross a node boundary
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HopLocality:
+    """Inter- vs intra-node tally of one schedule's directed sends.
+
+    Counted per *shard-level directed send*: every mesh coordinate sends
+    each (expanded-partition) message once, so one message contributes one
+    send per coordinate whose full hop chain is defined (clipped
+    non-periodic edges drop the send, exactly as the transport drops the
+    path).  Hop-free self-copies never touch a wire and are not counted.
+    ``*_elems`` weight each send by its slab element count — the
+    wire-volume view of the same classification.  Derived purely from the
+    static :class:`Message` tables plus a node-id vector, no timing.
+    """
+
+    intra_sends: int = 0
+    inter_sends: int = 0
+    intra_elems: int = 0
+    inter_elems: int = 0
+
+    @property
+    def total_sends(self) -> int:
+        return self.intra_sends + self.inter_sends
+
+    def __add__(self, other: "HopLocality") -> "HopLocality":
+        return HopLocality(
+            self.intra_sends + other.intra_sends,
+            self.inter_sends + other.inter_sends,
+            self.intra_elems + other.intra_elems,
+            self.inter_elems + other.inter_elems,
+        )
+
+
+def message_locality(
+    msg: Message,
+    *,
+    axis_order: Sequence[str],
+    axis_sizes: Mapping[str, int],
+    node_of: Sequence[int],
+) -> HopLocality:
+    """Classify one message's per-shard sends as intra- vs inter-node.
+
+    ``axis_order`` is the mesh's axis-name tuple in mesh-shape order;
+    ``node_of[flat_coord]`` is the node id at each row-major mesh
+    coordinate (:meth:`repro.launch.mapping.Mapping.node_of`, or
+    :func:`repro.launch.mapping.mesh_node_ids` for a live mesh).  Each
+    partition of the message is walked over every source coordinate: the
+    composed hop chain maps the coordinate to its destination, and the send
+    is inter-node iff the two coordinates live on different nodes.
+    """
+    shape = tuple(axis_sizes[name] for name in axis_order)
+    assert len(node_of) == math.prod(shape), (len(node_of), shape)
+    index = {name: i for i, name in enumerate(axis_order)}
+
+    def flat(coords: Sequence[int]) -> int:
+        idx = 0
+        for c, k in zip(coords, shape):
+            idx = idx * k + c
+        return idx
+
+    out = HopLocality()
+    for part in msg.partitions():
+        if not part.hops:
+            continue  # self-copy: nothing crosses any boundary
+        maps = [(index[name], dict(perm)) for name, perm in part.hops]
+        elems = math.prod(part.shape)
+        intra = inter = 0
+        for coords in itertools.product(*[range(k) for k in shape]):
+            dst = list(coords)
+            for a, m in maps:
+                if coords[a] not in m:
+                    dst = None  # clipped edge: this shard sends nothing
+                    break
+                dst[a] = m[coords[a]]
+            if dst is None:
+                continue
+            if node_of[flat(coords)] == node_of[flat(dst)]:
+                intra += 1
+            else:
+                inter += 1
+        out = out + HopLocality(intra, inter, intra * elems, inter * elems)
+    return out
+
+
+def schedule_locality(
+    groups: Sequence[Sequence[Message]],
+    *,
+    axis_order: Sequence[str],
+    axis_sizes: Mapping[str, int],
+    node_of: Sequence[int],
+) -> HopLocality:
+    """Whole-schedule hop-locality tally (sum over every group's messages).
+
+    This is what the §VI sweep records per cell (``intra_node_sends`` /
+    ``inter_node_sends``) and what the mapping acceptance test asserts on:
+    a blocked placement must strictly reduce ``inter_sends`` vs row-major
+    on a multi-node 2-D grid — from the static tables alone.
+    """
+    out = HopLocality()
+    for group in groups:
+        for msg in group:
+            out = out + message_locality(
+                msg, axis_order=axis_order, axis_sizes=axis_sizes,
+                node_of=node_of,
+            )
+    return out
 
 
 # ---------------------------------------------------------------------------

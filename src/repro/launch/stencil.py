@@ -46,10 +46,38 @@ _DEVICE_FLAG = "--xla_force_host_platform_device_count"
 
 
 def pick_coordinator_port() -> int:
-    """A free TCP port for the rank-0 coordinator service."""
+    """A free TCP port for the rank-0 coordinator service.
+
+    Inherently racy (TOCTOU): the port is bound, released, and only later
+    re-bound by ``jax.distributed`` inside the rank-0 worker — under
+    parallel CI jobs another process can steal it in between.  The race
+    cannot be closed from here (the coordinator must bind it in a *child*
+    process), so :func:`launch_grid` treats a coordinator bind failure as
+    retryable and relaunches with a fresh port (bounded attempts).
+    """
     with socket.socket() as s:
         s.bind(("127.0.0.1", 0))
         return s.getsockname()[1]
+
+
+#: stderr signatures of the coordinator losing the picked port to the
+#: TOCTOU race above — and nothing else: injected chaos failures, assertion
+#: deaths, or OOMs must never be retried into silence.
+_PORT_RACE_SIGNATURES = (
+    "address already in use",
+    "eaddrinuse",
+    "failed to bind",
+    "errno 98",
+)
+
+
+def is_port_race_failure(errs: Sequence[str],
+                         returncodes: Sequence[int]) -> bool:
+    """Did this grid die because the coordinator port was stolen?"""
+    return any(
+        rc != 0 and any(sig in err.lower() for sig in _PORT_RACE_SIGNATURES)
+        for err, rc in zip(errs, returncodes)
+    )
 
 
 def worker_env(
@@ -139,27 +167,15 @@ class GridResult:
         return tuple(r for r, rc in enumerate(self.returncodes) if rc != 0)
 
 
-def launch_grid(
+def _launch_grid_once(
     argv: Sequence[str],
     *,
     processes: int,
-    local_devices: int = 2,
-    timeout: float = 900.0,
-    env: Mapping[str, str] | None = None,
-    check: bool = True,
-) -> str | GridResult:
-    """Run ``argv`` as an N-process ``jax.distributed`` grid; return rank
-    0's stdout.
-
-    All ranks execute the same SPMD program; by convention only rank 0
-    prints results (the others' stdout is discarded).  Any rank exiting
-    nonzero fails the whole grid with that rank's stderr tail — mirroring
-    ``run_sweep``'s single-subprocess error contract.  With ``check=False``
-    no rank failure raises: the full :class:`GridResult` (every rank's
-    stdout/stderr/returncode) is returned instead, for callers that
-    *expect* the grid to die — the fault-injection chaos checks.
-    """
-    assert processes >= 1, processes
+    local_devices: int,
+    timeout: float,
+    env: Mapping[str, str] | None,
+) -> GridResult:
+    """One grid attempt against a freshly picked coordinator port."""
     coordinator = f"127.0.0.1:{pick_coordinator_port()}"
     procs, files = [], []
     deadline = time.monotonic() + timeout
@@ -200,21 +216,71 @@ def launch_grid(
             errs.append(err_f.read())
             out_f.close()
             err_f.close()
-    if not check:
-        return GridResult(
-            outs=tuple(outs), errs=tuple(errs),
-            returncodes=tuple(p.returncode for p in procs),
+    return GridResult(
+        outs=tuple(outs), errs=tuple(errs),
+        returncodes=tuple(p.returncode for p in procs),
+    )
+
+
+def launch_grid(
+    argv: Sequence[str],
+    *,
+    processes: int,
+    local_devices: int = 2,
+    timeout: float = 900.0,
+    env: Mapping[str, str] | None = None,
+    check: bool = True,
+    attempts: int = 3,
+) -> str | GridResult:
+    """Run ``argv`` as an N-process ``jax.distributed`` grid; return rank
+    0's stdout.
+
+    All ranks execute the same SPMD program; by convention only rank 0
+    prints results (the others' stdout is discarded).  Any rank exiting
+    nonzero fails the whole grid with that rank's stderr tail — mirroring
+    ``run_sweep``'s single-subprocess error contract.  With ``check=False``
+    no rank failure raises: the full :class:`GridResult` (every rank's
+    stdout/stderr/returncode) is returned instead, for callers that
+    *expect* the grid to die — the fault-injection chaos checks.
+
+    Coordinator setup retries: :func:`pick_coordinator_port` is racy by
+    construction, so a grid whose failure stderr matches a port-bind
+    signature (:func:`is_port_race_failure`) is relaunched with a fresh
+    port, up to ``attempts`` total tries.  Only bind failures retry —
+    chaos-injected deaths and real program failures surface immediately
+    (and reach ``check=False`` callers as their :class:`GridResult`).
+    The wall-clock ``timeout`` applies per attempt.
+    """
+    assert processes >= 1, processes
+    assert attempts >= 1, attempts
+    for attempt in range(1, attempts + 1):
+        result = _launch_grid_once(
+            argv, processes=processes, local_devices=local_devices,
+            timeout=timeout, env=env,
         )
-    failed = [r for r, p in enumerate(procs) if p.returncode != 0]
-    if failed:
+        if result.ok or not (
+            attempt < attempts
+            and is_port_race_failure(result.errs, result.returncodes)
+        ):
+            break
+        print(
+            f"# launch_grid: coordinator port stolen (attempt {attempt} of "
+            f"{attempts}); retrying with a fresh port",
+            file=sys.stderr,
+        )
+    if not check:
+        return result
+    if not result.ok:
         detail = "\n".join(
-            f"--- rank {r} (exit {procs[r].returncode}) ---\n{errs[r][-4000:]}"
-            for r in failed
+            f"--- rank {r} (exit {result.returncodes[r]}) ---\n"
+            f"{result.errs[r][-4000:]}"
+            for r in result.failed_ranks
         )
         raise RuntimeError(
-            f"grid ranks {failed} of {processes} failed:\n{detail}"
+            f"grid ranks {list(result.failed_ranks)} of {processes} "
+            f"failed:\n{detail}"
         )
-    return outs[0]
+    return result.outs[0]
 
 
 # ---------------------------------------------------------------------------
@@ -222,21 +288,37 @@ def launch_grid(
 # ---------------------------------------------------------------------------
 
 
-def global_stencil_mesh(n_devices: int | None = None):
+def global_stencil_mesh(
+    n_devices: int | None = None,
+    *,
+    mapping: str = "row-major",
+    node_size: int = 0,
+):
     """A 1-axis mesh over the grid's *global* device list.
 
     After ``jax.distributed.initialize`` every process sees the same
     ``jax.devices()`` ordering, so each rank independently builds an
-    identical mesh spanning all processes.
+    identical mesh spanning all processes.  ``mapping`` permutes rank
+    placement onto mesh coordinates through the registered
+    :class:`repro.launch.mapping.Mapping` BEFORE the mesh is built (the
+    placement is deterministic, so every rank still derives the same mesh);
+    ``node_size`` is the ranks-per-node the mapping blocks around
+    (0 = auto: devices per process on a real grid).
     """
     import jax
 
     from repro.core.compat import make_mesh
+    from repro.launch.mapping import default_node_size, get_mapping
 
     devices = jax.devices()
     n = n_devices or len(devices)
     assert n <= len(devices), (n, len(devices))
-    return make_mesh((n,), ("px",), devices=devices[:n])
+    if node_size <= 0:
+        node_size = default_node_size(n, jax.process_count())
+    placed = get_mapping(mapping).permute_devices(
+        devices[:n], (n,), node_size
+    )
+    return make_mesh((n,), ("px",), devices=placed)
 
 
 def verify_strategy_cell(
@@ -248,6 +330,7 @@ def verify_strategy_cell(
     n_parts: int = 3,
     seed: int = 7,
     coalesce: bool = True,
+    mapping: str = "row-major",
 ) -> None:
     """One correctness cell: exchange on the (possibly multi-process) mesh,
     then compare every *addressable* shard against the reference roll.
@@ -269,7 +352,7 @@ def verify_strategy_cell(
     drv = make_driver(
         StrategyConfig(
             name=strategy, n_parts=n_parts, packer=packer,
-            transport=transport, coalesce=coalesce,
+            transport=transport, coalesce=coalesce, mapping=mapping,
         ),
         domain.mesh, domain.halo_spec, ndim=len(domain.global_interior),
     )
@@ -302,6 +385,7 @@ def run_cell(
     n_cycles: int = 10,
     repeats: int = 1,
     seed: int = 0,
+    mapping: str = "row-major",
     emit: Callable[[str], Any] = print,
 ) -> list[dict]:
     """Verify + measure the strategy x packer cells on the global mesh.
@@ -315,7 +399,7 @@ def run_cell(
     from repro.stencil.domain import Domain
     from repro.stencil.strategies import StrategyConfig, get_strategy
 
-    mesh = global_stencil_mesh()
+    mesh = global_stencil_mesh(mapping=mapping)
     n = len(mesh.devices.flat)
     assert size[0] % n == 0 and size[0] // n >= 3 * halo, (size, n)
     domain = Domain(
@@ -328,12 +412,13 @@ def run_cell(
             parts = n_parts if get_strategy(s).uses_partitions else 1
             verify_strategy_cell(
                 domain, strategy=s, packer=packer, transport=transport,
-                n_parts=parts,
+                n_parts=parts, mapping=mapping,
             )
             emit(f"VERIFIED {s}@{packer}/{transport} on {n} devices "
                  f"across {jax.process_count()} processes")
             configs.append(StrategyConfig(
                 name=s, n_parts=parts, packer=packer, transport=transport,
+                mapping=mapping,
             ))
     results = comb_measure(
         domain, strategies=tuple(configs),
@@ -367,6 +452,9 @@ def main(argv: Sequence[str] | None = None) -> None:
                     help="comma list of registered packers, or 'all'")
     ap.add_argument("--transport", default="multihost",
                     help="registered transport every cell routes through")
+    ap.add_argument("--mapping", default="row-major",
+                    help="registered process-to-node mapping permuting rank "
+                         "placement onto the mesh (row-major|blocked|rb)")
     ap.add_argument("--size", default="16,8",
                     help="global interior shape, comma-separated")
     ap.add_argument("--halo", type=int, default=1)
@@ -377,6 +465,13 @@ def main(argv: Sequence[str] | None = None) -> None:
     ap.add_argument("--timeout", type=float, default=900.0,
                     help="per-rank wall-clock limit (seconds)")
     args = ap.parse_args(argv)
+
+    from repro.launch.mapping import canonical_mapping
+
+    try:  # fail in the launcher, not N spawned ranks deep
+        canonical_mapping(args.mapping)
+    except KeyError as e:
+        ap.error(str(e))
 
     if COORDINATOR_VAR not in os.environ:
         # launcher: re-run this same CLI as an N-rank grid
@@ -406,7 +501,7 @@ def main(argv: Sequence[str] | None = None) -> None:
         size=size, strategies=strategies, packers=packers,
         transport=args.transport, halo=args.halo, n_parts=args.n_parts,
         n_cycles=args.n_cycles, repeats=args.repeats, seed=args.seed,
-        emit=emit,
+        mapping=args.mapping, emit=emit,
     )
     emit(f"# {len(records)} multihost cells OK")
 

@@ -61,6 +61,9 @@ class CycleResult:
     packer: str = "slice"
     transport: str = "ppermute"
     coalesce: bool = True
+    #: process-to-node placement the mesh was built under (repro.launch.
+    #: mapping) — the §VI mapping axis, stamped from the driver's config
+    mapping: str = "row-major"
     #: collectives ONE step launches (coalescing's one-per-neighbor claim,
     #: verified against compiled HLO by tests/core/test_coalesce.py)
     collective_count: int | None = None
@@ -148,6 +151,7 @@ def run_cycles(
         packer=driver.config.packer,
         transport=driver.config.transport,
         coalesce=driver.config.coalesce,
+        mapping=driver.config.mapping,
         collective_count=collective_count,
         plan_cache_inits=plan_inits,
         plan_cache_hits=plan_hits,

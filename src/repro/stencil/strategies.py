@@ -93,6 +93,14 @@ class StrategyConfig:
                        plan; partitions stay pipelined rounds).  Default on;
                        the off-path is the uncoalesced baseline cell of the
                        §VI sweep's coalesce axis.
+    ``mapping``      — registered process-to-node placement
+                       (:mod:`repro.launch.mapping`) the driver's mesh was
+                       built under.  Purely identity: the schedule never
+                       depends on it, but it travels into
+                       :class:`~repro.core.halo.HaloSpec` and the persistent
+                       plan key, and the sweep/BENCH records stamp it per
+                       cell.  Aliases (``"rb"``) canonicalize at
+                       construction.
     """
 
     name: str = "standard"
@@ -102,6 +110,7 @@ class StrategyConfig:
     packer: str = "slice"
     transport: str = "ppermute"
     coalesce: bool = True
+    mapping: str = "row-major"
 
     def __post_init__(self):
         assert self.n_parts >= 1, self.n_parts
@@ -109,6 +118,9 @@ class StrategyConfig:
             assert self.plan_cache in ("private", "shared"), self.plan_cache
         get_packer(self.packer)  # fail construction, not mid-sweep
         get_transport(self.transport)
+        from repro.launch.mapping import canonical_mapping
+
+        object.__setattr__(self, "mapping", canonical_mapping(self.mapping))
 
     def resolve_cache(self) -> PlanCache | None:
         """``None`` means un-cached private plans (freed by the driver)."""
@@ -197,7 +209,7 @@ class ExchangeStrategy(abc.ABC):
         return spec.with_(
             strategy=self.name, n_parts=n_parts,
             packer=self.config.packer, transport=self.config.transport,
-            coalesce=self.config.coalesce,
+            coalesce=self.config.coalesce, mapping=self.config.mapping,
         )
 
     # -- plan assembly ------------------------------------------------------

@@ -18,9 +18,16 @@ swept here:
   (``StrategyConfig.coalesce``): one contiguous buffer and ONE composed
   collective per hop chain vs the historical per-message pipeline.  The
   uncoalesced first mode hosts the baseline cell.
+* **mapping**               — the process-to-node placement
+  (:mod:`repro.launch.mapping`): each swept mapping permutes rank placement
+  onto the mesh coordinates before the cell's mesh is built (row-major /
+  blocked / recursive-bisection), and every record carries the static
+  hop-locality tally (``intra_node_sends`` / ``inter_node_sends`` under the
+  cell's ``node_size`` ranks-per-node) so the wins show up in the tables,
+  not just the timings.  The FIRST mapping hosts the baseline cell.
 
 Each cell's records carry ``packer``, ``transport``, ``coalesce``,
-``process_count``, ``is_multihost``, ``wire_bytes``,
+``mapping``, ``node_size``, ``process_count``, ``is_multihost``, ``wire_bytes``,
 ``collective_count`` (what one step launches — the coalescing effect),
 ``plan_cache_inits``/``plan_cache_hits`` (the persistent-amortization
 counters), and ``replan_us``/``plan_cache_invalidations`` (the elastic
@@ -62,6 +69,7 @@ import os
 import re
 import subprocess
 import sys
+import warnings
 from typing import Any, Sequence
 
 SCHEMA_VERSION = 1
@@ -70,6 +78,7 @@ SCHEMA_VERSION = 1
 RECORD_KEYS = (
     "bench", "schema_version", "strategy", "n_devices", "n_parts",
     "packer", "transport", "coalesce", "process_count", "is_multihost",
+    "mapping", "node_size", "intra_node_sends", "inter_node_sends",
     "global_interior", "mesh_shape", "message_bytes", "wire_bytes",
     "us_per_cycle", "collective_count",
     "plan_cache_inits", "plan_cache_hits",
@@ -78,11 +87,31 @@ RECORD_KEYS = (
 )
 
 
-def mesh_shape_for(n_devices: int, mesh_ndim: int) -> tuple[int, ...]:
+def mesh_shape_for(
+    n_devices: int, mesh_ndim: int, *, warn: bool = False
+) -> tuple[int, ...]:
     """The cell's mesh shape: a 1-D row, or an ``(n/2, 2)`` torus when a
-    2-D cell is requested and the device count allows one."""
-    if mesh_ndim == 2 and n_devices >= 4 and n_devices % 2 == 0:
-        return (n_devices // 2, 2)
+    2-D cell is requested and the device count allows one.
+
+    A 2-D request the device count cannot honor (odd or prime counts)
+    silently used to degrade to a 1×N row where no corner chains exist —
+    coalescing then measures as a no-op without any trace of why.  With
+    ``warn=True`` (the cell-construction sites) the degradation warns, and
+    :func:`config_block` records the effective shapes so figures can
+    annotate these cells.
+    """
+    if mesh_ndim == 2:
+        if n_devices >= 4 and n_devices % 2 == 0:
+            return (n_devices // 2, 2)
+        if warn:
+            warnings.warn(
+                f"mesh_ndim=2 requested but {n_devices} device(s) cannot "
+                f"form an (n/2, 2) torus; degrading to the 1-D mesh row "
+                f"({n_devices},) — no corner/edge chains exist there, so "
+                f"the coalesce axis measures as a no-op for this cell",
+                RuntimeWarning,
+                stacklevel=2,
+            )
     return (n_devices,)
 
 
@@ -116,6 +145,14 @@ class SweepConfig:
     #: wire-buffer coalescing modes to sweep; the FIRST entry hosts the
     #: baseline cell (default: uncoalesced baseline, then coalesced)
     coalesce_modes: tuple[bool, ...] = (False, True)
+    #: process-to-node mappings to sweep (repro.launch.mapping registry);
+    #: each mapping builds its own permuted mesh per cell.  The FIRST entry
+    #: hosts the baseline cell every speedup is normalized against.
+    mappings: tuple[str, ...] = ("row-major",)
+    #: ranks (devices) per physical node for the hop-locality tally; 0 =
+    #: derive via repro.launch.mapping.default_node_size (process-local
+    #: device count on a real grid, a modeled 2-node split in-process)
+    node_size: int = 0
     #: jax.distributed grid size per cell (1 = the historical in-process
     #: fan-out; >1 boots each device count as a real multi-process grid)
     processes: int = 1
@@ -143,9 +180,17 @@ class SweepConfig:
             self.coalesce_modes
         )
         assert self.processes >= 1, self.processes
+        assert self.node_size >= 0, self.node_size
+        assert self.mappings, "at least one mapping must be swept"
         # fail at construction, not minutes later in a worker subprocess
         from repro.core.transport import get_packer, get_transport
+        from repro.launch.mapping import canonical_mapping
 
+        canon = tuple(canonical_mapping(m) for m in self.mappings)
+        assert len(set(canon)) == len(canon), (
+            f"duplicate mapping cells after alias resolution: {self.mappings}"
+        )
+        object.__setattr__(self, "mappings", canon)
         for p in self.packers:
             get_packer(p)
         get_transport(self.transport)
@@ -178,6 +223,9 @@ class SweepConfig:
             bool(c) for c in raw.get("coalesce_modes", (False,))
         )
         raw.setdefault("mesh_ndim", 1)
+        # pre-mapping config jsons ran the identity placement
+        raw["mappings"] = tuple(raw.get("mappings", ("row-major",)))
+        raw.setdefault("node_size", 0)
         return cls(**raw)
 
 
@@ -186,85 +234,114 @@ def _size_records(
 ) -> list[dict]:
     """Measure one (device count, size) slab: non-partitioning strategies
     once per packer, partitioning strategies once per (partition count,
-    packer), all against the same baseline run (per-cell speedup)."""
+    packer), each mapping on its own permuted mesh, all against the same
+    baseline run — the first mapping's first-packer first-mode baseline
+    strategy — so the packing, coalescing AND placement axes show up in
+    the speedup, not as a moving denominator."""
     import jax
-
-    from repro.core.compat import make_mesh
-    from repro.stencil.comb import (
-        comb_measure,
-        result_label,
-        speedup_vs_baseline,
-    )
-    from repro.stencil.domain import Domain
-    from repro.stencil.strategies import StrategyConfig, get_strategy
-
-    mesh_shape = mesh_shape_for(n_devices, config.mesh_ndim)
-    axis_names = ("px", "py")[: len(mesh_shape)]
-    mesh = make_mesh(mesh_shape, axis_names,
-                     devices=jax.devices()[:n_devices])
-    domain = Domain(
-        mesh,
-        global_interior=tuple(size),
-        mesh_axes=axis_names + (None,) * (len(size) - len(mesh_shape)),
-        halo=config.halo,
-    )
-    strat_configs = []
-    for coalesce in config.coalesce_modes:
-        for packer in config.packers:
-            knobs = dict(packer=packer, transport=config.transport,
-                         coalesce=coalesce)
-            for s in config.strategies:
-                if get_strategy(s).uses_partitions:
-                    strat_configs.extend(
-                        StrategyConfig(name=s, n_parts=p, **knobs)
-                        for p in config.part_counts
-                    )
-                else:
-                    # the partition-count axis does not apply: once per
-                    # (packer, coalesce mode)
-                    strat_configs.append(StrategyConfig(name=s, **knobs))
-    results = comb_measure(
-        domain,
-        strategies=tuple(strat_configs),
-        n_cycles=config.n_cycles,
-        repeats=config.repeats,
-        seed=config.seed,
-    )
-    # every cell (incl. all packers and coalesce modes) is normalized to
-    # the ONE baseline run — the first-packer first-mode `standard` — so
-    # the packing and coalescing axes show up in the speedup, not as a
-    # moving denominator.
-    speedups = speedup_vs_baseline(
-        results,
-        result_label(config.baseline, config.packers[0],
-                     config.coalesce_modes[0]),
-    )
     import numpy as _np
 
-    from repro.core.transport import get_packer
+    from repro.core.compat import make_mesh
+    from repro.core.transport import get_packer, schedule_locality
+    from repro.launch.mapping import default_node_size, get_mapping
+    from repro.stencil.comb import comb_measure, result_label
+    from repro.stencil.domain import Domain
+    from repro.stencil.strategies import (
+        StrategyConfig,
+        get_strategy,
+        make_driver,
+    )
 
-    message_bytes = domain.max_face_bytes()
-    face_elems = message_bytes // _np.dtype(domain.dtype).itemsize
+    mesh_shape = mesh_shape_for(n_devices, config.mesh_ndim, warn=True)
+    axis_names = ("px", "py")[: len(mesh_shape)]
+    axis_sizes = dict(zip(axis_names, mesh_shape))
+    node_size = config.node_size or default_node_size(
+        n_devices, jax.process_count()
+    )
     n_proc = jax.process_count()
-    records = []
-    for label, res in results.items():
-        rec = {
-            "bench": "stencil_sweep",
-            "schema_version": SCHEMA_VERSION,
-            "n_devices": n_devices,
-            "process_count": n_proc,
-            "is_multihost": n_proc > 1,
-            "global_interior": list(size),
-            "mesh_shape": list(mesh_shape),
-            "message_bytes": message_bytes,
-            # what the face actually costs on the wire under this record's
-            # packer (compressed packers shrink it)
-            "wire_bytes": face_elems
-            * get_packer(res.packer).wire_itemsize(domain.dtype),
-            "speedup_vs_baseline": speedups[label],
-            **res.record(),
-        }
-        records.append(rec)
+    base_us: float | None = None
+    # Message tables are a pure function of (strategy, n_parts, shape,
+    # spec) — identical across mappings (test_replan_purity asserts this)
+    # — so the hop tables are derived once per (strategy, n_parts) and
+    # re-classified under each mapping's node vector.
+    groups_cache: dict[tuple[str, int], tuple] = {}
+    records: list[dict] = []
+    for mapping in config.mappings:
+        placed = get_mapping(mapping).permute_devices(
+            jax.devices()[:n_devices], mesh_shape, node_size
+        )
+        mesh = make_mesh(mesh_shape, axis_names, devices=placed)
+        domain = Domain(
+            mesh,
+            global_interior=tuple(size),
+            mesh_axes=axis_names + (None,) * (len(size) - len(mesh_shape)),
+            halo=config.halo,
+        )
+        strat_configs = []
+        for coalesce in config.coalesce_modes:
+            for packer in config.packers:
+                knobs = dict(packer=packer, transport=config.transport,
+                             coalesce=coalesce, mapping=mapping)
+                for s in config.strategies:
+                    if get_strategy(s).uses_partitions:
+                        strat_configs.extend(
+                            StrategyConfig(name=s, n_parts=p, **knobs)
+                            for p in config.part_counts
+                        )
+                    else:
+                        # the partition-count axis does not apply: once per
+                        # (packer, coalesce mode)
+                        strat_configs.append(StrategyConfig(name=s, **knobs))
+        results = comb_measure(
+            domain,
+            strategies=tuple(strat_configs),
+            n_cycles=config.n_cycles,
+            repeats=config.repeats,
+            seed=config.seed,
+        )
+        if base_us is None:
+            base_us = results[
+                result_label(config.baseline, config.packers[0],
+                             config.coalesce_modes[0])
+            ].us_per_cycle
+        node_of = get_mapping(mapping).node_of(mesh_shape, node_size)
+        example = jax.ShapeDtypeStruct(
+            domain.stored_global, _np.dtype(domain.dtype)
+        )
+        message_bytes = domain.max_face_bytes()
+        face_elems = message_bytes // _np.dtype(domain.dtype).itemsize
+        for label, res in results.items():
+            key = (res.strategy, res.n_parts)
+            if key not in groups_cache:
+                drv = make_driver(
+                    StrategyConfig(name=res.strategy, n_parts=res.n_parts),
+                    domain.mesh, domain.halo_spec, ndim=len(size),
+                )
+                groups_cache[key] = drv.replan_tables(example)[0]
+            loc = schedule_locality(
+                groups_cache[key], axis_order=axis_names,
+                axis_sizes=axis_sizes, node_of=node_of,
+            )
+            rec = {
+                "bench": "stencil_sweep",
+                "schema_version": SCHEMA_VERSION,
+                "n_devices": n_devices,
+                "process_count": n_proc,
+                "is_multihost": n_proc > 1,
+                "node_size": node_size,
+                "intra_node_sends": loc.intra_sends,
+                "inter_node_sends": loc.inter_sends,
+                "global_interior": list(size),
+                "mesh_shape": list(mesh_shape),
+                "message_bytes": message_bytes,
+                # what the face actually costs on the wire under this
+                # record's packer (compressed packers shrink it)
+                "wire_bytes": face_elems
+                * get_packer(res.packer).wire_itemsize(domain.dtype),
+                "speedup_vs_baseline": base_us / res.us_per_cycle,
+                **res.record(),
+            }
+            records.append(rec)
     return records
 
 
@@ -369,11 +446,28 @@ def write_bench_json(
 
 
 def read_bench_json(path: str) -> tuple[list[dict], dict | None]:
-    """Load a ``BENCH_*.json`` file: (records, config-block-or-None)."""
+    """Load a ``BENCH_*.json`` file: (records, config-block-or-None).
+
+    Malformed payloads raise :class:`ValueError` naming the file and the
+    shape mismatch — not a bare ``KeyError`` from deep inside a consumer
+    (the regression guard's historical failure mode on stale baselines).
+    """
     with open(path) as f:
         payload = json.load(f)
     if isinstance(payload, dict):
+        if "records" not in payload:
+            raise ValueError(
+                f"{path}: BENCH dict payload has no 'records' key (top-level"
+                f" keys: {sorted(payload)}); expected the bare record list "
+                f"or the {{'config': ..., 'records': [...]}} wrapper — the "
+                f"file is not a BENCH interchange artifact"
+            )
         return list(payload["records"]), payload.get("config")
+    if not isinstance(payload, list):
+        raise ValueError(
+            f"{path}: BENCH payload must be a json list or dict, got "
+            f"{type(payload).__name__}"
+        )
     return list(payload), None
 
 
@@ -384,6 +478,7 @@ def summarize(records: Sequence[dict]) -> list[str]:
         name = (f"sweep/d{r['n_devices']}/p{r['n_parts']}"
                 f"/m{r['message_bytes']}/{r.get('packer', 'slice')}"
                 f"/c{int(bool(r.get('coalesce', False)))}"
+                f"/{r.get('mapping', 'row-major')}"
                 f"/{r['strategy']}")
         pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
         rows.append(f"{name},{r['us_per_cycle']:.1f},"
@@ -415,16 +510,38 @@ def regression_failures(
     check is only meaningful when both runs swept comparable grids (CI
     runs it on the full-matrix smoke job, never the restricted ``--packer``
     cells).  Returns human-readable failure lines (empty = pass).
+
+    A record missing the two keys the guard actually reads (``strategy``,
+    ``speedup_vs_baseline``) raises :class:`ValueError` naming the record
+    and the likely cause (a baseline predating the schema), instead of the
+    historical bare ``KeyError``.
     """
 
-    def best(recs: Sequence[dict]) -> dict[str, float]:
+    def best(recs: Sequence[dict], which: str) -> dict[str, float]:
         out: dict[str, float] = {}
-        for r in recs:
+        for i, r in enumerate(recs):
+            for key in ("strategy", "speedup_vs_baseline"):
+                if key not in r:
+                    raise ValueError(
+                        f"{which} record {i} is missing {key!r} "
+                        f"(schema_version={r.get('schema_version')!r}): the "
+                        f"file likely predates the current record schema — "
+                        f"regenerate it with `python -m repro.stencil.sweep "
+                        f"--smoke --out BENCH_stencil_sweep.json`"
+                    )
             out[r["strategy"]] = max(r["speedup_vs_baseline"],
                                      out.get(r["strategy"], 0.0))
         return out
 
-    old, new = best(baseline_records), best(records)
+    old = best(baseline_records, "baseline")
+    new = best(records, "fresh-sweep")
+    if (old or new) and not set(old) & set(new):
+        raise ValueError(
+            f"no strategy appears in BOTH record sets (baseline strategies "
+            f"{sorted(old)}, fresh {sorted(new)}): the sweeps are not "
+            f"comparable — a stale baseline or mismatched grids would make "
+            f"this guard silently vacuous"
+        )
     fails = []
     for strategy in sorted(set(old) & set(new)):
         floor = old[strategy] * (1.0 - threshold)
@@ -450,12 +567,14 @@ def smoke_config(
     n_devices: int = 4,
     packers: tuple[str, ...] | None = None,
     coalesce_modes: tuple[bool, ...] | None = None,
+    mappings: tuple[str, ...] | None = None,
 ) -> SweepConfig:
     """A 1-cell grid over ALL registered strategies x ALL registered
-    packers (incl. the wire-compressed ones) x both coalesce modes — the
-    CI ``sweep-smoke`` step: any strategy, packer, or coalesce path whose
-    exchange regresses (crashes, diverges, loses its speedup record)
-    surfaces here in seconds.
+    packers (incl. the wire-compressed ones) x both coalesce modes x two
+    process-to-node mappings (row-major baseline + blocked) — the
+    CI ``sweep-smoke`` step: any strategy, packer, coalesce, or placement
+    path whose exchange regresses (crashes, diverges, loses its speedup
+    record) surfaces here in seconds.
 
     The decomposed extent scales with the device count (4 cells per
     shard), so the smoke grid stays valid at any ``--processes`` fan-out
@@ -472,6 +591,11 @@ def smoke_config(
         packers=available_packers() if packers is None else packers,
         coalesce_modes=(
             (False, True) if coalesce_modes is None else coalesce_modes
+        ),
+        # row-major hosts the baseline; blocked exercises a genuinely
+        # permuted mesh (on the (2, 2) torus its node vector differs)
+        mappings=(
+            ("row-major", "blocked") if mappings is None else mappings
         ),
         # a 2-D (n/2, 2) torus: edges/corners exist, so the coalesce axis
         # has hop chains to merge (3 vs 12 collectives for a fused cell)
@@ -508,6 +632,12 @@ def config_block(
         "backend": jax.default_backend(),
         "process_count": n_proc,
         "is_multihost": n_proc > 1,
+        # the mesh each device count ACTUALLY ran on (a 2-D request can
+        # degrade to a 1-D row — see mesh_shape_for's warning)
+        "effective_mesh_shapes": {
+            str(n): list(mesh_shape_for(n, config.mesh_ndim))
+            for n in config.device_counts
+        },
     }
 
 
@@ -531,6 +661,11 @@ def main(argv: Sequence[str] | None = None) -> None:
                     help="restrict the wire-buffer coalescing axis "
                          "(default: sweep both modes; the uncoalesced cell "
                          "hosts the baseline when present)")
+    ap.add_argument("--mapping", metavar="NAME",
+                    help="restrict the process-to-node mapping axis to ONE "
+                         "registered mapping (row-major|blocked|rb), or "
+                         "'all' to sweep every registered mapping "
+                         "(default: the config's mappings)")
     ap.add_argument("--check", metavar="BENCH_JSON",
                     help="after the run, diff the records against this "
                          "committed BENCH baseline and exit non-zero if any "
@@ -582,6 +717,18 @@ def main(argv: Sequence[str] | None = None) -> None:
         args.coalesce
     ]
 
+    mappings: tuple[str, ...] | None = None
+    if args.mapping:
+        from repro.launch.mapping import available_mappings, canonical_mapping
+
+        if args.mapping == "all":
+            mappings = available_mappings()
+        else:
+            try:
+                mappings = (canonical_mapping(args.mapping),)
+            except KeyError as e:
+                ap.error(str(e.args[0]) if e.args else str(e))
+
     def maybe_check(records) -> None:
         if not args.check:
             return
@@ -602,6 +749,7 @@ def main(argv: Sequence[str] | None = None) -> None:
                 2 * args.processes,
                 packers=(args.packer,) if args.packer else None,
                 coalesce_modes=coalesce_modes,
+                mappings=mappings,
             )
             config = dataclasses.replace(
                 config, processes=args.processes, transport="multihost",
@@ -626,6 +774,7 @@ def main(argv: Sequence[str] | None = None) -> None:
             config = smoke_config(
                 n, packers=(args.packer,) if args.packer else None,
                 coalesce_modes=coalesce_modes,
+                mappings=mappings,
             )
             records = sweep_cells(config, n_devices=n)
         write_bench_json(
@@ -648,6 +797,8 @@ def main(argv: Sequence[str] | None = None) -> None:
         config = dataclasses.replace(config, packers=(args.packer,))
     if coalesce_modes is not None:
         config = dataclasses.replace(config, coalesce_modes=coalesce_modes)
+    if mappings is not None:
+        config = dataclasses.replace(config, mappings=mappings)
     if args.processes > 1:
         config = dataclasses.replace(
             config, processes=args.processes, transport="multihost",

@@ -38,6 +38,10 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
         "coalesce": coalesce,
         "process_count": 1,
         "is_multihost": False,
+        "mapping": "row-major",
+        "node_size": max(1, n_devices // 2),
+        "intra_node_sends": n_parts,
+        "inter_node_sends": n_parts,
         "global_interior": list(size),
         "mesh_shape": [n_devices],
         "message_bytes": size[1] * 4,
@@ -142,11 +146,16 @@ def test_no_nan_speedups(emitted):
             assert math.isfinite(pct)
 
 
-def test_curves_cover_all_six_sweep_axes(emitted):
+def test_curves_cover_all_seven_sweep_axes(emitted):
     _, out = emitted
     assert set(out["curves"]) == {
         "devices", "parts", "msgsize", "packer", "wirebytes", "coalesce",
+        "mapping",
     }
+    # synth records predate the mapping field -> one identity-placement
+    # point per strategy (incl. the baseline: placement is a baseline-
+    # inclusive axis like packer/coalesce)
+    assert {m for _, m in out["curves"]["mapping"]} == {"row-major"}
     assert {d for _, d in out["curves"]["devices"]} == {2, 4}
     # the partition axis reaches 2 only for the partitioning strategy
     assert ("partitioned", 2) in out["curves"]["parts"]

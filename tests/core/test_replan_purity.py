@@ -29,12 +29,13 @@ STRATEGIES = ("standard", "persistent", "partitioned", "fused", "overlap")
 SIZE = (24, 6)
 
 
-def _driver_and_example(devices, *, strategy, n_parts, packer, coalesce):
+def _driver_and_example(devices, *, strategy, n_parts, packer, coalesce,
+                        mapping="row-major"):
     mesh = make_mesh((len(devices),), ("px",), devices=list(devices))
     dom = Domain(mesh, global_interior=SIZE, mesh_axes=("px", None), halo=1)
     drv = make_driver(
         StrategyConfig(name=strategy, n_parts=n_parts, packer=packer,
-                       coalesce=coalesce),
+                       coalesce=coalesce, mapping=mapping),
         mesh, dom.halo_spec, ndim=2,
     )
     example = jax.ShapeDtypeStruct(dom.stored_global, np.dtype(dom.dtype))
@@ -94,6 +95,33 @@ def test_replan_tables_ignores_device_permutation(
     # ...and a *different* subset of the same cardinality (survivor choice)
     tail = list(jax.devices()[-n_devices:])
     assert _tables(devices, **kw) == _tables(tail, **kw)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    strategy=st.sampled_from(STRATEGIES),
+    n_devices=st.sampled_from((4, 8)),
+    mapping=st.sampled_from(
+        ("row-major", "blocked", "recursive-bisection", "rb")
+    ),
+)
+def test_replan_tables_ignore_mapping(strategy, n_devices, mapping):
+    """The mapping seam's purity half: a registered process-to-node mapping
+    permutes which DEVICE holds each coordinate (and stamps plan keys), but
+    the derived Message/WireLayout tables — pure functions of the mesh
+    shape — must be identical under every mapping, for every strategy.
+    This is what lets every rank of a mapped grid derive the same schedule
+    independently."""
+    from repro.launch.mapping import default_node_size, get_mapping
+
+    kw = dict(strategy=strategy,
+              n_parts=2 if strategy == "partitioned" else 1,
+              packer="slice", coalesce=True)
+    devices = list(jax.devices()[:n_devices])
+    placed = get_mapping(mapping).permute_devices(
+        devices, (n_devices,), default_node_size(n_devices)
+    )
+    assert _tables(devices, **kw) == _tables(placed, mapping=mapping, **kw)
 
 
 @settings(max_examples=8, deadline=None)

@@ -33,11 +33,11 @@ SMALL = SweepConfig(
 
 def _expected_cells(cfg: SweepConfig) -> int:
     """Partitioning strategies get one record per (partition count, packer,
-    coalesce mode); the partition-count axis does not apply to the others
-    (one record per packer x coalesce mode each)."""
+    coalesce mode, mapping); the partition-count axis does not apply to the
+    others (one record per packer x coalesce mode x mapping each)."""
     from repro.stencil.strategies import get_strategy
 
-    return len(cfg.packers) * len(cfg.coalesce_modes) * sum(
+    return len(cfg.mappings) * len(cfg.packers) * len(cfg.coalesce_modes) * sum(
         len(cfg.part_counts) if get_strategy(s).uses_partitions else 1
         for s in cfg.strategies
     )
@@ -385,6 +385,144 @@ def test_config_json_roundtrip():
         SweepConfig(coalesce_modes=())  # at least one mode
     with pytest.raises(AssertionError):
         SweepConfig(coalesce_modes=(True, True))  # duplicate cells
+
+
+MAPPED = SweepConfig(
+    device_counts=(4,), part_counts=(1,), sizes=((16, 8),),
+    strategies=("standard", "persistent", "fused"),
+    packers=("slice",), coalesce_modes=(True,),
+    mappings=("row-major", "blocked"), mesh_ndim=2,
+    n_cycles=2, repeats=1,
+)
+
+
+@pytest.fixture(scope="module")
+def mapped_records():
+    return sweep_cells(MAPPED, n_devices=4)
+
+
+def test_mapping_axis_swept(mapped_records):
+    """Acceptance: every cell exists under BOTH mappings, the mapping is
+    stamped on the record, and the baseline denominator is the FIRST
+    mapping's first-packer first-mode standard run."""
+    assert len(mapped_records) == _expected_cells(MAPPED)
+    assert {r["mapping"] for r in mapped_records} == {"row-major", "blocked"}
+    by_mapping = {}
+    for r in mapped_records:
+        by_mapping.setdefault(r["mapping"], set()).add(
+            (r["strategy"], r["n_parts"], r["packer"], r["coalesce"])
+        )
+    assert by_mapping["row-major"] == by_mapping["blocked"]
+    for r in mapped_records:
+        if (r["mapping"] == "row-major" and r["strategy"] == "standard"
+                and r["packer"] == "slice"
+                and r["coalesce"] is MAPPED.coalesce_modes[0]):
+            assert r["speedup_vs_baseline"] == pytest.approx(1.0)
+        else:
+            assert r["speedup_vs_baseline"] > 0.0
+
+
+def test_mapping_records_carry_static_locality(mapped_records):
+    """Every record tallies its hop locality under the cell's node_size,
+    and the totals are mapping-independent per (strategy, n_parts): a
+    mapping moves sends across the node boundary, never adds any."""
+    totals = {}
+    for r in mapped_records:
+        assert r["node_size"] == 2  # 4 in-process devices: modeled 2 nodes
+        assert r["intra_node_sends"] >= 0 and r["inter_node_sends"] >= 0
+        assert r["intra_node_sends"] + r["inter_node_sends"] > 0
+        key = (r["strategy"], r["n_parts"])
+        total = r["intra_node_sends"] + r["inter_node_sends"]
+        totals.setdefault(key, {})[r["mapping"]] = total
+    for key, per_mapping in totals.items():
+        assert len(set(per_mapping.values())) == 1, (key, per_mapping)
+
+
+def test_config_json_roundtrip_mappings():
+    cfg = SweepConfig(device_counts=(4,), sizes=((16, 8),),
+                      mappings=("row-major", "rb"))
+    # aliases canonicalize at construction, and the canonical form
+    # round-trips through the worker-config json
+    assert cfg.mappings == ("row-major", "recursive-bisection")
+    assert SweepConfig.from_json(cfg.to_json()) == cfg
+    # a pre-mapping config json ran the identity placement
+    raw = json.loads(cfg.to_json())
+    del raw["mappings"]
+    del raw["node_size"]
+    old = SweepConfig.from_json(json.dumps(raw))
+    assert old.mappings == ("row-major",) and old.node_size == 0
+    with pytest.raises(AssertionError):
+        SweepConfig(mappings=())  # at least one mapping
+    with pytest.raises(AssertionError):
+        # alias and canonical name are the SAME cell
+        SweepConfig(mappings=("rb", "recursive-bisection"))
+    with pytest.raises(KeyError, match="hilbert"):
+        SweepConfig(mappings=("hilbert",))
+
+
+def test_mesh_shape_for_warns_on_degenerate_2d():
+    from repro.stencil.sweep import mesh_shape_for
+
+    with pytest.warns(RuntimeWarning, match="cannot form"):
+        assert mesh_shape_for(3, 2, warn=True) == (3,)
+    # the default (config-validation loops) stays silent, and a shape that
+    # CAN form the torus never warns
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        assert mesh_shape_for(3, 2) == (3,)
+        assert mesh_shape_for(4, 2, warn=True) == (2, 2)
+        assert mesh_shape_for(3, 1, warn=True) == (3,)
+
+
+def test_config_block_records_effective_mesh_shapes():
+    from repro.stencil.sweep import config_block
+
+    cfg = SweepConfig(device_counts=(4, 6), sizes=((24, 8),), mesh_ndim=2)
+    block = config_block(cfg, timeout=90.0)
+    assert block["effective_mesh_shapes"] == {"4": [2, 2], "6": [3, 2]}
+
+
+def test_smoke_config_covers_two_mappings():
+    from repro.stencil.sweep import smoke_config
+
+    assert smoke_config().mappings == ("row-major", "blocked")
+    assert smoke_config(mappings=("rb",)).mappings == (
+        "recursive-bisection",
+    )
+
+
+def test_read_bench_json_clear_errors(tmp_path):
+    """Satellite: malformed BENCH payloads fail with a message naming the
+    file and the shape mismatch, not a KeyError deep in a consumer."""
+    bad_dict = tmp_path / "BENCH_bad.json"
+    bad_dict.write_text(json.dumps({"config": {}, "rows": []}))
+    with pytest.raises(ValueError, match="no 'records' key"):
+        read_bench_json(str(bad_dict))
+    bad_scalar = tmp_path / "BENCH_scalar.json"
+    bad_scalar.write_text("42")
+    with pytest.raises(ValueError, match="must be a json list or dict"):
+        read_bench_json(str(bad_scalar))
+
+
+def test_regression_guard_clear_errors():
+    """Satellite: a stale baseline (pre-schema records, or zero strategy
+    overlap) raises a ValueError explaining itself instead of KeyError /
+    silently passing a vacuous check."""
+    from repro.stencil.sweep import regression_failures
+
+    good = [{"strategy": "standard", "speedup_vs_baseline": 1.0}]
+    with pytest.raises(ValueError, match="speedup_vs_baseline"):
+        regression_failures([{"strategy": "standard"}], good)
+    with pytest.raises(ValueError, match="regenerate"):
+        regression_failures(good, [{"speedup_vs_baseline": 2.0}])
+    with pytest.raises(ValueError, match="not comparable"):
+        regression_failures(
+            good, [{"strategy": "fused", "speedup_vs_baseline": 2.0}]
+        )
+    # both sides empty is vacuously fine (a fresh repo with no baseline)
+    assert regression_failures([], []) == []
 
 
 @pytest.mark.slow
