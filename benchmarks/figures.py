@@ -137,8 +137,15 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
     Unlike fig2-fig5 (calibrated model projections) this section renders
     what the sweep actually measured on this host.  Returns the structured
     form (``rows`` one per (strategy, cell), ``curves`` per axis, ``raw``
-    absolute-time overlay rows, ``claims``) that
+    absolute-time overlay rows, ``claims``, and ``autotune`` — the
+    autotuned-vs-best/worst-static comparison per cell) that
     ``tests/benchmarks/test_fig_sweep.py`` validates.
+
+    Autotuned records (``selected_by`` set) render as rows tagged
+    ``auto:<resolved strategy>`` but are EXCLUDED from the per-strategy
+    curves, claims, and raw overlays: a tuned cell resolving to
+    ``overlap`` is a selection result, not an ``overlap`` measurement, and
+    folding it in would double-count the static grid.
     """
     if records is None:
         records = load_sweep_records(sweep_path)
@@ -161,16 +168,25 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
     def strat_tag(r: dict) -> str:
         # non-default placements suffix the strategy segment (the same
         # `%mapping` convention as ScheduleInfo.tag()), keeping row names
-        # unique across the mapping axis without changing their arity
+        # unique across the mapping axis without changing their arity;
+        # autotuned records prefix `auto:` so a tuned cell never collides
+        # with the identical static one
         m = mapping_of(r)
-        return r["strategy"] if m == "row-major" else f"{r['strategy']}%{m}"
+        tag = r["strategy"] if m == "row-major" else f"{r['strategy']}%{m}"
+        return f"auto:{tag}" if r.get("selected_by") else tag
+
+    # static records are the measured §VI grid; autotuned ones are the
+    # selection layer's outcomes on top of it
+    static = [r for r in records if not r.get("selected_by")]
+    autos = [r for r in records if r.get("selected_by")]
 
     # --- per-(strategy, cell) rows; every cell must carry its baseline ----
     cells: dict[tuple, set] = {}
     rows = []
     for r in records:
         cell = (r["n_devices"], tuple(r["global_interior"]))
-        cells.setdefault(cell, set()).add(r["strategy"])
+        if not r.get("selected_by"):
+            cells.setdefault(cell, set()).add(r["strategy"])
         sp = r["speedup_vs_baseline"]
         assert math.isfinite(sp) and sp > 0, (r["strategy"], cell, sp)
         name = (f"fig_sweep/d{r['n_devices']}/p{r['n_parts']}"
@@ -187,7 +203,7 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
     # --- curves: best speedup per strategy along each §VI axis ------------
     def curve(axis_key, *, keep_baseline: bool = False) -> dict:
         best: dict[tuple, float] = {}
-        for r in records:
+        for r in static:
             if r["strategy"] == baseline and not keep_baseline:
                 continue
             k = (r["strategy"], axis_key(r))
@@ -248,10 +264,10 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
     # swept message sizes (the regime the ROADMAP's raw-latency item asks
     # about: large messages are where packing and overlap decisions move
     # real microseconds).
-    sizes = sorted({r["message_bytes"] for r in records})
+    sizes = sorted({r["message_bytes"] for r in static})
     top_sizes = set(sizes[len(sizes) // 2:]) if sizes else set()
     raw = []
-    for r in records:
+    for r in static:
         if r["message_bytes"] not in top_sizes:
             continue
         name = (f"fig_sweep/raw/m{r['message_bytes']}/d{r['n_devices']}"
@@ -262,17 +278,54 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
              f"raw_us={r['us_per_cycle']:.1f};strategy={r['strategy']}")
     raw_strategies = {s for _, _, s in raw}
     for s in ("fused", "overlap"):
-        if any(r["strategy"] == s for r in records):
+        if any(r["strategy"] == s for r in static):
             assert s in raw_strategies, (
                 f"raw overlay lost {s!r} at sizes {sorted(top_sizes)}"
             )
+
+    # --- autotune vs the static grid --------------------------------------
+    # One row per tuned cell: where the selection landed relative to the
+    # best and worst static cells it could have picked.  `auto_pct >=
+    # best_static_pct` (up to measurement noise) is the tentpole's headline
+    # claim; `worst_static_pct` shows the downside a mispick would have
+    # cost.  Keyed by mapping too — the tuner runs once per placement.
+    autotune = []
+    for r in autos:
+        key = (r["n_devices"], tuple(r["global_interior"]), mapping_of(r))
+        pcts = [
+            (s["speedup_vs_baseline"] - 1.0) * 100.0
+            for s in static
+            if (s["n_devices"], tuple(s["global_interior"]),
+                mapping_of(s)) == key
+        ]
+        auto_pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
+        best_pct = max(pcts) if pcts else None
+        worst_pct = min(pcts) if pcts else None
+        autotune.append({
+            "cell": key,
+            "strategy": r["strategy"],
+            "selected_by": r["selected_by"],
+            "auto_pct": auto_pct,
+            "best_static_pct": best_pct,
+            "worst_static_pct": worst_pct,
+        })
+        best_tag = "" if best_pct is None else (
+            f";best_static={best_pct:.1f}%;worst_static={worst_pct:.1f}%"
+        )
+        emit(
+            f"fig_sweep/autotune/d{r['n_devices']}/m{r['message_bytes']}"
+            f"/{mapping_of(r)}",
+            r["us_per_cycle"],
+            f"auto={auto_pct:.1f}%{best_tag}"
+            f";picked={r['strategy']};selected_by={r['selected_by']}",
+        )
 
     # --- measured vs the paper's quoted §VI numbers -----------------------
     claims = []
     for cid, strategy, desc, paper_pct in SWEEP_CLAIMS:
         pcts = [
             (r["speedup_vs_baseline"] - 1.0) * 100.0
-            for r in records if r["strategy"] == strategy
+            for r in static if r["strategy"] == strategy
         ]
         measured = (
             (min(pcts) if paper_pct < 0 else max(pcts)) if pcts else None
@@ -281,7 +334,7 @@ def fig_sweep(emit, sweep_path: str = "BENCH_stencil_sweep.json",
         emit(f"fig_sweep/claims/{cid}", measured,
              f"paper={paper_pct} :: {desc}")
     return {"rows": rows, "curves": curves, "raw": raw, "claims": claims,
-            "amortization": amortization}
+            "amortization": amortization, "autotune": autotune}
 
 
 # paper-claim validation table (C1-C6 of DESIGN.md §1)

@@ -27,10 +27,13 @@ def main() -> None:
     ap.add_argument("--cycles", type=int, default=10)
     ap.add_argument("--size", type=int, default=32)
     ap.add_argument("--parts", type=int, default=4)
-    ap.add_argument("--strategy", choices=available_strategies(),
+    ap.add_argument("--strategy",
+                    choices=[*available_strategies(), "auto"],
                     help="measure+verify just this strategy (against the "
                          "standard baseline); default: all registered, e.g. "
-                         "--strategy fused or --strategy overlap")
+                         "--strategy fused or --strategy overlap; 'auto' "
+                         "lets the repro.core.autotune tuner pick strategy, "
+                         "packer, and coalesce mode for this cell")
     from repro.core.transport import available_packers
 
     ap.add_argument("--packer", choices=available_packers(), default="slice",
@@ -62,6 +65,10 @@ def main() -> None:
         else tuple(dict.fromkeys(("standard", args.strategy)))
     )
     strategies = tuple(
+        # fully-open autotune cell: the tuner owns packer, coalesce mode,
+        # and the partition count, so the CLI pins none of them
+        StrategyConfig(name="auto", packer="auto", coalesce="auto")
+        if s == "auto" else
         StrategyConfig(
             name=s, packer=args.packer, coalesce=coalesce,
             n_parts=args.parts if s == "partitioned" else 1,
@@ -83,6 +90,12 @@ def main() -> None:
         sp = (base / r.us_per_cycle - 1.0) * 100.0
         print(f"  {s:12s} {r.us_per_cycle:9.1f} us/cycle  "
               f"speedup={sp:+6.1f}%  init={r.init_us:.0f}us")
+        if r.selected_by:
+            print(f"  {'':12s} resolved to {r.strategy}@{r.packer} "
+                  f"{'coalesced' if r.coalesce else 'uncoalesced'} "
+                  f"p={r.n_parts} via {r.selected_by} "
+                  f"(predicted {r.predicted_us or 0.0:.1f}us, "
+                  f"calibration {r.calibration_us / 1e6:.2f}s)")
 
     # verify against the periodic numpy oracle
     interior = np.random.default_rng(0).normal(
@@ -93,18 +106,24 @@ def main() -> None:
     from repro.stencil import make_driver
 
     verify_with = args.strategy or "persistent"
-    drv = make_driver(
+    verify_config = (
+        StrategyConfig(name="auto", packer="auto", coalesce="auto")
+        if verify_with == "auto" else
         StrategyConfig(name=verify_with, n_parts=args.parts,
-                       packer=args.packer, coalesce=coalesce),
-        dom.mesh, dom.halo_spec, ndim=3, update_fn=update,
+                       packer=args.packer, coalesce=coalesce)
+    )
+    drv = make_driver(
+        verify_config, dom.mesh, dom.halo_spec, ndim=3, update_fn=update,
     )
     x = dom.from_global_interior(interior)
     for _ in range(args.cycles):
         x = drv.step(x)
     got = dom.to_global_interior(drv.wait(x))
+    resolved = drv.strategy  # concrete name even when verify_with == "auto"
     drv.free()
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
-    print(f"{verify_with}: verified against periodic numpy oracle ✓")
+    tag = f"auto→{resolved}" if verify_with == "auto" else verify_with
+    print(f"{tag}: verified against periodic numpy oracle ✓")
 
 
 if __name__ == "__main__":

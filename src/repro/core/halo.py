@@ -82,6 +82,11 @@ class HaloSpec:
     transport: str = "ppermute"
     coalesce: bool = True
     mapping: str = "row-major"
+    #: autotune provenance ("trace"/"model"/"calibration"/...) when this
+    #: exchange's cell was picked by :mod:`repro.core.autotune`; ``None``
+    #: for caller-pinned cells.  Part of the plan identity: an autotuned
+    #: plan never silently aliases a hand-pinned one.
+    selected_by: str | None = None
 
     def __post_init__(self):
         assert len(self.mesh_axes) == len(self.array_axes)
@@ -106,6 +111,7 @@ class HaloSpec:
             kind=kind, mesh_axes=self.mesh_axes,
             packer=self.packer, transport=self.transport,
             coalesce=self.coalesce, mapping=self.mapping,
+            selected_by=self.selected_by,
         )
 
 

@@ -374,12 +374,17 @@ class ScheduleInfo:
     transport: str = "ppermute"
     coalesce: bool = False
     mapping: str = "row-major"
+    #: how this cell was chosen when the autotuner picked it
+    #: (:mod:`repro.core.autotune`); ``None`` for hand-pinned cells
+    selected_by: str | None = None
 
     def tag(self) -> str:
         axes = "x".join(self.mesh_axes) or "-"
         base = f"{self.kind}[{axes}]@{self.packer}/{self.transport}"
         if self.mapping != "row-major":
             base += f"%{self.mapping}"
+        if self.selected_by is not None:
+            base += f"?{self.selected_by}"
         return base + ("+coalesced" if self.coalesce else "")
 
 

@@ -303,7 +303,11 @@ def global_stencil_mesh(
     :class:`repro.launch.mapping.Mapping` BEFORE the mesh is built (the
     placement is deterministic, so every rank still derives the same mesh);
     ``node_size`` is the ranks-per-node the mapping blocks around
-    (0 = auto: devices per process on a real grid).
+    (0 = auto: devices per process on a real grid).  ``mapping="auto"``
+    resolves to the registered mapping minimizing inter-node neighbor
+    sends on this topology (:func:`repro.core.autotune.choose_mapping`) —
+    mapping is the one autotuned axis that must resolve *before* the mesh
+    exists, since a built mesh cannot be re-placed.
     """
     import jax
 
@@ -315,6 +319,10 @@ def global_stencil_mesh(
     assert n <= len(devices), (n, len(devices))
     if node_size <= 0:
         node_size = default_node_size(n, jax.process_count())
+    if mapping == "auto":
+        from repro.core.autotune import choose_mapping
+
+        mapping = choose_mapping((n,), node_size)
     placed = get_mapping(mapping).permute_devices(
         devices[:n], (n,), node_size
     )
@@ -399,6 +407,17 @@ def run_cell(
     from repro.stencil.domain import Domain
     from repro.stencil.strategies import StrategyConfig, get_strategy
 
+    if mapping == "auto":
+        # resolve BEFORE any StrategyConfig sees it: the placement axis is
+        # fixed at mesh construction, so it cannot stay symbolic downstream
+        from repro.core.autotune import choose_mapping
+        from repro.launch.mapping import default_node_size
+
+        n_all = len(jax.devices())
+        mapping = choose_mapping(
+            (n_all,), default_node_size(n_all, jax.process_count())
+        )
+        emit(f"# mapping=auto resolved to {mapping}")
     mesh = global_stencil_mesh(mapping=mapping)
     n = len(mesh.devices.flat)
     assert size[0] % n == 0 and size[0] // n >= 3 * halo, (size, n)
@@ -409,7 +428,10 @@ def run_cell(
     configs = []
     for packer in packers:
         for s in strategies:
-            parts = n_parts if get_strategy(s).uses_partitions else 1
+            if s == "auto":
+                parts = 1  # the tuner owns the partition-count axis
+            else:
+                parts = n_parts if get_strategy(s).uses_partitions else 1
             verify_strategy_cell(
                 domain, strategy=s, packer=packer, transport=transport,
                 n_parts=parts, mapping=mapping,
@@ -447,14 +469,18 @@ def main(argv: Sequence[str] | None = None) -> None:
     ap.add_argument("--devices-per-process", type=int, default=2,
                     help="virtual CPU devices each rank pins")
     ap.add_argument("--strategies", default="all",
-                    help="comma list of registered strategies, or 'all'")
+                    help="comma list of registered strategies, 'all', or "
+                         "'auto' (repro.core.autotune picks the strategy "
+                         "per cell)")
     ap.add_argument("--packers", default="slice",
                     help="comma list of registered packers, or 'all'")
     ap.add_argument("--transport", default="multihost",
                     help="registered transport every cell routes through")
     ap.add_argument("--mapping", default="row-major",
                     help="registered process-to-node mapping permuting rank "
-                         "placement onto the mesh (row-major|blocked|rb)")
+                         "placement onto the mesh (row-major|blocked|rb), "
+                         "or 'auto' to pick the one minimizing inter-node "
+                         "neighbor sends on this topology")
     ap.add_argument("--size", default="16,8",
                     help="global interior shape, comma-separated")
     ap.add_argument("--halo", type=int, default=1)
@@ -468,10 +494,11 @@ def main(argv: Sequence[str] | None = None) -> None:
 
     from repro.launch.mapping import canonical_mapping
 
-    try:  # fail in the launcher, not N spawned ranks deep
-        canonical_mapping(args.mapping)
-    except KeyError as e:
-        ap.error(str(e))
+    if args.mapping != "auto":
+        try:  # fail in the launcher, not N spawned ranks deep
+            canonical_mapping(args.mapping)
+        except KeyError as e:
+            ap.error(str(e))
 
     if COORDINATOR_VAR not in os.environ:
         # launcher: re-run this same CLI as an N-rank grid

@@ -78,6 +78,16 @@ class CycleResult:
     #: plans this measurement's cache dropped to a topology change (zero in
     #: a steady-state sweep; the elastic runner drives it up)
     plan_cache_invalidations: int = 0
+    #: autotune provenance when the driver resolved an "auto" cell
+    #: ("trace"/"trace-nearest"/"model"/"calibration"/"cache"); None for
+    #: hand-pinned cells, whose strategy/packer/coalesce ARE the request
+    selected_by: str | None = None
+    #: the tuner's score for the chosen cell (recorded us for trace
+    #: verdicts, modeled/probed us otherwise); None for pinned cells
+    predicted_us: float | None = None
+    #: wall time the in-situ calibration probes cost (0 when the verdict
+    #: came from a trace, the model, or the persistent autotune cache)
+    calibration_us: float = 0.0
 
     def record(self) -> dict:
         """Flat, json-serializable form (the BENCH_*.json row body)."""
@@ -157,6 +167,11 @@ def run_cycles(
         plan_cache_hits=plan_hits,
         replan_us=replan_us,
         plan_cache_invalidations=plan_invals,
+        # autotuned drivers expose their selection provenance; pinned
+        # drivers have none (getattr: only AutoStrategy defines these)
+        selected_by=getattr(driver, "selected_by", None),
+        predicted_us=getattr(driver, "predicted_us", None),
+        calibration_us=getattr(driver, "calibration_us", 0.0),
     )
 
 
@@ -165,6 +180,10 @@ def _as_config(
 ) -> StrategyConfig:
     if isinstance(strategy, StrategyConfig):
         return strategy
+    if strategy == "auto":
+        # the bare name opens every autotunable axis; pass an explicit
+        # StrategyConfig to pin packer/coalesce while tuning the rest
+        return StrategyConfig(name="auto", packer="auto", coalesce="auto")
     n_parts = default_n_parts if strategy == "partitioned" else 1
     return StrategyConfig(name=strategy, n_parts=n_parts)
 

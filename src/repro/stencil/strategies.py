@@ -33,12 +33,14 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import time
 from typing import Callable, ClassVar
 
 import jax
 from jax.sharding import Mesh
 
 from repro.core import compat
+from repro.core.autotune import AUTO
 from repro.core.halo import (
     HaloSpec,
     exchange,
@@ -101,6 +103,13 @@ class StrategyConfig:
                        plan key, and the sweep/BENCH records stamp it per
                        cell.  Aliases (``"rb"``) canonicalize at
                        construction.
+
+    ``name``, ``packer``, and ``coalesce`` also accept the sentinel
+    ``"auto"``: :func:`make_driver` then routes to :class:`AutoStrategy`,
+    which resolves every ``auto`` axis at plan-build time through
+    :mod:`repro.core.autotune` (trace-driven cost model, else in-situ
+    calibration).  A non-``auto`` value on any axis pins that axis and
+    autotuning ranges only over the rest.
     """
 
     name: str = "standard"
@@ -109,14 +118,18 @@ class StrategyConfig:
     donate: bool = True
     packer: str = "slice"
     transport: str = "ppermute"
-    coalesce: bool = True
+    coalesce: bool | str = True
     mapping: str = "row-major"
 
     def __post_init__(self):
         assert self.n_parts >= 1, self.n_parts
         if isinstance(self.plan_cache, str):
             assert self.plan_cache in ("private", "shared"), self.plan_cache
-        get_packer(self.packer)  # fail construction, not mid-sweep
+        if self.packer != AUTO:
+            get_packer(self.packer)  # fail construction, not mid-sweep
+        assert isinstance(self.coalesce, bool) or self.coalesce == AUTO, (
+            self.coalesce
+        )
         get_transport(self.transport)
         from repro.launch.mapping import canonical_mapping
 
@@ -353,11 +366,20 @@ def make_driver(
     update_fn: Callable[[jax.Array], jax.Array] | None = None,
     **config_kw,
 ) -> ExchangeStrategy:
-    """The factory: name-or-config in, initialized-on-demand driver out."""
+    """The factory: name-or-config in, initialized-on-demand driver out.
+
+    Any ``auto`` axis (name, packer, or coalesce) routes to
+    :class:`AutoStrategy`, which resolves the remaining axes at plan-build
+    time and then behaves exactly as the driver it picked.
+    """
     if isinstance(strategy, StrategyConfig):
         config = strategy
     else:
         config = StrategyConfig(name=strategy, **config_kw)
+    if AUTO in (config.name, config.packer, config.coalesce):
+        return AutoStrategy(
+            mesh, spec_builder, ndim, config=config, update_fn=update_fn
+        )
     cls = get_strategy(config.name)
     return cls(mesh, spec_builder, ndim, config=config, update_fn=update_fn)
 
@@ -576,3 +598,260 @@ class OverlapStrategy(PersistentStrategy):
         return compat.shard_map(
             step, mesh=self.mesh, in_specs=pspec, out_specs=pspec
         )
+
+
+# ---------------------------------------------------------------------------
+# autotuned selection (not registered: "auto" is a selector, not a schedule)
+# ---------------------------------------------------------------------------
+
+
+class AutoStrategy(ExchangeStrategy):
+    """Resolve every ``auto`` config axis at plan-build time, then delegate.
+
+    On the first ``init``/``step`` the driver enumerates the candidate
+    ``(strategy, packer, coalesce, n_parts)`` grid (any concretely-pinned
+    axis stays pinned), computes each candidate's static schedule features
+    — ``wire_bytes``, collective count, and the intra/inter-node send tally
+    under the LIVE mesh's node vector — and asks the process-wide
+    :func:`repro.core.autotune.default_tuner` to pick: by recorded trace,
+    by fitted cost model, or (when neither covers the cell) by in-situ
+    timed probes through this driver's own plan cache.  The winning probe's
+    compiled plan is thereby already initialized when the resolved inner
+    driver starts — the paper's amortization argument applied to the tuning
+    step itself.
+
+    After resolution the driver IS the chosen one: ``strategy``/``config``
+    report the concrete cell, and ``selected_by``/``predicted_us``/
+    ``calibration_us`` carry the provenance that
+    :func:`repro.stencil.comb.run_cycles` stamps into BENCH records.
+    ``selected_by`` also lands in :class:`~repro.core.halo.HaloSpec` (and
+    so in every persistent plan key): an autotuned plan never silently
+    aliases a hand-pinned one.
+    """
+
+    name = AUTO
+    amortizes_init = True  # resolution + the inner init are the setup cost
+
+    def __init__(self, mesh, spec_builder, ndim, *, config=None,
+                 update_fn=None):
+        config = config or StrategyConfig(
+            name=AUTO, packer=AUTO, coalesce=AUTO
+        )
+        super().__init__(
+            mesh, spec_builder, ndim, config=config, update_fn=update_fn
+        )
+        # the base ctor stamps name="auto"; restore the caller's strategy
+        # pin (e.g. name="persistent", packer="auto" tunes the packer only)
+        self.config = config
+        self._inner: ExchangeStrategy | None = None
+        self._owned_cache: PlanCache | None = None
+        #: selection provenance, populated at resolution
+        self.selected_by: str | None = None
+        self.predicted_us: float | None = None
+        self.calibration_us: float = 0.0
+
+    # -- identity: the sentinel before resolution, the winner after --------
+    @property
+    def strategy(self) -> str:
+        return self._inner.strategy if self._inner is not None else AUTO
+
+    @property
+    def n_parts(self) -> int:
+        return self._inner.n_parts if self._inner is not None else 1
+
+    # -- candidate grid -----------------------------------------------------
+    def _probe_plan_cache(self) -> str | PlanCache:
+        """Probe drivers and the resolved driver share ONE cache, so the
+        winner's probe plan is a cache hit, not a recompile.  A "private"
+        request becomes a driver-owned cache (freed with this driver);
+        "shared"/explicit caches pass through."""
+        if self.config.plan_cache == "private":
+            if self._owned_cache is None:
+                self._owned_cache = PlanCache()
+            return self._owned_cache
+        return self.config.plan_cache
+
+    def _candidate_config(self, cand) -> StrategyConfig:
+        return self.config.with_(
+            name=cand.strategy, packer=cand.packer,
+            coalesce=cand.coalesce, n_parts=cand.n_parts,
+            plan_cache=self._probe_plan_cache(),
+        )
+
+    def _candidates(self, dtype):
+        from repro.core import autotune
+
+        pin = lambda v: None if v == AUTO else (v,)
+        return autotune.default_candidates(
+            dtype=dtype,
+            strategies=pin(self.config.name),
+            packers=pin(self.config.packer),
+            coalesce_modes=(
+                None if self.config.coalesce == AUTO
+                else (bool(self.config.coalesce),)
+            ),
+            part_counts=(
+                autotune.DEFAULT_PART_COUNTS if self.config.n_parts == 1
+                else (self.config.n_parts,)
+            ),
+        )
+
+    # -- resolution ---------------------------------------------------------
+    def _probe(self, cand, example: jax.Array) -> float:
+        """One timed calibration run of a candidate (Comb protocol in
+        miniature: init, warmup, barrier, timed cycles).  Probes run on a
+        COPY of the example (donation-safe, and legal on non-addressable
+        multihost arrays, unlike ``jnp.array``), through a plan spec
+        stamped ``selected_by="calibration"`` — the same stamp the resolved
+        driver uses, so the winner's plan key matches and its compiled plan
+        is reused."""
+        from repro.core.autotune import PROBE_CYCLES, PROBE_WARMUP
+
+        drv = make_driver(
+            self._candidate_config(cand), self.mesh,
+            lambda: self._spec_builder().with_(selected_by="calibration"),
+            self.ndim, update_fn=self.update_fn,
+        )
+        x = jax.jit(lambda a: a + 0)(example)
+        try:
+            drv.init(x)
+            for _ in range(PROBE_WARMUP):
+                x = drv.step(x)
+            drv.wait(x)
+            t0 = time.perf_counter()
+            for _ in range(PROBE_CYCLES):
+                x = drv.step(x)
+            drv.wait(x)
+            us = (time.perf_counter() - t0) / PROBE_CYCLES * 1e6
+            if jax.process_count() > 1:
+                # every rank must adopt the SAME timing or the SPMD ranks
+                # could resolve different winners and deadlock the mesh
+                from jax.experimental import multihost_utils
+                import numpy as np
+
+                us = float(multihost_utils.broadcast_one_to_all(
+                    np.float32(us)
+                ))
+            return us
+        finally:
+            drv.free()  # the shared probe cache keeps the plan initialized
+
+    def _resolve(self, example) -> None:
+        if self._inner is not None:
+            return
+        import numpy as np
+
+        from repro.core import autotune
+        from repro.core.transport import schedule_locality
+        from repro.launch.mapping import default_node_size, mesh_node_ids
+
+        geo = self._spec_builder()  # geometry only: axes, halo, topology
+        candidates = self._candidates(example.dtype)
+        axis_names = tuple(self.mesh.axis_names)
+        axis_sizes = {name: self.mesh.shape[name] for name in axis_names}
+        n_devices = int(self.mesh.devices.size)
+        node_size = default_node_size(n_devices, jax.process_count())
+        node_of = mesh_node_ids(self.mesh, node_size)
+        # per-shard ghosted block shape (pure geometry, no strategy id)
+        block = list(example.shape)
+        for name, a in zip(geo.mesh_axes, geo.array_axes):
+            block[a] //= self.mesh.shape[name]
+        face_elems = autotune.max_face_elems(
+            tuple(block), geo.array_axes, geo.halo
+        )
+        cell = {
+            "mesh_shape": tuple(axis_sizes[name] for name in axis_names),
+            "shape": tuple(example.shape),
+            "dtype": str(example.dtype),
+            "halo": geo.halo,
+            "mapping": self.config.mapping,
+            "transport": self.config.transport,
+            "node_size": node_size,
+            "message_bytes": face_elems * np.dtype(example.dtype).itemsize,
+        }
+        # static features per candidate; message tables depend only on
+        # (strategy, n_parts) — packer/coalesce reuse them (same rule as
+        # the sweep's groups_cache)
+        groups_cache: dict[tuple[str, int], tuple] = {}
+        features = {}
+        for cand in candidates:
+            gkey = (cand.strategy, cand.n_parts)
+            if gkey not in groups_cache:
+                drv = make_driver(
+                    self._candidate_config(cand), self.mesh,
+                    self._spec_builder, self.ndim, update_fn=self.update_fn,
+                )
+                groups_cache[gkey] = drv._message_groups(
+                    drv._local_block_shape(tuple(example.shape)),
+                    drv.build_spec(),
+                )
+            groups = groups_cache[gkey]
+            loc = schedule_locality(
+                groups, axis_order=axis_names, axis_sizes=axis_sizes,
+                node_of=node_of,
+            )
+            features[cand] = autotune.CellFeatures(
+                wire_bytes=face_elems
+                * get_packer(cand.packer).wire_itemsize(example.dtype),
+                collective_count=scheduled_collective_count(
+                    groups, coalesce=cand.coalesce
+                ),
+                intra_sends=loc.intra_sends,
+                inter_sends=loc.inter_sends,
+            )
+        verdict = autotune.default_tuner().choose_or_calibrate(
+            candidates, features, cell,
+            probe=lambda cand: self._probe(cand, example),
+        )
+        self.selected_by = verdict.selected_by
+        self.predicted_us = verdict.predicted_us
+        self.calibration_us = verdict.calibration_us
+        stamp = verdict.plan_stamp()
+        self._inner = make_driver(
+            self._candidate_config(verdict.candidate), self.mesh,
+            lambda: self._spec_builder().with_(selected_by=stamp),
+            self.ndim, update_fn=self.update_fn,
+        )
+        # the resolved driver's config (incl. overlap's forced
+        # donate=False) becomes this driver's visible identity
+        self.config = self._inner.config
+
+    # -- lifecycle: resolve, then delegate ----------------------------------
+    def init(self, example: jax.Array) -> None:
+        self._resolve(example)
+        self._inner.init(example)
+
+    def step(self, x: jax.Array) -> jax.Array:
+        if self._inner is None:
+            self._resolve(x)
+        return self._inner.step(x)
+
+    def free(self) -> None:
+        if self._inner is not None:
+            self._inner.free()
+        if self._owned_cache is not None:
+            self._owned_cache.free_all()
+
+    def build_spec(self) -> HaloSpec:
+        if self._inner is None:
+            raise RuntimeError(
+                "auto strategy has no spec before resolution; "
+                "call init(example) first"
+            )
+        return self._inner.build_spec()
+
+    def scheduled_collectives(self, example: jax.Array) -> int:
+        self._resolve(example)
+        return self._inner.scheduled_collectives(example)
+
+    def replan_tables(self, example) -> tuple[tuple, tuple]:
+        self._resolve(example)
+        return self._inner.replan_tables(example)
+
+    def wire_layouts(self, example: jax.Array) -> tuple:
+        self._resolve(example)
+        return self._inner.wire_layouts(example)
+
+    def compiled_text(self, example: jax.Array) -> str:
+        self._resolve(example)
+        return self._inner.compiled_text(example)

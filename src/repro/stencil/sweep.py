@@ -83,6 +83,7 @@ RECORD_KEYS = (
     "us_per_cycle", "collective_count",
     "plan_cache_inits", "plan_cache_hits",
     "replan_us", "plan_cache_invalidations",
+    "selected_by", "predicted_us", "calibration_us",
     "init_us", "n_cycles", "repeats", "checksum", "speedup_vs_baseline",
 )
 
@@ -171,6 +172,10 @@ class SweepConfig:
         assert self.baseline in self.strategies, (
             f"baseline {self.baseline!r} must be swept"
         )
+        # the baseline denominator must be a deterministic static cell —
+        # an autotuned baseline would normalize every speedup against a
+        # moving target
+        assert self.baseline != "auto", "baseline cannot be autotuned"
         assert self.packers, "at least one packer must be swept"
         assert self.coalesce_modes, "at least one coalesce mode must be swept"
         assert all(isinstance(c, bool) for c in self.coalesce_modes), (
@@ -283,6 +288,8 @@ def _size_records(
                 knobs = dict(packer=packer, transport=config.transport,
                              coalesce=coalesce, mapping=mapping)
                 for s in config.strategies:
+                    if s == "auto":
+                        continue  # one tuned cell per mapping, added below
                     if get_strategy(s).uses_partitions:
                         strat_configs.extend(
                             StrategyConfig(name=s, n_parts=p, **knobs)
@@ -292,6 +299,14 @@ def _size_records(
                         # the partition-count axis does not apply: once per
                         # (packer, coalesce mode)
                         strat_configs.append(StrategyConfig(name=s, **knobs))
+        if "auto" in config.strategies:
+            # the autotuned cell: ONE per mapping — the tuner owns the
+            # strategy/packer/coalesce/partition axes, so the static
+            # packer x coalesce grid does not multiply it
+            strat_configs.append(StrategyConfig(
+                name="auto", packer="auto", coalesce="auto",
+                transport=config.transport, mapping=mapping,
+            ))
         results = comb_measure(
             domain,
             strategies=tuple(strat_configs),
@@ -472,18 +487,31 @@ def read_bench_json(path: str) -> tuple[list[dict], dict | None]:
 
 
 def summarize(records: Sequence[dict]) -> list[str]:
-    """csv rows (name,us,derived) matching benchmarks/run.py's emit format."""
+    """csv rows (name,us,derived) matching benchmarks/run.py's emit format.
+
+    The name carries the full cell coordinate including the PR 7 mapping
+    axis; the derived column carries the locality tally
+    (``intra=``/``inter=`` node sends) and, for autotuned records, the
+    selection provenance — an ``auto:`` tag also prefixes the resolved
+    strategy so a tuned cell never collides with the identical static one.
+    """
     rows = []
     for r in records:
+        tag = "auto:" if r.get("selected_by") else ""
         name = (f"sweep/d{r['n_devices']}/p{r['n_parts']}"
                 f"/m{r['message_bytes']}/{r.get('packer', 'slice')}"
                 f"/c{int(bool(r.get('coalesce', False)))}"
                 f"/{r.get('mapping', 'row-major')}"
-                f"/{r['strategy']}")
+                f"/{tag}{r['strategy']}")
         pct = (r["speedup_vs_baseline"] - 1.0) * 100.0
-        rows.append(f"{name},{r['us_per_cycle']:.1f},"
-                    f"speedup={pct:.1f}%;init_us={r['init_us']:.0f};"
-                    f"replan_us={r.get('replan_us', 0.0):.0f}")
+        derived = (f"speedup={pct:.1f}%;init_us={r['init_us']:.0f};"
+                   f"replan_us={r.get('replan_us', 0.0):.0f}")
+        if "intra_node_sends" in r or "inter_node_sends" in r:
+            derived += (f";intra={r.get('intra_node_sends', 0)}"
+                        f";inter={r.get('inter_node_sends', 0)}")
+        if r.get("selected_by"):
+            derived += f";selected_by={r['selected_by']}"
+        rows.append(f"{name},{r['us_per_cycle']:.1f},{derived}")
     return rows
 
 
@@ -511,14 +539,27 @@ def regression_failures(
     runs it on the full-matrix smoke job, never the restricted ``--packer``
     cells).  Returns human-readable failure lines (empty = pass).
 
+    Autotuned records (``selected_by`` set) are NOT keyed by their resolved
+    strategy name — that would let a ``strategy=auto`` sweep satisfy the
+    guard by merely resolving to the same names.  They pool under one
+    ``auto`` key whose best speedup must clear the committed autotuned best
+    when the baseline carries one, else the committed *best static* cell —
+    the tuner's whole contract is matching the static oracle, so falling
+    ``threshold`` below it is a selection regression even if every static
+    path is healthy.
+
     A record missing the two keys the guard actually reads (``strategy``,
     ``speedup_vs_baseline``) raises :class:`ValueError` naming the record
     and the likely cause (a baseline predating the schema), instead of the
     historical bare ``KeyError``.
     """
 
-    def best(recs: Sequence[dict], which: str) -> dict[str, float]:
-        out: dict[str, float] = {}
+    def best(recs: Sequence[dict], which: str) -> tuple[
+        dict[str, float], float | None
+    ]:
+        """(per-strategy best of the STATIC records, best autotuned-or-None)."""
+        static: dict[str, float] = {}
+        auto: float | None = None
         for i, r in enumerate(recs):
             for key in ("strategy", "speedup_vs_baseline"):
                 if key not in r:
@@ -529,20 +570,45 @@ def regression_failures(
                         f"regenerate it with `python -m repro.stencil.sweep "
                         f"--smoke --out BENCH_stencil_sweep.json`"
                     )
-            out[r["strategy"]] = max(r["speedup_vs_baseline"],
-                                     out.get(r["strategy"], 0.0))
-        return out
+            if r.get("selected_by"):
+                auto = max(r["speedup_vs_baseline"],
+                           auto if auto is not None else 0.0)
+            else:
+                static[r["strategy"]] = max(r["speedup_vs_baseline"],
+                                            static.get(r["strategy"], 0.0))
+        return static, auto
 
-    old = best(baseline_records, "baseline")
-    new = best(records, "fresh-sweep")
-    if (old or new) and not set(old) & set(new):
+    old, old_auto = best(baseline_records, "baseline")
+    new, new_auto = best(records, "fresh-sweep")
+    fails = []
+    if new_auto is not None:
+        if old_auto is not None:
+            ref, ref_label = old_auto, "committed autotuned best"
+        elif old:
+            ref = max(old.values())
+            ref_label = "committed best static cell"
+        else:
+            raise ValueError(
+                "fresh sweep carries autotuned records but the baseline has "
+                "no records to floor them against — the baseline predates "
+                "the autotune schema; regenerate it with `python -m "
+                "repro.stencil.sweep --smoke --out BENCH_stencil_sweep.json`"
+            )
+        floor = ref * (1.0 - threshold)
+        if new_auto < floor:
+            fails.append(
+                f"auto: best autotuned speedup {new_auto:.3f} fell below "
+                f"{floor:.3f} ({ref_label} {ref:.3f}, threshold "
+                f"{threshold:.0%})"
+            )
+    compared_auto = new_auto is not None
+    if (old or new) and not set(old) & set(new) and not compared_auto:
         raise ValueError(
             f"no strategy appears in BOTH record sets (baseline strategies "
             f"{sorted(old)}, fresh {sorted(new)}): the sweeps are not "
             f"comparable — a stale baseline or mismatched grids would make "
             f"this guard silently vacuous"
         )
-    fails = []
     for strategy in sorted(set(old) & set(new)):
         floor = old[strategy] * (1.0 - threshold)
         if new[strategy] < floor:
@@ -568,6 +634,7 @@ def smoke_config(
     packers: tuple[str, ...] | None = None,
     coalesce_modes: tuple[bool, ...] | None = None,
     mappings: tuple[str, ...] | None = None,
+    strategies: tuple[str, ...] | None = None,
 ) -> SweepConfig:
     """A 1-cell grid over ALL registered strategies x ALL registered
     packers (incl. the wire-compressed ones) x both coalesce modes x two
@@ -587,7 +654,11 @@ def smoke_config(
     return SweepConfig(
         device_counts=(n_devices,), part_counts=(1, 2),
         sizes=((4 * n_devices, 8),),
-        strategies=tuple(available_strategies()), n_cycles=3, repeats=1,
+        strategies=(
+            tuple(available_strategies()) if strategies is None
+            else strategies
+        ),
+        n_cycles=3, repeats=1,
         packers=available_packers() if packers is None else packers,
         coalesce_modes=(
             (False, True) if coalesce_modes is None else coalesce_modes
@@ -666,6 +737,21 @@ def main(argv: Sequence[str] | None = None) -> None:
                          "registered mapping (row-major|blocked|rb), or "
                          "'all' to sweep every registered mapping "
                          "(default: the config's mappings)")
+    ap.add_argument("--strategy", metavar="NAMES",
+                    help="comma list of strategies to sweep; 'all' = every "
+                         "registered strategy (the default), 'auto' = the "
+                         "autotuned cell (repro.core.autotune picks the "
+                         "best strategy x packer x coalesce per cell).  The "
+                         "static baseline is always swept alongside, so "
+                         "speedups keep their denominator")
+    ap.add_argument("--autotune-trace", metavar="BENCH_JSON",
+                    help="BENCH sweep the autotuner's trace-driven cost "
+                         "model fits from (sets REPRO_AUTOTUNE_TRACE for "
+                         "this run and every worker subprocess)")
+    ap.add_argument("--autotune-cache", metavar="PATH",
+                    help="persistent autotune calibration-verdict cache "
+                         "(sets REPRO_AUTOTUNE_CACHE; default "
+                         "~/.cache/repro/autotune.json)")
     ap.add_argument("--check", metavar="BENCH_JSON",
                     help="after the run, diff the records against this "
                          "committed BENCH baseline and exit non-zero if any "
@@ -729,6 +815,31 @@ def main(argv: Sequence[str] | None = None) -> None:
             except KeyError as e:
                 ap.error(str(e.args[0]) if e.args else str(e))
 
+    # the autotuner's inputs travel by env var so worker subprocesses (which
+    # copy os.environ) resolve "auto" cells from the same trace and share
+    # the same persistent calibration cache
+    if args.autotune_trace:
+        os.environ["REPRO_AUTOTUNE_TRACE"] = args.autotune_trace
+    if args.autotune_cache:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = args.autotune_cache
+
+    strategies: tuple[str, ...] | None = None
+    if args.strategy and args.strategy != "all":
+        from repro.stencil.strategies import available_strategies
+
+        names = tuple(s.strip() for s in args.strategy.split(",") if s.strip())
+        for s in names:
+            if s != "auto" and s not in available_strategies():
+                ap.error(
+                    f"--strategy must name registered strategies "
+                    f"{available_strategies()} or 'auto', got {s!r}"
+                )
+        # the static baseline always rides along: every record's speedup is
+        # normalized against it, and the guard's auto-vs-best-static floor
+        # needs at least one static cell
+        baseline = SweepConfig.__dataclass_fields__["baseline"].default
+        strategies = tuple(dict.fromkeys((baseline,) + names))
+
     def maybe_check(records) -> None:
         if not args.check:
             return
@@ -750,6 +861,7 @@ def main(argv: Sequence[str] | None = None) -> None:
                 packers=(args.packer,) if args.packer else None,
                 coalesce_modes=coalesce_modes,
                 mappings=mappings,
+                strategies=strategies,
             )
             config = dataclasses.replace(
                 config, processes=args.processes, transport="multihost",
@@ -775,6 +887,7 @@ def main(argv: Sequence[str] | None = None) -> None:
                 n, packers=(args.packer,) if args.packer else None,
                 coalesce_modes=coalesce_modes,
                 mappings=mappings,
+                strategies=strategies,
             )
             records = sweep_cells(config, n_devices=n)
         write_bench_json(
@@ -799,6 +912,8 @@ def main(argv: Sequence[str] | None = None) -> None:
         config = dataclasses.replace(config, coalesce_modes=coalesce_modes)
     if mappings is not None:
         config = dataclasses.replace(config, mappings=mappings)
+    if strategies is not None:
+        config = dataclasses.replace(config, strategies=strategies)
     if args.processes > 1:
         config = dataclasses.replace(
             config, processes=args.processes, transport="multihost",

@@ -26,7 +26,7 @@ _WIRE_ITEMSIZE = {"slice": 4, "pallas": 4, "bf16": 2, "scaled-int8": 1}
 
 
 def _record(strategy, n_devices, size, n_parts, us, base_us,
-            packer="slice", coalesce=False):
+            packer="slice", coalesce=False, selected_by=None):
     return {
         "bench": "stencil_sweep",
         "schema_version": SCHEMA_VERSION,
@@ -53,6 +53,9 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
         "init_us": 0.0 if strategy == "standard" else 120.0,
         "replan_us": 0.0 if strategy == "standard" else 15.0,
         "plan_cache_invalidations": 0,
+        "selected_by": selected_by,
+        "predicted_us": us if selected_by else None,
+        "calibration_us": 0.0,
         "n_cycles": 3,
         "repeats": 1,
         "checksum": 0.25,
@@ -269,3 +272,84 @@ def test_emitted_rows_are_csv_safe(emitted):
     for name, us, derived in rows:
         assert "," not in name and "," not in derived
         json.dumps(derived)
+
+
+# ---------------------------------------------------------------------------
+# the autotune-vs-static comparison section
+# ---------------------------------------------------------------------------
+
+
+def _with_autos():
+    """The static grid plus one autotuned record per (devices, size) cell,
+    matching the best static cell (the tuner's contract)."""
+    records = _synth_records()
+    best: dict[tuple, dict] = {}
+    for r in records:
+        key = (r["n_devices"], tuple(r["global_interior"]))
+        if (key not in best
+                or r["us_per_cycle"] < best[key]["us_per_cycle"]):
+            best[key] = r
+    for (n_devices, size), b in sorted(best.items()):
+        records.append(
+            _record(b["strategy"], n_devices, list(size), b["n_parts"],
+                    b["us_per_cycle"], b["us_per_cycle"]
+                    * b["speedup_vs_baseline"], b["packer"], b["coalesce"],
+                    selected_by="trace")
+        )
+    return records
+
+
+@pytest.fixture()
+def emitted_auto():
+    rows = []
+    out = fig_sweep(
+        lambda name, us, derived="": rows.append((name, us, derived)),
+        records=_with_autos(),
+    )
+    return rows, out
+
+
+def test_autotune_section_compares_against_static_envelope(emitted_auto):
+    """One autotune entry per tuned cell, carrying the auto speedup next to
+    the best/worst static cells it chose between."""
+    rows, out = emitted_auto
+    autos = [r for r in _with_autos() if r.get("selected_by")]
+    assert len(out["autotune"]) == len(autos) == 4
+    for entry in out["autotune"]:
+        assert entry["selected_by"] == "trace"
+        assert entry["strategy"] in STRATEGIES
+        assert entry["worst_static_pct"] <= entry["best_static_pct"]
+        # the synthetic tuner picked the oracle cell exactly
+        assert entry["auto_pct"] == pytest.approx(entry["best_static_pct"])
+    emitted_rows = [r for r in rows if r[0].startswith("fig_sweep/autotune/")]
+    assert len(emitted_rows) == len(out["autotune"])
+    for name, us, derived in emitted_rows:
+        assert math.isfinite(us) and us > 0
+        assert "auto=" in derived and "best_static=" in derived
+        assert "selected_by=trace" in derived
+        assert "," not in name and "," not in derived
+
+
+def test_autotuned_records_stay_out_of_static_curves(emitted_auto):
+    """Auto records are selection outcomes, not measurements: every curve,
+    claim, and raw overlay must be identical with and without them."""
+    _, out = emitted_auto
+    out_static = fig_sweep(lambda *a: None, records=_synth_records())
+    assert out["curves"] == out_static["curves"]
+    assert out["claims"] == out_static["claims"]
+    assert out["raw"] == out_static["raw"]
+    assert out_static["autotune"] == []
+
+
+def test_autotuned_rows_carry_the_auto_tag(emitted_auto):
+    """Tuned cells render as `auto:<resolved strategy>` rows — same arity,
+    never colliding with the identical static cell's row."""
+    _, out = emitted_auto
+    assert len(out["rows"]) == len(_with_autos())
+    names = [name for name, _, _ in out["rows"]]
+    assert len(names) == len(set(names))
+    tagged = [n for n in names if n.split("/")[-1].startswith("auto:")]
+    assert len(tagged) == 4
+    for name in tagged:
+        _, d, p, m, packer, coal, strategy = name.split("/")
+        assert strategy.removeprefix("auto:") in STRATEGIES

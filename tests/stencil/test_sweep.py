@@ -6,6 +6,7 @@ device-count axis (the paper's process-count sweep).
 """
 
 import json
+import os
 
 import jax
 import numpy as np
@@ -34,12 +35,19 @@ SMALL = SweepConfig(
 def _expected_cells(cfg: SweepConfig) -> int:
     """Partitioning strategies get one record per (partition count, packer,
     coalesce mode, mapping); the partition-count axis does not apply to the
-    others (one record per packer x coalesce mode x mapping each)."""
+    others (one record per packer x coalesce mode x mapping each).  The
+    autotuned cell is ONE per mapping — the tuner owns the strategy /
+    packer / coalesce / partition axes, so the static grid does not
+    multiply it."""
     from repro.stencil.strategies import get_strategy
 
-    return len(cfg.mappings) * len(cfg.packers) * len(cfg.coalesce_modes) * sum(
-        len(cfg.part_counts) if get_strategy(s).uses_partitions else 1
-        for s in cfg.strategies
+    static = [s for s in cfg.strategies if s != "auto"]
+    return len(cfg.mappings) * (
+        len(cfg.packers) * len(cfg.coalesce_modes) * sum(
+            len(cfg.part_counts) if get_strategy(s).uses_partitions else 1
+            for s in static
+        )
+        + ("auto" in cfg.strategies)
     )
 
 
@@ -523,6 +531,140 @@ def test_regression_guard_clear_errors():
         )
     # both sides empty is vacuously fine (a fresh repo with no baseline)
     assert regression_failures([], []) == []
+
+
+# ---------------------------------------------------------------------------
+# the autotuned cell ("auto" strategy) in the sweep grid
+# ---------------------------------------------------------------------------
+
+AUTO_CFG = SweepConfig(
+    device_counts=(4,), part_counts=(1, 2), sizes=((16, 8),),
+    strategies=("standard", "auto"), packers=("slice",),
+    coalesce_modes=(True,), mappings=("row-major",), mesh_ndim=2,
+    n_cycles=2, repeats=1,
+)
+
+_BASELINE_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "..", "BENCH_stencil_sweep.json",
+)
+
+
+@pytest.fixture(scope="module")
+def auto_records(tmp_path_factory):
+    """Sweep the AUTO_CFG grid with the committed baseline as the tuner's
+    trace: the (2,2)-torus (16,8) cell matches the committed smoke cell
+    verbatim, so selection resolves from the trace — fast and
+    deterministic, no calibration probes."""
+    import os
+
+    from repro.core.autotune import CACHE_ENV, TRACE_ENV, reset_default_tuners
+
+    cache = tmp_path_factory.mktemp("autotune") / "autotune.json"
+    saved = {k: os.environ.get(k) for k in (TRACE_ENV, CACHE_ENV)}
+    os.environ[TRACE_ENV] = _BASELINE_PATH
+    os.environ[CACHE_ENV] = str(cache)
+    reset_default_tuners()
+    try:
+        yield sweep_cells(AUTO_CFG, n_devices=4)
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        reset_default_tuners()
+
+
+def test_auto_cell_resolves_from_trace(auto_records):
+    """Acceptance: a sweep with the auto strategy yields one tuned record
+    per mapping whose selection provenance (selected_by/predicted_us) is
+    stamped, with the resolved coordinates all concrete."""
+    from repro.stencil.strategies import available_strategies
+
+    assert len(auto_records) == _expected_cells(AUTO_CFG) == 2
+    autos = [r for r in auto_records if r.get("selected_by")]
+    static = [r for r in auto_records if not r.get("selected_by")]
+    assert len(autos) == 1 and len(static) == 1
+    assert static[0]["strategy"] == "standard"
+    assert static[0]["predicted_us"] is None
+    (auto,) = autos
+    assert auto["selected_by"] == "trace"  # the committed cell matched
+    assert auto["predicted_us"] > 0
+    assert auto["calibration_us"] == 0.0  # no probes ran
+    # every resolved coordinate is concrete, never the sentinel
+    assert auto["strategy"] in available_strategies()
+    assert auto["packer"] in ("slice", "pallas")
+    assert isinstance(auto["coalesce"], bool)
+    assert auto["n_parts"] >= 1
+    assert auto["speedup_vs_baseline"] > 0
+    assert auto["init_us"] > 0  # the tuned driver amortizes its init
+    for key in RECORD_KEYS:
+        assert key in auto
+    json.dumps(auto)
+
+
+def test_summarize_tags_autotuned_rows(auto_records):
+    """Satellite: summarize carries the mapping + locality columns on
+    every row and the auto: tag + selection provenance on tuned rows."""
+    rows = summarize(auto_records)
+    assert len(rows) == len(auto_records)
+    tagged = [r for r in rows if "/auto:" in r]
+    assert len(tagged) == 1
+    for row in rows:
+        name, us, derived = row.split(",")  # derived stays comma-free
+        assert name.split("/")[6] == "row-major"  # the mapping column
+        float(us)
+        assert ";intra=" in derived and ";inter=" in derived
+    assert ";selected_by=trace" in tagged[0]
+    assert all(";selected_by=" not in r for r in rows if "/auto:" not in r)
+
+
+def test_regression_guard_floors_auto_against_best_static():
+    """Satellite: autotuned records pool under one 'auto' key compared
+    against the committed autotuned best when present, else the committed
+    best STATIC cell — never keyed by their resolved strategy name."""
+    from repro.stencil.sweep import regression_failures
+
+    def rec(strategy, sp, **kw):
+        return {"strategy": strategy, "speedup_vs_baseline": sp, **kw}
+
+    static = [rec("standard", 1.0), rec("overlap", 2.0)]
+    auto_ok = rec("overlap", 1.9, selected_by="trace")
+    auto_bad = rec("standard", 1.0, selected_by="cache")
+    # floored against the committed best static (2.0): 1.9 clears the 25%
+    # threshold, 1.0 does not
+    assert regression_failures(static, static + [auto_ok]) == []
+    fails = regression_failures(static, static + [auto_bad])
+    assert len(fails) == 1 and fails[0].startswith("auto:")
+    # an auto record resolving to "overlap" must NOT satisfy the static
+    # overlap guard: only genuine static cells key by strategy name
+    assert regression_failures(static, [rec("standard", 1.0), auto_ok]) == []
+    # a committed autotuned best takes precedence as the floor
+    committed = static + [rec("fused", 1.2, selected_by="cache")]
+    assert regression_failures(
+        committed, static + [rec("fused", 1.1, selected_by="trace")]
+    ) == []
+    # an auto-only fresh sweep against a static baseline is comparable
+    # (the auto floor IS the comparison; no vacuity error)
+    assert regression_failures(static, [auto_ok]) == []
+    # but a baseline with nothing to floor against is actionable
+    with pytest.raises(ValueError, match="predates the autotune schema"):
+        regression_failures([], [auto_ok])
+
+
+def test_smoke_config_strategy_restriction():
+    from repro.stencil.sweep import smoke_config
+
+    cfg = smoke_config(strategies=("standard", "auto"))
+    assert cfg.strategies == ("standard", "auto")
+    assert _expected_cells(cfg) == len(cfg.mappings) * (
+        len(cfg.packers) * len(cfg.coalesce_modes) + 1
+    )
+
+
+def test_config_rejects_auto_baseline():
+    with pytest.raises(AssertionError, match="baseline"):
+        SweepConfig(strategies=("auto",), baseline="auto")
 
 
 @pytest.mark.slow
