@@ -111,6 +111,14 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    if "--serve" in sys.argv:
+        # continuous-batching serve benchmark (repro.serving.bench): the
+        # tokens/sec cells over the Message-routed ring-attention path;
+        # forwards the remaining flags (--out/--check/--requests/...)
+        from repro.serving.bench import main as serve_main
+
+        argv = [a for a in sys.argv[1:] if a != "--serve"]
+        raise SystemExit(serve_main(argv))
     if "--inner" in sys.argv:
         _run_inner()
     else:

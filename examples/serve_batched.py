@@ -29,7 +29,17 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--bench-out", default="",
+                    help="run the transport-layer serve cells "
+                         "(repro.serving.bench) and write BENCH records here")
     args = ap.parse_args()
+
+    if args.bench_out:
+        from repro.serving.bench import main as serve_main
+
+        raise SystemExit(serve_main(
+            ["--out", args.bench_out, "--requests", str(args.requests),
+             "--slots", str(args.slots), "--max-new", str(args.max_new)]))
 
     cfg = get_config(args.arch)
     if not args.full:

@@ -17,9 +17,15 @@ All point-to-point movement goes through the transport layer
 (:mod:`repro.core.transport`): the partition policy (:class:`Partitioner`,
 equal-partition padding per paper §II-B) and the neighbor-permute backend
 live there, so these primitives accept a ``transport`` name and never touch
-``lax.ppermute`` directly.  The remaining many-to-many primitives
-(``all_to_all``/``psum``/``psum_scatter``) keep their native XLA collectives
-— they have no per-hop peer table for a transport backend to reroute.
+``lax.ppermute`` directly.  The many-to-many reductions (``psum``/
+``psum_scatter``) keep their native XLA collectives — they have no per-hop
+peer table for a transport backend to reroute.  ``all_to_all`` exists in both
+forms: :func:`partitioned_all_to_all` keeps the native XLA collective, while
+:func:`message_all_to_all` decomposes the same exchange into a ring-shift
+:class:`Message` table routed through
+:func:`repro.core.transport.exchange_messages` — bitwise-equivalent for exact
+packers, and the form that lets ``bf16``/``scaled-int8`` wire compression
+apply to MoE token buffers.
 
 All functions are written for use **inside ``jax.shard_map``** (they reference
 a named mesh axis).  Every partitioned primitive is numerically equivalent to
@@ -37,8 +43,12 @@ from jax import lax
 
 from repro.core import compat
 from repro.core.transport import (  # re-exported: historical home
+    Message,
+    Packer,
     Partitioner,
     Transport,
+    exchange_messages,
+    resolve_packer,
     resolve_transport,
     ring_perm,
 )
@@ -46,7 +56,8 @@ from repro.core.transport import (  # re-exported: historical home
 __all__ = [
     "Partitioner", "ring_perm", "partitioned_ppermute", "ring_all_gather",
     "ring_all_gather_matmul", "ring_matmul_reduce_scatter",
-    "partitioned_all_to_all", "partitioned_psum_scatter", "partitioned_psum",
+    "partitioned_all_to_all", "all_to_all_messages", "message_all_to_all",
+    "partitioned_psum_scatter", "partitioned_psum",
     "bucket_tree", "bucketed_psum_tree",
 ]
 
@@ -271,6 +282,112 @@ def partitioned_all_to_all(
     # consume may rescale the chunk axis (must do so uniformly); un-pad on merge.
     padded = part.n_parts * part.part_size(orig)
     out_total = sum(p.shape[chunk_axis] for p in out_parts)
+    final_size = int(round(orig * out_total / padded))
+    return part.merge(out_parts, final_size)
+
+
+def all_to_all_messages(
+    shape: tuple[int, ...],
+    axis_name: str,
+    ring_size: int,
+    *,
+    split_axis: int = 0,
+) -> tuple[Message, ...]:
+    """Message table for a tiled all-to-all as ``ring_size`` ring shifts.
+
+    Operates on the PRE-ROLLED buffer (see :func:`message_all_to_all`):
+    message ``s`` ships block ``s`` of ``split_axis`` to the peer ``s`` steps
+    around the ring (``s = 0`` is the hop-free local self-copy, which costs
+    no collective).  ``ring_size`` is explicit so the same table serves both
+    in-``shard_map`` delivery and static wire accounting.
+    """
+    size = shape[split_axis]
+    assert size % ring_size == 0, (size, ring_size)
+    m = size // ring_size
+    msgs = []
+    for s in range(ring_size):
+        start = [0] * len(shape)
+        start[split_axis] = s * m
+        blk = list(shape)
+        blk[split_axis] = m
+        if s == 0:
+            hops: tuple = ()
+        else:
+            perm = tuple((i, (i + s) % ring_size) for i in range(ring_size))
+            hops = ((axis_name, perm),)
+        msgs.append(Message(tuple(start), tuple(start), tuple(blk), hops))
+    return tuple(msgs)
+
+
+def message_all_to_all(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    split_axis: int,
+    concat_axis: int,
+    n_parts: int = 1,
+    chunk_axis: int | None = None,
+    consume_fn: Callable[[jax.Array], jax.Array] | None = None,
+    packer: str | Packer = "slice",
+    transport: str | Transport = "ppermute",
+    coalesce: bool = True,
+) -> jax.Array:
+    """:func:`partitioned_all_to_all` routed through the transport layer.
+
+    The tiled all-to-all decomposes into ``k-1`` ring-shift messages plus a
+    hop-free self-copy: device ``j`` pre-rolls its split blocks by ``-j`` so
+    that the block bound for the peer ``s`` steps away always sits in window
+    ``s``, ships window ``s`` with ring shift ``s``
+    (:func:`all_to_all_messages`), and un-permutes on arrival.  Values are
+    bitwise-equal to ``lax.all_to_all(..., tiled=True)`` for exact-wire
+    packers; the payoff is that the registered ``packer``
+    (``bf16``/``scaled-int8`` wire compression — opt-in, tolerance-aware)
+    and the plan-keyed schedule now apply to MoE token buffers.  Same
+    chunking contract as :func:`partitioned_all_to_all`: ``consume_fn`` runs
+    per ``chunk_axis`` chunk as early work.
+    """
+    assert split_axis == concat_axis, (
+        "message_all_to_all requires split_axis == concat_axis "
+        "(the MoE dispatch form)"
+    )
+    consume = consume_fn or _identity
+    t = resolve_transport(transport)
+    p = resolve_packer(packer)
+    k = compat.axis_size(axis_name)
+
+    def blocks(y: jax.Array) -> jax.Array:
+        y = jnp.moveaxis(y, split_axis, 0)
+        return y.reshape((k, y.shape[0] // k) + y.shape[1:])
+
+    def unblocks(y: jax.Array) -> jax.Array:
+        y = y.reshape((y.shape[0] * y.shape[1],) + y.shape[2:])
+        return jnp.moveaxis(y, 0, split_axis)
+
+    def one_chunk(xc: jax.Array) -> jax.Array:
+        if k == 1:
+            return consume(xc)
+        idx = lax.axis_index(axis_name)
+        w = unblocks(jnp.roll(blocks(xc), -idx, axis=0))
+        msgs = all_to_all_messages(w.shape, axis_name, k,
+                                   split_axis=split_axis)
+        tmp = exchange_messages(
+            w, (msgs,), packer=p, transport=t, coalesce=coalesce
+        )
+        # window s now holds the block from the peer s steps BEHIND us;
+        # flip+roll re-sorts windows into source-rank order (= tiled concat)
+        out = jnp.roll(jnp.flip(blocks(tmp), axis=0), idx + 1, axis=0)
+        return consume(unblocks(out))
+
+    if chunk_axis is None:
+        chunk_axis = (split_axis + 1) % x.ndim
+    if n_parts <= 1:
+        return one_chunk(x)
+    assert chunk_axis != split_axis
+    orig = x.shape[chunk_axis]
+    part = Partitioner(n_parts, chunk_axis)
+    out_parts = [one_chunk(chunk) for chunk in part.split(x)]
+    padded = part.n_parts * part.part_size(orig)
+    out_total = sum(pc.shape[chunk_axis] for pc in out_parts)
     final_size = int(round(orig * out_total / padded))
     return part.merge(out_parts, final_size)
 

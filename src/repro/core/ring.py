@@ -28,13 +28,55 @@ from jax import lax
 
 from repro.core import compat
 from repro.core.transport import (
+    Message,
+    Packer,
     Partitioner,
     Transport,
+    exchange_messages,
+    resolve_packer,
     resolve_transport,
     ring_perm,
 )
 
 _NEG_INF = -1e30
+
+
+def ring_kv_messages(
+    kv_shape: tuple[int, ...],
+    axis_name: str,
+    ring_size: int,
+    *,
+    n_parts: int = 1,
+    shift: int = 1,
+) -> tuple[Message, ...]:
+    """Message table for ONE hop of the ring-attention KV rotation.
+
+    ``kv_shape`` is the stacked wire view ``(2, B, Skv, Hkv, D)`` — K at
+    index 0, V at index 1.  Both messages share the single periodic-ring hop
+    chain, so coalesced delivery packs K and V into ONE contiguous
+    :class:`~repro.core.transport.WireLayout` buffer and routes the hop as
+    ONE collective.  ``n_parts > 1`` partitions along the sequence axis
+    (paper §II-B equal-partition rule, clipped remainder tail) and delivery
+    pipelines the partitions as rounds.
+
+    ``ring_size`` is passed explicitly (not read from a live mesh) so the
+    same table drives both the in-``shard_map`` delivery and the static
+    wire/collective accounting of the serve benchmark
+    (:mod:`repro.serving.bench`).
+    """
+    assert kv_shape[0] == 2, kv_shape
+    perm = tuple((i, (i + shift) % ring_size) for i in range(ring_size))
+    hops = ((axis_name, perm),)
+    part_axis = 2 if n_parts > 1 else None
+    shape = (1,) + tuple(kv_shape[1:])
+    out = []
+    for tensor in range(2):
+        start = (tensor,) + (0,) * (len(kv_shape) - 1)
+        out.append(
+            Message(start, start, shape, hops,
+                    n_parts=n_parts, part_axis=part_axis)
+        )
+    return tuple(out)
 
 
 def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
@@ -92,6 +134,9 @@ def ring_attention(
     scale: float | None = None,
     block_fn: Callable | None = None,
     transport: str | Transport = "ppermute",
+    packer: str | Packer = "slice",
+    coalesce: bool = True,
+    comm: str = "messages",
 ) -> jax.Array:
     """Sequence-parallel attention with the KV shard circulating a ring.
 
@@ -100,59 +145,110 @@ def ring_attention(
     as ``q``.  ``n_parts > 1`` splits each circulating KV block into equal
     partitions (paper's partitioned pipeline; partition transfer overlaps
     block attention).  ``block_fn`` may override the per-block accumulation
-    (e.g. the Pallas flash kernel); ``transport`` selects the registered
-    backend (:mod:`repro.core.transport`) each KV hop goes through.
+    (e.g. the Pallas flash kernel).
+
+    ``comm="messages"`` (the default) routes every hop through the
+    transport layer (:func:`repro.core.transport.exchange_messages`) on a
+    stacked ``(2, B, Skv, Hkv, D)`` KV buffer: one :class:`Message` per
+    tensor sharing a single ring hop chain, so ``coalesce=True`` ships K
+    and V as ONE wire buffer and ONE collective per hop (n_parts pipelined
+    rounds otherwise), and ``packer`` selects the registered wire format —
+    wire-compressed ``bf16``/``scaled-int8`` apply per hop (lossy packers
+    re-quantize at every hop; opt-in only).  ``comm="permute"`` is the
+    historical bare-``Transport.permute`` reference path (bitwise-identical
+    values for exact packers), kept for equivalence tests.
     """
     t = resolve_transport(transport)
+    p = resolve_packer(packer)
     ksize = compat.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     b, sq, h, d = q.shape
     skv = k.shape[1]
     scale = scale if scale is not None else d ** -0.5
     attend = block_fn or _attend_block
+    if comm not in ("messages", "permute"):
+        raise ValueError(f"unknown ring comm mode {comm!r}")
 
     m = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
     l = jnp.zeros((b, h, sq), jnp.float32)
     acc = jnp.zeros((b, sq, h, d), jnp.float32)
     q_off = idx * sq
 
-    perm = ring_perm(axis_name) if ksize > 1 else []
     part = Partitioner(n_parts, 1) if n_parts > 1 else None
-    cur_k, cur_v = k, v
-    for s in range(ksize):
-        owner = (idx - s) % ksize
-        kv_off = owner * skv
-        if s < ksize - 1:
-            # start the next block's transfer (partitioned: n_parts hops)
-            if part is None:
-                nxt_k = t.permute(cur_k, axis_name, perm)
-                nxt_v = t.permute(cur_v, axis_name, perm)
-            else:
-                nxt_k_parts = [t.permute(c, axis_name, perm) for c in part.split(cur_k)]
-                nxt_v_parts = [t.permute(c, axis_name, perm) for c in part.split(cur_v)]
-        # consume the current block while the next one is in flight
-        if part is None:
+    # static clipped partition windows, hoisted out of the hop loop (the
+    # remainder tail attends at its true width; all-padding tails vanish)
+    windows = part.slices(skv) if part is not None else [(0, skv)]
+
+    def consume(m, l, acc, cur_k, cur_v, kv_off):
+        for off, width in windows:
+            if width <= 0:
+                continue
+            kc = lax.slice_in_dim(cur_k, off, off + width, axis=1)
+            vc = lax.slice_in_dim(cur_v, off, off + width, axis=1)
             m, l, acc = attend(
-                q, cur_k, cur_v, m, l, acc, q_off, kv_off, causal=causal, scale=scale
+                q, kc, vc, m, l, acc, q_off, kv_off + off,
+                causal=causal, scale=scale,
             )
+        return m, l, acc
+
+    if comm == "messages" and ksize > 1:
+        # the transport-layer path: each hop is a Message-table delivery on
+        # the stacked KV buffer; attention consumes the current block while
+        # the next hop's wire buffers are in flight (dataflow overlap — the
+        # Pready/Parrived pipeline with the attention block as consumer).
+        kv = jnp.stack([k, v])
+        msgs = ring_kv_messages(kv.shape, axis_name, ksize, n_parts=n_parts)
+        for s in range(ksize):
+            owner = (idx - s) % ksize
+            if s < ksize - 1:
+                nxt = exchange_messages(
+                    kv, (msgs,), packer=p, transport=t, coalesce=coalesce
+                )
+            m, l, acc = consume(m, l, acc, kv[0], kv[1], owner * skv)
+            if s < ksize - 1:
+                kv = nxt
+    else:
+        # reference path: bare per-tensor permutes.  Partition splits are
+        # hoisted — split ONCE up front, permute the chunks each hop, and
+        # consume from the chunk list directly (no per-hop re-split, no
+        # merge/re-clip churn).
+        perm = ring_perm(axis_name) if ksize > 1 else []
+        if part is None:
+            cur_k, cur_v = k, v
+            for s in range(ksize):
+                owner = (idx - s) % ksize
+                if s < ksize - 1:
+                    nxt_k = t.permute(cur_k, axis_name, perm)
+                    nxt_v = t.permute(cur_v, axis_name, perm)
+                m, l, acc = consume(m, l, acc, cur_k, cur_v, owner * skv)
+                if s < ksize - 1:
+                    cur_k, cur_v = nxt_k, nxt_v
         else:
             csize = part.part_size(skv)
-            for ci, (kc, vc) in enumerate(zip(part.split(cur_k), part.split(cur_v))):
-                width = min(csize, skv - ci * csize)
-                if width <= 0:
-                    continue
-                kc = lax.slice_in_dim(kc, 0, width, axis=1)
-                vc = lax.slice_in_dim(vc, 0, width, axis=1)
-                m, l, acc = attend(
-                    q, kc, vc, m, l, acc, q_off, kv_off + ci * csize,
-                    causal=causal, scale=scale,
-                )
-        if s < ksize - 1:
-            if part is None:
-                cur_k, cur_v = nxt_k, nxt_v
-            else:
-                cur_k = part.merge(nxt_k_parts, skv)
-                cur_v = part.merge(nxt_v_parts, skv)
+            k_parts = part.split(k)
+            v_parts = part.split(v)
+            for s in range(ksize):
+                owner = (idx - s) % ksize
+                kv_off = owner * skv
+                if s < ksize - 1:
+                    nxt_k_parts = [
+                        t.permute(c, axis_name, perm) for c in k_parts
+                    ]
+                    nxt_v_parts = [
+                        t.permute(c, axis_name, perm) for c in v_parts
+                    ]
+                for ci, (kc, vc) in enumerate(zip(k_parts, v_parts)):
+                    width = min(csize, skv - ci * csize)
+                    if width <= 0:
+                        continue
+                    kc = lax.slice_in_dim(kc, 0, width, axis=1)
+                    vc = lax.slice_in_dim(vc, 0, width, axis=1)
+                    m, l, acc = attend(
+                        q, kc, vc, m, l, acc, q_off, kv_off + ci * csize,
+                        causal=causal, scale=scale,
+                    )
+                if s < ksize - 1:
+                    k_parts, v_parts = nxt_k_parts, nxt_v_parts
 
     l = jnp.maximum(l, 1e-30)
     out = acc / l.transpose(0, 2, 1)[..., None]

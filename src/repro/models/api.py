@@ -68,12 +68,18 @@ class Model:
     def init_cache(self, batch: int, max_len: int, dtype=None) -> dict:
         return self.module.init_cache(self.cfg, batch, max_len, dtype)
 
-    def prefill(self, params, batch, cache, *, ctx: ParallelContext = LOCAL):
+    def prefill(self, params, batch, cache, *, ctx: ParallelContext = LOCAL,
+                true_len=None):
+        # true_len ((B,) int32, traced): bucket-padded prefill — only the
+        # dense transformer supports it (capacity-routed MoE and the VLM
+        # cross-attention scan are sequence-length-sensitive).
+        kw = {} if true_len is None else {"true_len": true_len}
         if self.cfg.family == "vlm":
+            assert true_len is None, "vlm prefill has no bucketed form"
             return self.module.prefill(self.cfg, params, batch["tokens"],
                                        batch["vision_emb"], cache, ctx=ctx)
         return self.module.prefill(self.cfg, params, batch["tokens"], cache,
-                                   ctx=ctx)
+                                   ctx=ctx, **kw)
 
     def decode_step(self, params, token, cache, *, ctx: ParallelContext = LOCAL):
         return self.module.decode_step(self.cfg, params, token, cache, ctx=ctx)

@@ -246,7 +246,8 @@ def prefill_attention(
     if ctx.seq_parallel and ctx.mesh is not None and ctx.model_axis:
         def ring(qb, kb, vb):
             return ring_attention(
-                qb, kb, vb, ctx.model_axis, causal=causal, n_parts=ctx.n_parts)
+                qb, kb, vb, ctx.model_axis, causal=causal, n_parts=ctx.n_parts,
+                packer=ctx.comm_packer, coalesce=ctx.comm_coalesce)
 
         spec = P(ctx.data_axes, ctx.model_axis, None, None)
         return compat.shard_map(
@@ -274,7 +275,8 @@ def self_attention(
         # with partitioned (n_parts) exchange — the paper's pipeline.
         def ring(qb, kb, vb):
             return ring_attention(
-                qb, kb, vb, ctx.model_axis, causal=causal, n_parts=ctx.n_parts
+                qb, kb, vb, ctx.model_axis, causal=causal, n_parts=ctx.n_parts,
+                packer=ctx.comm_packer, coalesce=ctx.comm_coalesce,
             )
 
         spec = P(ctx.data_axes, ctx.model_axis, None, None)

@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.configs.base import ModelConfig
-from repro.core.partitioned import partitioned_all_to_all
+from repro.core.partitioned import message_all_to_all, partitioned_all_to_all
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.parallel.context import LOCAL, ParallelContext
@@ -211,7 +211,17 @@ def _moe_ep_local(cfg: ModelConfig, ctx: ParallelContext, p_local: Params,
 
     # dispatch: partitioned all-to-all with the expert FFN as per-chunk
     # consumer (MPI_Parrived early work).  Chunking axis = capacity.
-    y_slot = partitioned_all_to_all(
+    # ctx.moe_comm='messages' routes the exchange through the transport
+    # layer's Message tables instead of the native XLA collective, so the
+    # wire packer (ctx.comm_packer) applies to the token buffers.
+    if ctx.moe_comm == "messages":
+        a2a = functools.partial(
+            message_all_to_all,
+            packer=ctx.comm_packer, coalesce=ctx.comm_coalesce,
+        )
+    else:
+        a2a = partitioned_all_to_all
+    y_slot = a2a(
         buf, axis, split_axis=0, concat_axis=0,
         n_parts=max(1, ctx.n_parts), chunk_axis=1, consume_fn=expert_consume,
     )  # (M, capacity, d): my expert's outputs for every source device
@@ -221,7 +231,7 @@ def _moe_ep_local(cfg: ModelConfig, ctx: ParallelContext, p_local: Params,
         ]
         y_slot = jax.lax.psum(y_slot, axis, axis_index_groups=groups)
     # return: all-to-all back (chunked identically)
-    y_back = partitioned_all_to_all(
+    y_back = a2a(
         y_slot, axis, split_axis=0, concat_axis=0,
         n_parts=max(1, ctx.n_parts), chunk_axis=1,
     )  # (M, capacity, d): [s] = my tokens' outputs from slot s

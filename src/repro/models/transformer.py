@@ -175,8 +175,17 @@ def prefill(
     cache: dict,
     *,
     ctx: ParallelContext = LOCAL,
+    true_len: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
-    """Fill the cache from a full prompt; returns (last-position logits, cache)."""
+    """Fill the cache from a full prompt; returns (last-position logits, cache).
+
+    ``true_len`` (shape ``(B,)`` int32, traced) supports bucket-padded
+    prompts: logits come from position ``true_len - 1`` and the cache ``pos``
+    starts there, so right-padding to a shared bucket length reuses ONE
+    persistent plan per bucket.  KV rows past ``true_len`` hold junk from the
+    padding, which is safe: decode writes each new token's KV at ``pos``
+    before the causal mask exposes it.
+    """
     x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
@@ -196,11 +205,17 @@ def prefill(
 
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
     x = L.apply_norm(cfg, params["norm_f"], x)
-    logits = x[:, -1:] @ output_embedding(cfg, params).T.astype(x.dtype)
+    if true_len is None:
+        last = x[:, -1:]
+        pos = jnp.full((b,), s, jnp.int32)
+    else:
+        pos = jnp.asarray(true_len, jnp.int32).reshape(b)
+        idx = jnp.broadcast_to((pos - 1)[:, None, None], (b, 1, x.shape[-1]))
+        last = jnp.take_along_axis(x, idx, axis=1)
+    logits = last @ output_embedding(cfg, params).T.astype(x.dtype)
     smax = cache["k"].shape[2]
     new_k = jax.lax.dynamic_update_slice(
         cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
     new_v = jax.lax.dynamic_update_slice(
         cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
-    return logits, {"k": new_k, "v": new_v,
-                    "pos": jnp.full((b,), s, jnp.int32)}
+    return logits, {"k": new_k, "v": new_v, "pos": pos}

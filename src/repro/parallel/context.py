@@ -34,6 +34,14 @@ class ParallelContext:
     # all-reduce) or 'ring' (sequence-sharded Megatron-SP via the partitioned
     # ring collective-matmuls — half the wire bytes, overlap-friendly)
     tp_mode: str = "gspmd"
+    # transport-layer wire knobs for the Message-routed LM comm paths (ring
+    # attention KV rotation; MoE dispatch when moe_comm='messages').  Lossy
+    # packers (bf16 / scaled-int8) are opt-in here, never auto-selected.
+    comm_packer: str = "slice"
+    comm_coalesce: bool = True
+    # MoE all-to-all backend: 'native' (lax.all_to_all) or 'messages'
+    # (ring-shift Message table through repro.core.transport)
+    moe_comm: str = "native"
     # numerics
     use_flash: bool = False  # Pallas flash kernel for local attention blocks
 

@@ -64,11 +64,38 @@ class ServingEngine:
         self._cache = model.init_cache(max_slots, max_len)
         self._positions = np.zeros(max_slots, np.int64)
         self._uid = 0
+        # per-leaf batch (slot) axis of the cache tree: the axis whose extent
+        # tracks the cache batch size.  Derived abstractly (no allocation) so
+        # _write_slot never has to guess from a size-1 axis — which fails for
+        # max_slots == 1, where every axis matches and prefill wrote nothing.
+        s1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
+        s2 = jax.eval_shape(lambda: model.init_cache(2, max_len))
+        self._slot_axes = jax.tree.map(
+            lambda a, b: next(
+                (ax for ax, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y), None),
+            s1, s2)
+        # the wire knobs are invisible to abstract shapes, so stamp them into
+        # every plan key: packer/coalesce/n_parts/moe_comm changes must MISS
+        self._comm_key = ("comm", ctx.comm_packer, ctx.comm_coalesce,
+                          ctx.n_parts, ctx.moe_comm)
 
+        # the step closures are created ONCE: the plan key includes the
+        # function identity, so a fresh closure per call would defeat the
+        # cache and re-init a plan for every request
         def decode_fn(params, token, cache):
             return model.decode_step(params, token, cache, ctx=ctx)
 
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, batch, cache, ctx=ctx)
+
+        def prefill_bucketed_fn(params, batch, cache, true_len):
+            return model.prefill(params, batch, cache, ctx=ctx,
+                                 true_len=true_len)
+
         self._decode_fn = decode_fn
+        self._prefill_fn = prefill_fn
+        self._prefill_bucketed_fn = prefill_bucketed_fn
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: list[int] | np.ndarray, max_new_tokens: int = 16,
@@ -83,45 +110,75 @@ class ServingEngine:
         """Serve until queue and slots drain; returns uid -> generated tokens."""
         finished: dict[int, list[int]] = {}
         while self._queue or any(s is not None for s in self._slots):
-            self._fill_slots()
+            self._fill_slots(finished)
             self._decode_once(finished)
         return finished
 
     # -- internals ------------------------------------------------------------
-    def _fill_slots(self) -> None:
+    def _fill_slots(self, finished: dict[int, list[int]]) -> None:
         for i, slot in enumerate(self._slots):
-            if slot is None and self._queue:
+            if slot is not None:
+                continue
+            # a request can finish AT prefill (max_new_tokens <= 1, or the
+            # first sampled token is EOS) — it never occupies a decode slot,
+            # and the freed slot immediately takes the next queued request.
+            while self._queue:
                 req = self._queue.popleft()
                 self._prefill_slot(i, req)
+                if (req.max_new_tokens <= 1
+                        or req.tokens_out[-1] == req.eos_id):
+                    req.done = True
+                    finished[req.uid] = req.tokens_out[: req.max_new_tokens]
+                    continue
                 self._slots[i] = req
+                break
+
+    def _prefill_bucket(self, plen: int) -> int | None:
+        """Padded prompt length, or None for exact-length prefill.
+
+        Only the dense transformer prefills bucketed: capacity-based MoE
+        routing and the VLM cross-attention scan are sequence-length-
+        sensitive, so padding would change real-token outputs there.
+        """
+        if self.model.cfg.family != "dense":
+            return None
+        return min(_next_pow2(plen), self.max_len)
 
     def _prefill_slot(self, slot: int, req: Request) -> None:
         """Single-slot prefill into the shared batched cache.
 
         Uses a per-slot cache of batch 1, then writes the KV rows into the
-        batched cache at ``slot``.  Prefill runs at the exact prompt length
-        (one persistent plan per distinct length; a production deployment
-        would right-pad to power-of-two buckets and pass the true last
-        position — same plan-cache machinery, coarser keys).
+        batched cache at ``slot``.  Dense prompts right-pad to power-of-two
+        buckets with the true length passed as a TRACED plan argument, so
+        every prompt length in a bucket shares one persistent plan
+        (plan_inits stays flat across lengths); other families prefill at
+        the exact length (one plan per distinct length).
         """
         prompt = np.asarray(req.prompt, np.int32)[None]
+        plen = prompt.shape[1]
+        bucket = self._prefill_bucket(plen)
         cache1 = self.model.init_cache(1, self.max_len)
-
-        def prefill_fn(params, batch, cache):
-            return self.model.prefill(params, batch, cache, ctx=self.ctx)
 
         batch = {"tokens": jnp.asarray(prompt)}
         if self.model.cfg.family == "vlm":
             batch["vision_emb"] = jnp.zeros(
                 (1, self.model.cfg.vision_tokens, self.model.cfg.d_vision),
                 jnp.bfloat16)
-        plan = self.plans.get_or_init(prefill_fn, (self.params, batch, cache1))
-        logits, cache1 = plan.start(self.params, batch, cache1)
+        if bucket is None:
+            prefill_fn = self._prefill_fn
+            args = (self.params, batch, cache1)
+        else:
+            batch["tokens"] = jnp.asarray(np.pad(
+                prompt, ((0, 0), (0, bucket - plen))))
+            true_len = jnp.full((1,), plen, jnp.int32)
+            prefill_fn = self._prefill_bucketed_fn
+            args = (self.params, batch, cache1, true_len)
+        plan = self.plans.get_or_init(prefill_fn, args,
+                                      extra_key=self._comm_key)
+        logits, cache1 = plan.start(*args)
         self.stats.prefills += 1
-        # write slot rows; note: bucket-padded positions beyond the prompt are
-        # junk but masked by the causal pos bookkeeping (pos = len(prompt)).
-        self._cache = _write_slot(self._cache, cache1, slot)
-        self._positions[slot] = len(req.prompt)
+        self._cache = _write_slot(self._cache, cache1, slot, self._slot_axes)
+        self._positions[slot] = plen
         last = int(np.argmax(np.asarray(logits)[0, -1]))
         req.tokens_out.append(last)
 
@@ -132,11 +189,11 @@ class ServingEngine:
         for i, req in enumerate(self._slots):
             if req is not None:
                 tokens[i, 0] = req.tokens_out[-1]
-        # shared cache decode: pos must be uniform across slots -> use per-slot
-        # positions via the max; real engines track per-slot pos in the cache.
-        # we decode with cache["pos"] already advanced per-slot at write time.
+        # shared cache decode: cache["pos"] is (B,) per-slot, written at
+        # prefill time (continuous batching needs no uniform position).
         plan = self.plans.get_or_init(
-            self._decode_fn, (self.params, jnp.asarray(tokens), self._cache))
+            self._decode_fn, (self.params, jnp.asarray(tokens), self._cache),
+            extra_key=self._comm_key)
         logits, self._cache = plan.start(self.params, jnp.asarray(tokens),
                                          self._cache)
         self.stats.decode_steps += 1
@@ -148,11 +205,13 @@ class ServingEngine:
             req.tokens_out.append(nxt)
             self.stats.tokens_generated += 1
             self._positions[i] += 1
-            if (len(req.tokens_out) > req.max_new_tokens
+            # >=, counting the prefill token: max_new_tokens=N runs exactly
+            # N-1 decode steps for N sampled tokens — nothing truncated away
+            if (len(req.tokens_out) >= req.max_new_tokens
                     or nxt == req.eos_id
                     or self._positions[i] >= self.max_len - 1):
                 req.done = True
-                finished[req.uid] = req.tokens_out[: req.max_new_tokens]
+                finished[req.uid] = req.tokens_out
                 self._slots[i] = None
         self.stats.plan_inits = self.plans.stats.inits
         self.stats.plan_hits = self.plans.stats.cache_hits
@@ -165,17 +224,19 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-def _write_slot(batched_cache: dict, cache1: dict, slot: int) -> dict:
-    """Copy a batch-1 cache into row ``slot`` of the batched cache."""
-    def write(dst, src):
-        if dst.ndim == 0:
-            return jnp.maximum(dst, src)  # pos: keep max over slots
-        # find the batch dim (size-1 in src where dst differs)
-        for axis in range(dst.ndim):
-            if src.shape[axis] == 1 and dst.shape[axis] != 1:
-                idx = [0] * dst.ndim
-                idx[axis] = slot
-                return jax.lax.dynamic_update_slice(
-                    dst, src.astype(dst.dtype), tuple(idx))
-        return dst
-    return jax.tree.map(write, batched_cache, cache1)
+def _write_slot(batched_cache: dict, cache1: dict, slot: int,
+                slot_axes: dict) -> dict:
+    """Copy a batch-1 cache into row ``slot`` of the batched cache.
+
+    ``slot_axes`` carries each leaf's batch axis (from comparing abstract
+    batch-1 and batch-2 cache shapes at engine construction); leaves with no
+    batch axis are slot-independent and pass through unchanged.
+    """
+    def write(dst, src, axis):
+        if axis is None:
+            return dst
+        idx = [0] * dst.ndim
+        idx[axis] = slot
+        return jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), tuple(idx))
+    return jax.tree.map(write, batched_cache, cache1, slot_axes)

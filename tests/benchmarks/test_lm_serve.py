@@ -1,0 +1,141 @@
+"""The lm_serve bench section: record schema, static wire accounting, and
+the --check guard semantics.
+
+No serving runs here — records are synthesized (or derived from the static
+``ring_comm_stats`` accounting, which needs no mesh) and pushed through the
+same ``check_records`` path CI uses, so a schema drift or a guard that stops
+failing on tampered baselines is caught in the fast lane.
+"""
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.transport import get_packer
+from repro.serving.bench import (
+    BENCH_NAME,
+    CELLS,
+    RECORD_KEYS,
+    SCHEMA_VERSION,
+    STATIC_KEYS,
+    check_records,
+    ring_comm_stats,
+)
+
+
+def _record(packer="slice", coalesce=True, selected_by="", **over):
+    stats = ring_comm_stats(
+        seq_bucket=16, ring=8, n_layers=2, n_kv_heads=2, head_dim=32,
+        dtype_bytes=4, packer=packer, coalesce=coalesce, n_parts=1)
+    rec = {
+        "bench": BENCH_NAME,
+        "schema_version": SCHEMA_VERSION,
+        "strategy": "ring-messages",
+        "arch": "stablelm-1.6b-reduced",
+        "n_devices": 8,
+        "n_parts": 1,
+        "packer": packer,
+        "transport": "ppermute",
+        "coalesce": coalesce,
+        "mapping": "row-major",
+        "seq_bucket": 16,
+        "tokens_generated": 48,
+        "decode_steps": 25,
+        "prefills": 6,
+        "plan_cache_inits": 2,
+        "plan_cache_hits": 25,
+        "selected_by": selected_by,
+        "tokens_per_sec": 12.5,
+        "us_per_cycle": 8000.0,
+        **stats,
+    }
+    rec.update(over)
+    return rec
+
+
+def _baseline(tmp_path, records):
+    path = tmp_path / "BENCH_lm_serve.json"
+    path.write_text(json.dumps({"config": {}, "records": records}))
+    return str(path)
+
+
+def test_record_keys_cover_the_schema():
+    rec = _record()
+    assert set(rec) == set(RECORD_KEYS)
+    # the wall-clock fields are exactly the non-static remainder
+    assert set(RECORD_KEYS) - set(STATIC_KEYS) == {
+        "tokens_per_sec", "us_per_cycle"}
+
+
+def test_swept_cells_never_auto_lossy():
+    # the lossy packer is swept explicitly but can't win the auto cell
+    assert ("bf16", True) in CELLS
+    for packer, _ in CELLS:
+        tol = get_packer(packer).wire_tolerance(jnp.float32)
+        assert packer == "bf16" or tol == (0.0, 0.0)
+
+
+def test_ring_comm_stats_matches_message_algebra():
+    # 2 (K,V) x seq 16/8 x 2 kv-heads x 32 head_dim x f32 = 2048 B per hop
+    # per layer; 7 hops x 2 layers; coalesced = one collective per hop
+    stats = ring_comm_stats(
+        seq_bucket=16, ring=8, n_layers=2, n_kv_heads=2, head_dim=32,
+        dtype_bytes=4, packer="slice", coalesce=True, n_parts=1)
+    assert stats["message_bytes"] == 2 * 2 * 2 * 32 * 4 * 7 * 2
+    assert stats["wire_bytes"] == stats["message_bytes"]
+    assert stats["collective_count"] == 7 * 2
+    un = ring_comm_stats(
+        seq_bucket=16, ring=8, n_layers=2, n_kv_heads=2, head_dim=32,
+        dtype_bytes=4, packer="slice", coalesce=False, n_parts=1)
+    assert un["collective_count"] == 2 * 7 * 2  # K and V permute separately
+    bf = ring_comm_stats(
+        seq_bucket=16, ring=8, n_layers=2, n_kv_heads=2, head_dim=32,
+        dtype_bytes=4, packer="bf16", coalesce=True, n_parts=1)
+    assert bf["wire_bytes"] == stats["wire_bytes"] // 2
+    assert bf["message_bytes"] == stats["message_bytes"]
+
+
+def test_check_passes_on_matching_records(tmp_path):
+    records = [_record("slice", False), _record("slice", True),
+               _record("bf16", True), _record("slice", True,
+                                              selected_by="trace")]
+    path = _baseline(tmp_path, records)
+    # a fresh run only has to match the static fields; wall clock may drift
+    fresh = [dict(r, tokens_per_sec=99.0, us_per_cycle=1.0) for r in records]
+    assert check_records(fresh, path) == []
+
+
+def test_check_fails_on_tampered_static_field(tmp_path):
+    path = _baseline(tmp_path, [_record("slice", True)])
+    drifted = _record("slice", True, plan_cache_inits=5)
+    failures = check_records([drifted], path)
+    assert len(failures) == 1 and "plan_cache_inits" in failures[0]
+
+    wire = _record("slice", True)
+    wire["wire_bytes"] += 1
+    assert any("wire_bytes" in f for f in check_records([wire], path))
+
+
+def test_check_fails_on_unknown_cell_and_bad_wallclock(tmp_path):
+    path = _baseline(tmp_path, [_record("slice", True)])
+    missing = _record("bf16", True)
+    assert any("not in baseline" in f for f in check_records([missing], path))
+    stalled = _record("slice", True, tokens_per_sec=0.0)
+    assert any("tokens_per_sec" in f for f in check_records([stalled], path))
+
+
+def test_committed_baseline_is_well_formed():
+    # the repo-root baseline CI guards against: right bench, full schema,
+    # the swept cells plus the trace-replay cell, flat plan inits
+    from repro.stencil.sweep import read_bench_json
+
+    records, config = read_bench_json("BENCH_lm_serve.json")
+    assert config.get("bench") == BENCH_NAME
+    cells = {(r["packer"], r["coalesce"], r["selected_by"]) for r in records}
+    assert {(p, c, "") for p, c in CELLS} <= cells
+    assert any(sel == "trace" for _, _, sel in cells)
+    for r in records:
+        assert set(RECORD_KEYS) <= set(r)
+        assert r["plan_cache_inits"] == 2  # one bucketed prefill + one decode
+        assert r["tokens_per_sec"] > 0

@@ -1,0 +1,184 @@
+"""MoE all-to-all over the transport layer.
+
+Contracts: :func:`message_all_to_all` (ring-shift ``Message`` table through
+``exchange_messages``) is bitwise-equal to ``lax.all_to_all``-backed
+:func:`partitioned_all_to_all` for exact-wire packers — across chunk counts
+and with a per-chunk ``consume_fn`` — lossy packers hold their wire
+tolerance, and the end-to-end MoE expert-parallel layer produces identical
+outputs when switched to ``ctx.moe_comm='messages'``.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compat
+from repro.core.partitioned import (
+    all_to_all_messages,
+    message_all_to_all,
+    partitioned_all_to_all,
+)
+from repro.core.transport import get_packer, scheduled_collective_count
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 virtual devices (conftest)"
+)
+
+
+def _run_sharded(fn, x, k, axis="model"):
+    mesh = compat.make_mesh((k,), (axis,), devices=jax.devices()[:k])
+    spec = P(axis, *([None] * (x.ndim - 1)))
+    return np.asarray(
+        compat.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    )
+
+
+# ---------------------------------------------------------------------------
+# message-table structure
+# ---------------------------------------------------------------------------
+
+
+def test_all_to_all_messages_ring_shift_table():
+    msgs = all_to_all_messages((8, 3, 5), "model", 4, split_axis=0)
+    assert len(msgs) == 4
+    self_copy = msgs[0]
+    assert self_copy.hops == ()  # local block: no collective
+    for s, m in enumerate(msgs):
+        assert m.src_start == m.dst_start == (s * 2, 0, 0)
+        assert m.shape == (2, 3, 5)
+        if s:
+            name, perm = m.hops[0]
+            assert name == "model"
+            assert sorted(perm) == [(i, (i + s) % 4) for i in range(4)]
+    # k-1 collectives either way: each shift is its own chain, s=0 is free
+    assert scheduled_collective_count([msgs], coalesce=True) == 3
+    assert scheduled_collective_count([msgs], coalesce=False) == 3
+
+
+def test_all_to_all_messages_rejects_indivisible_axis():
+    with pytest.raises(AssertionError):
+        all_to_all_messages((6, 2), "model", 4)
+
+
+# ---------------------------------------------------------------------------
+# equivalence vs the native lax.all_to_all path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packer", ["slice", "pallas"])
+@pytest.mark.parametrize("coalesce", [True, False])
+@pytest.mark.parametrize("k", [4, 8])
+def test_message_a2a_bitwise_matches_native(packer, coalesce, k):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(k * k, 6, 5)), jnp.float32)
+
+    native = _run_sharded(
+        functools.partial(partitioned_all_to_all, axis_name="model",
+                          split_axis=0, concat_axis=0),
+        x, k,
+    )
+    msg = _run_sharded(
+        functools.partial(message_all_to_all, axis_name="model",
+                          split_axis=0, concat_axis=0,
+                          packer=packer, coalesce=coalesce),
+        x, k,
+    )
+    np.testing.assert_array_equal(msg, native)
+
+
+@pytest.mark.parametrize("n_parts", [2, 3])
+def test_message_a2a_chunked_with_consume_fn(n_parts):
+    """Chunked early work: capacity 5 over 3 parts exercises the clipped
+    remainder; the consume_fn runs per chunk on both paths identically."""
+    k = 4
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(k * k, 5, 6)), jnp.float32)
+
+    def consume(chunk):
+        return jnp.tanh(chunk) * 2.0
+
+    kw = dict(axis_name="model", split_axis=0, concat_axis=0,
+              n_parts=n_parts, chunk_axis=1, consume_fn=consume)
+    native = _run_sharded(
+        functools.partial(partitioned_all_to_all, **kw), x, k)
+    msg = _run_sharded(
+        functools.partial(message_all_to_all, **kw), x, k)
+    np.testing.assert_array_equal(msg, native)
+
+
+def test_message_a2a_round_trips_token_blocks():
+    """Direct value check: device j's block t lands on device t as block j
+    (tiled all_to_all semantics), independent of the native path."""
+    k = 4
+    blk = 2
+    x = jnp.arange(k * k * blk * 3, dtype=jnp.float32).reshape(k * k * blk, 3)
+    got = _run_sharded(
+        functools.partial(message_all_to_all, axis_name="model",
+                          split_axis=0, concat_axis=0),
+        x, k,
+    )
+    # reference computed directly from the permutation contract
+    xg = np.asarray(x).reshape(k, k, blk, 3)  # [device, block, rows, d]
+    ref = np.empty_like(xg)
+    for j in range(k):
+        for t in range(k):
+            ref[j, t] = xg[t, j]
+    np.testing.assert_array_equal(got.reshape(k, k, blk, 3), ref)
+
+
+def test_bf16_wire_packer_holds_tolerance_on_tokens():
+    k = 4
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(k * k, 4, 4)), jnp.float32)
+    native = _run_sharded(
+        functools.partial(partitioned_all_to_all, axis_name="model",
+                          split_axis=0, concat_axis=0),
+        x, k,
+    )
+    got = _run_sharded(
+        functools.partial(message_all_to_all, axis_name="model",
+                          split_axis=0, concat_axis=0, packer="bf16"),
+        x, k,
+    )
+    rtol, atol = get_packer("bf16").wire_tolerance(jnp.float32)
+    np.testing.assert_allclose(got, native, rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the MoE EP layer switched to the message backend
+# ---------------------------------------------------------------------------
+
+
+def test_moe_ep_layer_identical_under_message_comm():
+    """4 experts on the 4-way model axis (the check_models_dist grid): the
+    message-table dispatch must reproduce the native EP layer exactly."""
+    from repro.configs import get_config
+    from repro.models.moe import apply_moe_ffn, moe_ffn_params
+    from repro.parallel.context import ParallelContext
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            devices=jax.devices()[:8])
+    p_ffn = moe_ffn_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4, 32, cfg.d_model)), jnp.float32)
+
+    def run(moe_comm, n_parts):
+        ctx = ParallelContext(mesh=mesh, moe_mode="ep", n_parts=n_parts,
+                              moe_comm=moe_comm)
+        with compat.set_mesh(mesh):
+            y, aux = jax.jit(
+                lambda p, xb: apply_moe_ffn(cfg, p, xb, ctx)
+            )(p_ffn, x)
+        return np.asarray(y), np.asarray(aux)
+
+    for n_parts in (1, 2):
+        y_native, aux_native = run("native", n_parts)
+        y_msg, aux_msg = run("messages", n_parts)
+        np.testing.assert_array_equal(y_msg, y_native)
+        np.testing.assert_array_equal(aux_msg, aux_native)

@@ -1,0 +1,175 @@
+"""Ring-attention KV rotation over the transport layer.
+
+Contracts: the ``Message``-table path (``comm="messages"``) is bitwise-equal
+to the historical bare-permute path for exact-wire packers — including
+remainder partitions (``skv % n_parts != 0``) and both coalesce modes — the
+partitioned legacy path matches the unpartitioned oracle, lossy packers hold
+their documented wire tolerance per hop, and the coalesced rotation compiles
+to exactly ONE collective-permute per hop (K and V share the wire buffer).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compat
+from repro.core.hlo_analysis import parse_collectives
+from repro.core.ring import ring_attention, ring_kv_messages
+from repro.core.transport import get_packer, scheduled_collective_count
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 virtual devices (conftest)"
+)
+
+B, H, HKV, D = 2, 4, 2, 8
+
+
+def _qkv(ring, sq=4, skv=4, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, ring * sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, ring * skv, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, ring * skv, HKV, D)), jnp.float32)
+    return q, k, v
+
+
+def _run(ring, q, k, v, **kw):
+    mesh = compat.make_mesh((ring,), ("model",),
+                            devices=jax.devices()[:ring])
+    fn = functools.partial(ring_attention, axis_name="model", **kw)
+    spec = P(None, "model", None, None)
+    sharded = compat.shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec),
+                               out_specs=spec)
+    return sharded(q, k, v)
+
+
+def _compiled_text(ring, q, k, v, **kw):
+    mesh = compat.make_mesh((ring,), ("model",),
+                            devices=jax.devices()[:ring])
+    fn = functools.partial(ring_attention, axis_name="model", **kw)
+    spec = P(None, "model", None, None)
+    sharded = compat.shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec),
+                               out_specs=spec)
+    return jax.jit(sharded).lower(q, k, v).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# message-table structure
+# ---------------------------------------------------------------------------
+
+
+def test_ring_kv_messages_share_one_hop_chain():
+    msgs = ring_kv_messages((2, B, 6, HKV, D), "model", 4, n_parts=3)
+    assert len(msgs) == 2
+    k_msg, v_msg = msgs
+    assert k_msg.src_start == k_msg.dst_start == (0, 0, 0, 0, 0)
+    assert v_msg.src_start == v_msg.dst_start == (1, 0, 0, 0, 0)
+    assert k_msg.shape == v_msg.shape == (1, B, 6, HKV, D)
+    assert k_msg.hops == v_msg.hops
+    name, perm = k_msg.hops[0]
+    assert name == "model"
+    assert sorted(perm) == [(i, (i + 1) % 4) for i in range(4)]
+    assert k_msg.n_parts == 3 and k_msg.part_axis == 2
+    # shared chain -> ONE collective per partition round when coalesced
+    assert scheduled_collective_count([msgs], coalesce=True) == 3
+    assert scheduled_collective_count([msgs], coalesce=False) == 6
+    unpart = ring_kv_messages((2, B, 6, HKV, D), "model", 4)
+    assert unpart[0].n_parts == 1 and unpart[0].part_axis is None
+    assert scheduled_collective_count([unpart], coalesce=True) == 1
+
+
+# ---------------------------------------------------------------------------
+# equivalence: message path vs the historical bare-permute path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packer", ["slice", "pallas"])
+@pytest.mark.parametrize("coalesce", [True, False])
+@pytest.mark.parametrize("n_parts", [1, 3])
+def test_message_path_bitwise_matches_permute_path(packer, coalesce, n_parts):
+    """skv=4 with n_parts=3 exercises the clipped remainder tail (4 % 3)."""
+    ring = 8
+    q, k, v = _qkv(ring)
+    want = _run(ring, q, k, v, comm="permute", n_parts=n_parts)
+    got = _run(ring, q, k, v, comm="messages", n_parts=n_parts,
+               packer=packer, coalesce=coalesce)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_message_path_matches_single_device_oracle(causal):
+    """End-to-end value check (not just path-vs-path): the rotated ring on 4
+    devices reproduces plain softmax attention computed on one device."""
+    ring = 4
+    q, k, v = _qkv(ring, seed=3)
+    got = _run(ring, q, k, v, comm="messages", causal=causal)
+
+    kf = jnp.repeat(k, H // HKV, axis=2)
+    vf = jnp.repeat(v, H // HKV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * (D ** -0.5)
+    if causal:
+        n = q.shape[1]
+        mask = jnp.arange(n)[:, None] >= jnp.arange(n)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, axis=-1), vf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_partitioned_permute_path_matches_unpartitioned_remainder():
+    """Satellite 3: the legacy partitioned path (splits hoisted) holds to the
+    unpartitioned oracle when skv % n_parts != 0 (widths 2,2,1 for skv=5)."""
+    ring = 4
+    q, k, v = _qkv(ring, sq=4, skv=5, seed=7)
+    want = _run(ring, q, k, v, comm="permute", n_parts=1)
+    got = _run(ring, q, k, v, comm="permute", n_parts=3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # and the message path agrees with its own legacy form bitwise
+    msg = _run(ring, q, k, v, comm="messages", n_parts=3)
+    np.testing.assert_array_equal(np.asarray(msg), np.asarray(got))
+
+
+def test_bf16_wire_packer_stays_within_tolerance():
+    """Lossy wire: bf16 re-quantizes the circulating KV each hop; a short
+    ring keeps the accumulated error within a few wire ulps."""
+    ring = 2
+    q, k, v = _qkv(ring, seed=11)
+    want = _run(ring, q, k, v, comm="permute")
+    got = _run(ring, q, k, v, comm="messages", packer="bf16")
+    rtol, atol = get_packer("bf16").wire_tolerance(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=4 * rtol, atol=4 * rtol)
+
+
+def test_ring_size_one_degenerates_to_local_attention():
+    q, k, v = _qkv(1, seed=5)
+    got = _run(1, q, k, v, comm="messages")
+    want = _run(1, q, k, v, comm="permute")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# the headline HLO contract: one collective per hop when coalesced
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_rotation_is_one_collective_per_hop():
+    """K+V coalesce into one wire buffer: ring-1 collective-permutes total;
+    uncoalesced ships K and V separately (2x); partitioned coalesced keeps
+    one collective per pipelined partition round (n_parts x)."""
+    ring = 4
+    q, k, v = _qkv(ring)
+    cases = [
+        (dict(comm="messages", coalesce=True), ring - 1),
+        (dict(comm="messages", coalesce=False), 2 * (ring - 1)),
+        (dict(comm="messages", coalesce=True, n_parts=2), 2 * (ring - 1)),
+        (dict(comm="permute"), 2 * (ring - 1)),
+    ]
+    for kw, want in cases:
+        text = _compiled_text(ring, q, k, v, **kw)
+        got = parse_collectives(text).by_op_counts.get("collective-permute", 0)
+        assert got == want, (kw, got, want)

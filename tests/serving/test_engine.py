@@ -61,6 +61,89 @@ def test_continuous_batching_more_requests_than_slots(setup):
         assert results[uid] == want, uid
 
 
+def test_exact_generation_length_and_step_count(setup):
+    """max_new_tokens=N yields exactly N sampled tokens from 1 prefill +
+    N-1 decode steps — no extra step whose token is silently truncated."""
+    cfg, model, params = setup
+    n_new = 5
+    engine = ServingEngine(model, params, max_slots=1, max_len=64)
+    uid = engine.submit([3, 1, 4, 1, 5], max_new_tokens=n_new)
+    results = engine.run()
+    assert len(results[uid]) == n_new
+    assert engine.stats.prefills == 1
+    assert engine.stats.decode_steps == n_new - 1
+    assert engine.stats.tokens_generated == n_new - 1  # decode-sampled
+    assert results[uid] == _reference_generate(model, params,
+                                               [3, 1, 4, 1, 5], n_new)
+
+
+def test_max_new_tokens_one_finishes_at_prefill(setup):
+    """The prefill-sampled token IS the request for max_new_tokens=1: it
+    must finish without ever occupying a decode slot."""
+    cfg, model, params = setup
+    engine = ServingEngine(model, params, max_slots=2, max_len=64)
+    uids = [engine.submit([7, 8, 9], max_new_tokens=1) for _ in range(3)]
+    results = engine.run()
+    assert engine.stats.decode_steps == 0
+    for uid in uids:
+        assert len(results[uid]) == 1
+    assert results[uids[0]] == _reference_generate(model, params,
+                                                   [7, 8, 9], 1)
+
+
+def test_single_slot_engine_really_writes_the_cache(setup):
+    """max_slots=1: batch-1 and batched cache shapes coincide, which used to
+    defeat _write_slot's size-1 axis search — prefill wrote NOTHING and
+    decode ran against a zero cache."""
+    cfg, model, params = setup
+    prompt = [5, 9, 2, 6]
+    engine = ServingEngine(model, params, max_slots=1, max_len=64)
+    uid = engine.submit(prompt, max_new_tokens=6)
+    results = engine.run()
+    assert results[uid] == _reference_generate(model, params, prompt, 6)
+
+
+def test_short_after_long_slot_reuse_matches_isolated(setup):
+    """Continuous-batching regression: a short prompt recycled into the slot
+    a longer request just vacated must decode at ITS OWN positions — the
+    same tokens as serving the short request alone."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    long_prompt = rng.integers(0, cfg.vocab_size, size=24).tolist()
+    short_prompt = rng.integers(0, cfg.vocab_size, size=3).tolist()
+
+    engine = ServingEngine(model, params, max_slots=1, max_len=64)
+    uid_long = engine.submit(long_prompt, max_new_tokens=4)
+    uid_short = engine.submit(short_prompt, max_new_tokens=6)
+    results = engine.run()
+
+    alone = ServingEngine(model, params, max_slots=1, max_len=64)
+    uid_alone = alone.submit(short_prompt, max_new_tokens=6)
+    want = alone.run()[uid_alone]
+    assert results[uid_short] == want
+    assert want == _reference_generate(model, params, short_prompt, 6)
+    assert results[uid_long] == _reference_generate(model, params,
+                                                    long_prompt, 4)
+
+
+def test_bucketed_prefill_plan_inits_flat_across_lengths(setup):
+    """Dense prompts pad to power-of-two buckets with the true length as a
+    traced argument: every length in a bucket shares ONE prefill plan."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(11)
+    # lengths 3..8 all land in the 8-bucket
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (3, 5, 6, 8)]
+    engine = ServingEngine(model, params, max_slots=1, max_len=64)
+    uids = [engine.submit(p, max_new_tokens=3) for p in prompts]
+    results = engine.run()
+    # one bucketed prefill plan + one decode plan, regardless of lengths
+    assert engine.stats.prefills == len(prompts)
+    assert engine.stats.plan_inits == 2, engine.plans.stats
+    for uid, p in zip(uids, prompts):
+        assert results[uid] == _reference_generate(model, params, p, 3)
+
+
 def test_persistent_plans_amortized(setup):
     """Decode steps after the first must hit the plan cache, not re-init."""
     cfg, model, params = setup
