@@ -151,6 +151,36 @@ def enable_cpu_collectives() -> None:
         pass  # newer jax: option gone, collectives already wired
 
 
+def distributed_initialize(
+    *,
+    coordinator_address: str,
+    num_processes: int,
+    process_id: int,
+    timeout: float | None = None,
+) -> None:
+    """``jax.distributed.initialize`` with a bounded coordinator connect.
+
+    Without a bound, a worker whose coordinator died before binding blocks
+    in the barrier forever (the zombie-grid failure mode
+    :func:`repro.launch.stencil.launch_grid` must reap).
+    ``initialization_timeout`` is feature-detected: jax versions that
+    predate the kwarg fall back to the unbounded call (the launcher-side
+    reap still bounds the grid).
+    """
+    import inspect
+
+    kwargs: dict[str, Any] = dict(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    if timeout is not None:
+        params = inspect.signature(jax.distributed.initialize).parameters
+        if "initialization_timeout" in params:
+            kwargs["initialization_timeout"] = max(1, int(timeout))
+    jax.distributed.initialize(**kwargs)
+
+
 def cost_analysis_dict(compiled: Any) -> dict:
     """Normalize ``Compiled.cost_analysis()`` to a flat dict.
 

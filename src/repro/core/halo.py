@@ -87,6 +87,13 @@ class HaloSpec:
     #: for caller-pinned cells.  Part of the plan identity: an autotuned
     #: plan never silently aliases a hand-pinned one.
     selected_by: str | None = None
+    #: membership epoch of the mesh this exchange targets
+    #: (:mod:`repro.launch.membership`).  Bumped on every JOIN / in-grid
+    #: LOSS re-formation; part of the plan identity so a plan compiled
+    #: against a dead topology can never be a cache hit on the re-formed
+    #: mesh.  ``None`` = outside the membership domain (never
+    #: epoch-invalidated); 0 = stamped formation epoch.
+    epoch: int | None = None
 
     def __post_init__(self):
         assert len(self.mesh_axes) == len(self.array_axes)
@@ -111,7 +118,7 @@ class HaloSpec:
             kind=kind, mesh_axes=self.mesh_axes,
             packer=self.packer, transport=self.transport,
             coalesce=self.coalesce, mapping=self.mapping,
-            selected_by=self.selected_by,
+            selected_by=self.selected_by, epoch=self.epoch,
         )
 
 

@@ -227,8 +227,49 @@ class PlanCache:
                 self.stats.frees += 1
             self._plans.clear()
 
+    def invalidate_stale_epochs(self, live_epoch: int) -> int:
+        """Drop only the plans compiled against a dead membership epoch.
+
+        The in-grid recovery path (:mod:`repro.launch.membership`): when the
+        coordinator bumps the grid to ``live_epoch`` after a JOIN or rank
+        loss, plans stamped with an older epoch can never deliver into the
+        re-formed mesh — but everything else a surviving rank has warmed up
+        (other shapes, other workloads, epoch-free plans) stays resident.
+        That retention is the whole point of recovering without a relaunch.
+        """
+        return self.invalidate(lambda key: stale_epoch(key, live_epoch))
+
+    def keys(self) -> tuple:
+        """Snapshot of the resident plan keys (retention assertions: the
+        in-grid chaos tests prove unrelated entries survive a recovery)."""
+        with self._lock:
+            return tuple(self._plans)
+
     def __len__(self) -> int:
         return len(self._plans)
+
+
+def stale_epoch(key: Hashable, live_epoch: int) -> bool:
+    """True when any element of a (possibly nested) plan key carries a
+    membership ``epoch`` older than ``live_epoch``.
+
+    Plan keys are structural tuples; the epoch rides inside whatever spec
+    object the strategy embeds (e.g. :class:`~repro.core.halo.HaloSpec`),
+    so this walks the key duck-typed rather than binding to one spec type.
+    Keys with no epoch-stamped element (``epoch`` absent or ``None``) are
+    never stale — epoch-free callers (the whole non-elastic world) are
+    untouched by epoch invalidation.
+    """
+    def walk(obj) -> bool:
+        epoch = getattr(obj, "epoch", None)
+        if isinstance(epoch, int) and not isinstance(epoch, bool) \
+                and epoch < live_epoch:
+            return True
+        if isinstance(obj, tuple):
+            return any(walk(el) for el in obj)
+        return False
+
+    return walk(key)
 
 
 #: process-wide persistent-plan registry

@@ -377,6 +377,15 @@ class ScheduleInfo:
     #: how this cell was chosen when the autotuner picked it
     #: (:mod:`repro.core.autotune`); ``None`` for hand-pinned cells
     selected_by: str | None = None
+    #: membership epoch of the mesh this schedule was compiled against
+    #: (:mod:`repro.launch.membership`).  Every JOIN or in-grid LOSS
+    #: recovery bumps the grid's epoch, so a plan built before the
+    #: re-formation can never alias one built after it — stale plans
+    #: cannot deliver into a re-formed mesh.  ``None`` (the default) means
+    #: the caller lives outside the membership domain entirely: such plans
+    #: are never epoch-invalidated and their tags/keys are byte-identical
+    #: to before epochs existed.  0 is a *stamped* formation epoch.
+    epoch: int | None = None
 
     def tag(self) -> str:
         axes = "x".join(self.mesh_axes) or "-"
@@ -385,6 +394,8 @@ class ScheduleInfo:
             base += f"%{self.mapping}"
         if self.selected_by is not None:
             base += f"?{self.selected_by}"
+        if self.epoch is not None:
+            base += f"!e{self.epoch}"
         return base + ("+coalesced" if self.coalesce else "")
 
 

@@ -45,6 +45,20 @@ boots a 2-rank grid of this runner with an injected mid-run failure
 ``jax.distributed`` grid, so the whole grid dies and the *relaunch* on the
 survivor topology is the re-plan), then resumes from the shared checkpoint
 directory and verifies against the oracle.
+
+Phase 2 adds the membership-led elastic stories on top of that relaunch
+baseline (see :mod:`repro.launch.membership` and the README's
+fault-tolerance section): **rank JOIN** (``joins=``/:meth:`request_join`
+grows the mesh mid-run, moving the survivors' LIVE iterate through
+:func:`~repro.train.fault_tolerance.reshard_state` — no checkpoint
+involved), **in-grid loss recovery** (``recovery_mode="in-grid"``: the
+coordinator bumps the membership epoch, survivors drop only epoch-stale
+plans and re-initialize in place, staying warm), and **epoch-stamped
+plans** (the runner threads its epoch into ``StrategyConfig``, so every
+plan key and ``ScheduleInfo.tag()`` carries an ``!e{epoch}`` component
+and :meth:`~repro.core.plan.PlanCache.invalidate_stale_epochs` can be
+surgical).  A dead coordinator (:class:`CoordinatorLost`) falls back to
+the relaunch path under a successor service.
 """
 
 from __future__ import annotations
@@ -57,7 +71,21 @@ import numpy as np
 
 from repro.core.plan import PlanCache
 from repro.core.transport import chaos_scope
-from repro.train.fault_tolerance import FailureInjector, SimulatedFailure
+from repro.launch.membership import CoordinatorLost, MembershipService
+from repro.train.fault_tolerance import (
+    FailureInjector,
+    SimulatedFailure,
+    StragglerMonitor,
+    reshard_state,
+)
+
+#: how the runner recovers from rank loss.  ``"relaunch"`` is the PR 6
+#: path: drop EVERY cached plan, shrink to the survivors, restore the
+#: checkpoint (across real processes, the grid dies and relaunches).
+#: ``"in-grid"`` is the membership-led path: the coordinator bumps the
+#: epoch, only epoch-stale plans are invalidated, survivors barrier and
+#: re-initialize in place — processes stay up, unrelated plans stay warm.
+RECOVERY_MODES = ("relaunch", "in-grid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,11 +109,16 @@ class ElasticConfig:
     #: recovery is a relaunch on the survivor topology, not an in-process
     #: re-mesh)
     max_replans: int = 3
+    #: one of :data:`RECOVERY_MODES`
+    recovery_mode: str = "relaunch"
+    #: membership heartbeat window (in-grid mode only)
+    heartbeat_timeout: float = 5.0
 
     def __post_init__(self):
         assert self.n_steps >= 1, self.n_steps
         assert self.checkpoint_every >= 0, self.checkpoint_every
         assert self.max_replans >= 0, self.max_replans
+        assert self.recovery_mode in RECOVERY_MODES, self.recovery_mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +133,12 @@ class ReplanEvent:
     init_us: float
     #: cached plans dropped because their topology died
     plan_invalidations: int
+    #: "initial" | "rank-loss" (relaunch) | "loss-ingrid" | "join" |
+    #: "coordinator-lost" (relaunch fallback)
     cause: str = "initial"
+    #: membership epoch the new plan is stamped under (0 = formation /
+    #: membership-free runs)
+    epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -112,6 +150,45 @@ class ElasticResult:
     events: list[ReplanEvent]
     #: step of the last checkpoint the run committed (None: never saved)
     checkpoint_step: int | None
+    #: how losses were recovered (config's recovery_mode)
+    recovery_mode: str = "relaunch"
+    #: total µs moving LIVE state onto grown meshes across all JOINs
+    #: (register -> reshard complete; 0.0 when no rank joined)
+    join_us: float = 0.0
+    #: ranks that kept their process + warm plan cache through the most
+    #: recent recovery/join (0 after a relaunch — everyone went cold)
+    warm_ranks: int = 0
+    #: membership epoch the run finished under
+    final_epoch: int = 0
+    #: (step, seconds, mean) observations the StragglerMonitor flagged
+    straggler_flags: list = dataclasses.field(default_factory=list)
+    # final plan-cache counters (the warmth evidence: in-grid recovery
+    # keeps inits monotone across a loss instead of resetting the table)
+    plan_cache_inits: int = 0
+    plan_cache_hits: int = 0
+    plan_cache_invalidations: int = 0
+    #: the strategy cell, for BENCH stamping
+    cell: dict = dataclasses.field(default_factory=dict)
+
+    def bench_record(self) -> dict:
+        """One BENCH row for the chaos CI legs — same vocabulary as the
+        sweep's :meth:`~repro.stencil.comb.CycleResult.record` where the
+        fields overlap, plus the elastic-only columns."""
+        return {
+            **self.cell,
+            "steps": self.steps,
+            "replans": self.replans,
+            "replan_us": float(sum(e.replan_us for e in self.events)),
+            "recovery_mode": self.recovery_mode,
+            "join_us": self.join_us,
+            "warm_ranks": self.warm_ranks,
+            "final_epoch": self.final_epoch,
+            "straggler_flags": [list(f) for f in self.straggler_flags],
+            "plan_cache_inits": self.plan_cache_inits,
+            "plan_cache_hits": self.plan_cache_hits,
+            "plan_cache_invalidations": self.plan_cache_invalidations,
+            "checkpoint_step": self.checkpoint_step,
+        }
 
 
 def diffusion_update(halo: int = 1) -> Callable:
@@ -184,6 +261,10 @@ class ElasticStencilRunner:
         devices: Sequence | None = None,
         survivor_fn: Callable[[list], list] | None = None,
         update_fn: Callable | None = None,
+        membership: MembershipService | None = None,
+        straggler: StragglerMonitor | None = None,
+        joins: Sequence[tuple[int, Sequence]] = (),
+        fail_coordinator_at: int | None = None,
     ):
         import jax
 
@@ -199,6 +280,23 @@ class ElasticStencilRunner:
         self.cache = PlanCache()
         self.events: list[ReplanEvent] = []
         self.checkpoint_step: int | None = None
+        #: coordinator-led membership; auto-created for in-grid mode.  The
+        #: runner IS rank 0 in the in-process form: it drives the service
+        #: the way the grid coordinator does across real processes.
+        if membership is None and config.recovery_mode == "in-grid":
+            membership = MembershipService(
+                heartbeat_timeout=config.heartbeat_timeout)
+        self.membership = membership
+        #: stable member ids, parallel to ``devices`` (survive shrinks)
+        self.members = list(range(len(self.devices)))
+        #: membership epoch current plans are stamped under
+        self.epoch = 0
+        self.straggler = straggler
+        #: pending JOINs: (step, new_devices) handled before that step runs
+        self._joins = sorted((int(s), list(d)) for s, d in joins)
+        self._fail_coordinator_at = fail_coordinator_at
+        self.join_us = 0.0
+        self.warm_ranks = 0
 
     # -- topology ------------------------------------------------------------
     def _domain(self):
@@ -233,7 +331,7 @@ class ElasticStencilRunner:
             StrategyConfig(
                 name=cfg.strategy, n_parts=cfg.n_parts, packer=cfg.packer,
                 transport=cfg.transport, coalesce=cfg.coalesce,
-                plan_cache=self.cache,
+                plan_cache=self.cache, epoch=self.epoch,
             ),
             domain.mesh, domain.halo_spec,
             ndim=len(cfg.global_interior), update_fn=self.update_fn,
@@ -270,6 +368,7 @@ class ElasticStencilRunner:
         event = ReplanEvent(
             step=step, n_devices=len(self.devices), replan_us=replan_us,
             init_us=init_us, plan_invalidations=invalidated, cause=cause,
+            epoch=self.epoch,
         )
         self.events.append(event)
         return drv
@@ -303,8 +402,145 @@ class ElasticStencilRunner:
             return np.asarray(state["interior"]), int(state["step"])
         return initial_interior(self.config), 0
 
+    # -- membership ----------------------------------------------------------
+    def _form_membership(self) -> None:
+        """Register every current member and seal the founding set."""
+        if self.membership is None:
+            return
+        for m in self.members:
+            self.membership.register(m)
+        self.epoch = self.membership.seal().epoch
+
+    def _heartbeat_all(self, step: int) -> None:
+        """Every live rank beats (the in-process stand-in for per-rank
+        heartbeat threads).  A dead coordinator surfaces here as
+        :class:`CoordinatorLost` — the relaunch-fallback trigger."""
+        if self.membership is None:
+            return
+        for m in self.members:
+            self.membership.heartbeat(m, step=step)
+
+    # -- JOIN ----------------------------------------------------------------
+    def request_join(self, devices: Sequence, at_step: int = 0) -> None:
+        """Admit ``devices`` as a joining rank before ``at_step`` runs."""
+        self._joins.append((int(at_step), list(devices)))
+        self._joins.sort(key=lambda j: j[0])
+
+    def _handle_join(self, domain, drv, x, step: int):
+        """Grow the mesh around a registering rank, moving LIVE state.
+
+        The survivors' current iterate — not a checkpoint — crosses to the
+        grown topology: dense global interior off the old mesh, stored
+        (ghosted) layout for the new decomposition, then
+        :func:`~repro.train.fault_tolerance.reshard_state` places it under
+        the grown mesh's sharding.  ``join_us`` times that whole move.
+        Chaos checks inside run under the injector's ``"join"`` phase
+        scope, which cannot leak into steady-state steps.
+        """
+        import contextlib
+
+        import jax
+
+        _, new_devices = self._joins.pop(0)
+        scope = (self.injector.phase_scope("join")
+                 if self.injector is not None else contextlib.nullcontext())
+        with scope:
+            self._check(step)  # chaos window: the JOIN itself can die
+            t0 = time.perf_counter()
+            live = _fetch_global_interior(domain, x)
+            drv.free()
+            survivors = len(self.members)
+            next_id = max(self.members, default=-1) + 1
+            joiners = list(range(next_id, next_id + len(new_devices)))
+            if self.membership is not None:
+                for j in joiners:
+                    view = self.membership.register(j)  # epoch bump: "join"
+                self.epoch = view.epoch
+            else:
+                self.epoch += 1
+            # plans stamped with pre-join epochs can never deliver into the
+            # grown mesh; everything else the survivors warmed stays put
+            stale = self.cache.invalidate_stale_epochs(self.epoch)
+            self.devices = self.devices + list(new_devices)
+            self.members = self.members + joiners
+            new_domain = self._domain()
+            x = reshard_state(
+                new_domain.stored_from_interior(live),
+                new_domain.mesh, new_domain.pspec(),
+            )
+            jax.block_until_ready(x)
+            self.join_us += (time.perf_counter() - t0) * 1e6
+            if self.membership is not None:
+                for m in self.members:
+                    self.membership.ack(m, self.epoch)
+                assert self.membership.barrier_complete(self.epoch)
+            self.warm_ranks = survivors
+            new_drv = self._plan(
+                new_domain, step, cause="join", invalidated=stale)
+        return x, new_domain, new_drv
+
+    # -- LOSS recovery -------------------------------------------------------
+    def _recover_loss(self, pending: int) -> tuple[str, int]:
+        """Shrink to the survivors after a detected rank loss.
+
+        In-grid mode is coordinator-led: evict the dead ranks, adopt the
+        bumped epoch, drop ONLY epoch-stale plans, and barrier every
+        survivor on the new epoch before anyone touches the re-formed
+        mesh.  If the coordinator turns out to be dead too, fall back to
+        the relaunch path.  Relaunch mode is PR 6 unchanged: every plan
+        dropped, everyone cold.
+        """
+        survivors = list(self.survivor_fn(self.devices))
+        assert survivors, "no surviving devices"
+        lost = [m for m, d in zip(self.members, self.devices)
+                if d not in survivors]
+        if (self.config.recovery_mode == "in-grid"
+                and self.membership is not None):
+            try:
+                view = self.membership.mark_lost(*lost)  # epoch bump: "loss"
+                self.epoch = view.epoch
+                pending += self.cache.invalidate_stale_epochs(self.epoch)
+                keep = [m for m in self.members if m not in lost]
+                for m in keep:
+                    self.membership.ack(m, self.epoch)
+                assert self.membership.barrier_complete(self.epoch)
+                self.members = keep
+                self.devices = survivors
+                self.warm_ranks = len(keep)
+                return "loss-ingrid", pending
+            except CoordinatorLost:
+                return self._coordinator_fallback(
+                    pending, survivors=survivors, lost=lost)
+        # the dead topology's plans are garbage: drop them all (the
+        # counter feeds the next ReplanEvent) and go cold
+        pending += self.cache.invalidate()
+        self.members = [m for m in self.members if m not in lost]
+        self.devices = survivors
+        self.warm_ranks = 0
+        return "rank-loss", pending
+
+    def _coordinator_fallback(self, pending: int, *, survivors=None,
+                              lost=()) -> tuple[str, int]:
+        """The coordinator died: in-grid recovery is impossible, so take
+        the PR 6 relaunch path (full invalidation, everyone cold) and
+        re-form membership under a successor coordinator whose epoch
+        starts past every plan the old generation stamped."""
+        pending += self.cache.invalidate()
+        if survivors is not None:
+            self.members = [m for m in self.members if m not in lost]
+            self.devices = survivors
+        self.warm_ranks = 0
+        self.epoch += 1
+        if self.membership is not None:
+            self.membership = MembershipService(
+                heartbeat_timeout=self.config.heartbeat_timeout,
+                start_epoch=self.epoch,
+            )
+            self._form_membership()
+        return "coordinator-lost", pending
+
     # -- the run loop --------------------------------------------------------
-    def _check(self, step: int, phase: str) -> None:
+    def _check(self, step: int, phase: str | None = None) -> None:
         if self.injector is not None:
             self.injector.check(step, phase=phase)
 
@@ -312,47 +548,81 @@ class ElasticStencilRunner:
         cfg = self.config
         replans = 0
         pending_invalidated = 0
+        cause = "initial"
         interior, step = self._restore_or_init()
+        self._form_membership()
         while True:
             drv = None
             try:
                 domain = self._domain()
                 # plan-build chaos can fire inside _plan's init trace
                 drv = self._plan(
-                    domain, step,
-                    cause="initial" if not replans else "rank-loss",
+                    domain, step, cause=cause,
                     invalidated=pending_invalidated,
                 )
                 pending_invalidated = 0
                 x = domain.from_global_interior(interior)
                 while step < cfg.n_steps:
+                    if self._joins and self._joins[0][0] <= step:
+                        x, domain, drv = self._handle_join(
+                            domain, drv, x, step)
+                    if (self._fail_coordinator_at is not None
+                            and step >= self._fail_coordinator_at
+                            and self.membership is not None):
+                        self._fail_coordinator_at = None
+                        self.membership.fail()  # chaos: coordinator dies
                     self._check(step, "pre-step")
+                    t0 = time.perf_counter()
                     y = drv.step(x)  # exchange+update dispatched (async)
                     self._check(step, "mid-exchange")
                     x = drv.wait(y)
+                    if self.straggler is not None:
+                        self.straggler.observe(
+                            step, time.perf_counter() - t0)
                     step += 1
+                    self._heartbeat_all(step)
                     if cfg.checkpoint_every and (
                             step % cfg.checkpoint_every == 0
                             or step == cfg.n_steps):
                         interior = _fetch_global_interior(domain, x)
                         self._checkpoint(interior, step)
                 final = _fetch_global_interior(domain, x)
+                stats = self.cache.stats
                 return ElasticResult(
                     final_interior=final, steps=step, replans=replans,
                     events=list(self.events),
                     checkpoint_step=self.checkpoint_step,
+                    recovery_mode=cfg.recovery_mode,
+                    join_us=self.join_us,
+                    warm_ranks=self.warm_ranks,
+                    final_epoch=self.epoch,
+                    straggler_flags=(
+                        list(self.straggler.flagged)
+                        if self.straggler is not None else []),
+                    plan_cache_inits=stats.inits,
+                    plan_cache_hits=stats.cache_hits,
+                    plan_cache_invalidations=stats.invalidations,
+                    cell={
+                        "strategy": cfg.strategy, "packer": cfg.packer,
+                        "transport": cfg.transport,
+                        "coalesce": cfg.coalesce, "n_parts": cfg.n_parts,
+                    },
                 )
             except SimulatedFailure:
                 replans += 1
                 if replans > cfg.max_replans:
                     raise
-                # the dead topology's plans are garbage: drop them all (the
-                # counter feeds the next ReplanEvent), shrink to the
-                # survivors, and resume from the last committed checkpoint
-                pending_invalidated += self.cache.invalidate()
-                survivors = list(self.survivor_fn(self.devices))
-                assert survivors, "no surviving devices"
-                self.devices = survivors
+                cause, pending_invalidated = self._recover_loss(
+                    pending_invalidated)
+                # resume from the last committed checkpoint (JOINs move
+                # live state instead and never come through here)
+                interior, step = self._restore_or_init()
+            except CoordinatorLost:
+                replans += 1
+                if replans > cfg.max_replans:
+                    raise
+                cause, pending_invalidated = self._coordinator_fallback(
+                    pending_invalidated)
                 interior, step = self._restore_or_init()
             finally:
                 if drv is not None:

@@ -41,6 +41,10 @@ from typing import Any, Callable, Mapping, Sequence
 COORDINATOR_VAR = "REPRO_COORDINATOR"
 NUM_PROCESSES_VAR = "REPRO_NUM_PROCESSES"
 PROCESS_ID_VAR = "REPRO_PROCESS_ID"
+#: bound (seconds) on a worker's connect to the rank-0 coordinator — a
+#: worker whose coordinator died before binding exits instead of blocking
+#: in ``jax.distributed`` init forever
+CONNECT_TIMEOUT_VAR = "REPRO_CONNECT_TIMEOUT"
 
 _DEVICE_FLAG = "--xla_force_host_platform_device_count"
 
@@ -87,6 +91,8 @@ def worker_env(
     num_processes: int = 1,
     process_id: int = 0,
     base: Mapping[str, str] | None = None,
+    connect_timeout: float | None = None,
+    membership: str | None = None,
 ) -> dict[str, str]:
     """The environment one worker process boots with.
 
@@ -102,6 +108,8 @@ def worker_env(
     env = dict(os.environ if base is None else base)
     flags = re.sub(rf"{_DEVICE_FLAG}=\d+", "", env.get("XLA_FLAGS", ""))
     env["XLA_FLAGS"] = f"{flags} {_DEVICE_FLAG}={local_devices}".strip()
+    from repro.launch.membership import MEMBERSHIP_VAR
+
     if coordinator is not None:
         env[COORDINATOR_VAR] = coordinator
         env[NUM_PROCESSES_VAR] = str(num_processes)
@@ -109,6 +117,16 @@ def worker_env(
     else:
         for var in (COORDINATOR_VAR, NUM_PROCESSES_VAR, PROCESS_ID_VAR):
             env.pop(var, None)  # never inherit stale grid coordinates
+    # connect bound + membership endpoint follow the same rule: stamped
+    # when this launch provides them, scrubbed otherwise
+    if connect_timeout is not None and coordinator is not None:
+        env[CONNECT_TIMEOUT_VAR] = str(connect_timeout)
+    else:
+        env.pop(CONNECT_TIMEOUT_VAR, None)
+    if membership is not None:
+        env[MEMBERSHIP_VAR] = membership
+    else:
+        env.pop(MEMBERSHIP_VAR, None)
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     return env
@@ -134,10 +152,12 @@ def maybe_initialize_from_env() -> int:
 
     num_processes = int(os.environ[NUM_PROCESSES_VAR])
     process_id = int(os.environ[PROCESS_ID_VAR])
-    jax.distributed.initialize(
+    connect_timeout = os.environ.get(CONNECT_TIMEOUT_VAR)
+    compat.distributed_initialize(
         coordinator_address=coordinator,
         num_processes=num_processes,
         process_id=process_id,
+        timeout=float(connect_timeout) if connect_timeout else None,
     )
     assert jax.process_count() == num_processes, (
         jax.process_count(), num_processes,
@@ -174,11 +194,33 @@ def _launch_grid_once(
     local_devices: int,
     timeout: float,
     env: Mapping[str, str] | None,
+    reap_grace: float = 10.0,
+    membership: bool = False,
 ) -> GridResult:
-    """One grid attempt against a freshly picked coordinator port."""
+    """One grid attempt against a freshly picked coordinator port.
+
+    A rank exiting nonzero dooms the whole SPMD grid, so the wait is a
+    poll: once the first failure lands, the remaining ranks get
+    ``reap_grace`` seconds to die on their own (collective errors
+    propagate), then any still-running rank is reaped and reported in
+    :attr:`GridResult.failed_ranks`.  Without the reap, a worker whose
+    coordinator died before binding blocks in ``jax.distributed`` init
+    for the full grid ``timeout`` — the zombie-grid CI hang.  The
+    worker-side half of the same fix is the ``REPRO_CONNECT_TIMEOUT``
+    bound stamped into every rank's env.
+
+    With ``membership`` a port for the rank-0 membership service
+    (:mod:`repro.launch.membership`) is picked here and advertised to
+    every rank through ``REPRO_MEMBERSHIP``; the rank-0 program binds it
+    via :func:`repro.launch.membership.serve_from_env`.
+    """
     coordinator = f"127.0.0.1:{pick_coordinator_port()}"
+    membership_addr = (
+        f"127.0.0.1:{pick_coordinator_port()}" if membership else None
+    )
     procs, files = [], []
     deadline = time.monotonic() + timeout
+    reap_at = None  # set when the first rank dies nonzero
     try:
         for rank in range(processes):
             # spool each rank's streams to temp files: every rank drains
@@ -192,17 +234,29 @@ def _launch_grid_once(
                 env=worker_env(
                     coordinator=coordinator, num_processes=processes,
                     process_id=rank, local_devices=local_devices, base=env,
+                    connect_timeout=timeout, membership=membership_addr,
                 ),
                 stdout=out_f, stderr=err_f, text=True,
             ))
-        for p in procs:  # ONE shared wall-clock budget for the grid
-            p.wait(timeout=max(0.1, deadline - time.monotonic()))
-    except subprocess.TimeoutExpired:
-        raise RuntimeError(
-            f"grid did not complete within {timeout:.0f}s "
-            f"({sum(p.poll() is None for p in procs)} of {processes} "
-            f"ranks still running)"
-        ) from None
+        while any(p.poll() is None for p in procs):
+            now = time.monotonic()
+            if now >= deadline:  # ONE shared wall-clock budget
+                raise RuntimeError(
+                    f"grid did not complete within {timeout:.0f}s "
+                    f"({sum(p.poll() is None for p in procs)} of "
+                    f"{processes} ranks still running)"
+                )
+            if reap_at is None and any(
+                    p.poll() is not None and p.returncode != 0
+                    for p in procs):
+                reap_at = min(now + reap_grace, deadline)
+            if reap_at is not None and now >= reap_at:
+                for p in procs:  # reap the blocked zombies
+                    if p.poll() is None:
+                        p.kill()
+                        p.wait()
+                break
+            time.sleep(0.05)
     finally:
         for p in procs:  # one rank dying must not strand the others
             if p.poll() is None:
@@ -231,6 +285,8 @@ def launch_grid(
     env: Mapping[str, str] | None = None,
     check: bool = True,
     attempts: int = 3,
+    reap_grace: float = 10.0,
+    membership: bool = False,
 ) -> str | GridResult:
     """Run ``argv`` as an N-process ``jax.distributed`` grid; return rank
     0's stdout.
@@ -256,7 +312,8 @@ def launch_grid(
     for attempt in range(1, attempts + 1):
         result = _launch_grid_once(
             argv, processes=processes, local_devices=local_devices,
-            timeout=timeout, env=env,
+            timeout=timeout, env=env, reap_grace=reap_grace,
+            membership=membership,
         )
         if result.ok or not (
             attempt < attempts

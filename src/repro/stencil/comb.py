@@ -88,6 +88,17 @@ class CycleResult:
     #: wall time the in-situ calibration probes cost (0 when the verdict
     #: came from a trace, the model, or the persistent autotune cache)
     calibration_us: float = 0.0
+    #: how membership churn was (or would be) recovered during this
+    #: measurement: "none" for steady-state sweep cells, "relaunch" /
+    #: "in-grid" when the elastic runner produced the record
+    #: (repro.launch.elastic)
+    recovery_mode: str = "none"
+    #: total µs spent moving LIVE state onto grown meshes for rank JOINs
+    #: (0.0 when no rank joined — every steady-state cell)
+    join_us: float = 0.0
+    #: ranks that kept their process + warm plan cache through the last
+    #: membership change (0 in steady state and after any relaunch)
+    warm_ranks: int = 0
 
     def record(self) -> dict:
         """Flat, json-serializable form (the BENCH_*.json row body)."""

@@ -118,6 +118,23 @@ class Domain:
         holds the same dense ``interior``, so the assembled global array is
         consistent without any cross-process data movement.
         """
+        sharding = self.sharding()
+        stored = self.stored_from_interior(interior)
+        if not sharding.is_fully_addressable:
+            return jax.make_array_from_callback(
+                stored.shape, sharding, lambda idx: stored[idx]
+            )
+        return jax.device_put(jnp.asarray(stored), sharding)
+
+    def stored_from_interior(self, interior: np.ndarray) -> np.ndarray:
+        """Host-side stored (ghost-carrying) layout of a dense interior.
+
+        The carve-and-pad is a pure function of this domain's decomposition,
+        exposed separately so elastic JOINs can re-shard *live* state onto a
+        grown mesh through :func:`repro.train.fault_tolerance.reshard_state`
+        (stored layout here, placement there) instead of restoring a
+        checkpoint through :meth:`from_global_interior`.
+        """
         assert interior.shape == self.global_interior, interior.shape
         h = self.halo
         blocks = interior
@@ -129,13 +146,7 @@ class Domain:
             widths[axis] = (h, h)
             pieces = [np.pad(p, widths) for p in pieces]
             blocks = np.concatenate(pieces, axis=axis)
-        sharding = self.sharding()
-        stored = np.asarray(blocks, dtype=self.dtype)
-        if not sharding.is_fully_addressable:
-            return jax.make_array_from_callback(
-                stored.shape, sharding, lambda idx: stored[idx]
-            )
-        return jax.device_put(jnp.asarray(stored), sharding)
+        return np.asarray(blocks, dtype=self.dtype)
 
     def to_global_interior(self, x: jax.Array) -> np.ndarray:
         """Strip ghosts and reassemble the dense global interior."""

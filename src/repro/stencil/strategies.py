@@ -120,6 +120,15 @@ class StrategyConfig:
     transport: str = "ppermute"
     coalesce: bool | str = True
     mapping: str = "row-major"
+    #: membership epoch of the grid this driver's mesh belongs to
+    #: (:mod:`repro.launch.membership`); ``None`` = outside the membership
+    #: domain.  Identity only, like ``mapping``: it flows into
+    #: :class:`~repro.core.halo.HaloSpec` and therefore every persistent
+    #: plan key and ``ScheduleInfo.tag()``, so plans built before a
+    #: JOIN/LOSS re-formation can never hit after it — and only
+    #: epoch-stamped plans are candidates for
+    #: :meth:`~repro.core.plan.PlanCache.invalidate_stale_epochs`.
+    epoch: int | None = None
 
     def __post_init__(self):
         assert self.n_parts >= 1, self.n_parts
@@ -223,6 +232,7 @@ class ExchangeStrategy(abc.ABC):
             strategy=self.name, n_parts=n_parts,
             packer=self.config.packer, transport=self.config.transport,
             coalesce=self.config.coalesce, mapping=self.config.mapping,
+            epoch=self.config.epoch,
         )
 
     # -- plan assembly ------------------------------------------------------

@@ -84,6 +84,7 @@ RECORD_KEYS = (
     "plan_cache_inits", "plan_cache_hits",
     "replan_us", "plan_cache_invalidations",
     "selected_by", "predicted_us", "calibration_us",
+    "recovery_mode", "join_us", "warm_ranks",
     "init_us", "n_cycles", "repeats", "checksum", "speedup_vs_baseline",
 )
 

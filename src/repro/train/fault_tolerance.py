@@ -9,6 +9,7 @@ hook is where a missed-heartbeat / ICI-error signal lands.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
 import time
@@ -26,6 +27,76 @@ class SimulatedFailure(RuntimeError):
     """Stands in for a node loss / NIC flap / preemption."""
 
 
+# ---------------------------------------------------------------------------
+# heartbeat + epoch types (mechanism; policy lives in repro.launch.membership)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Heartbeat:
+    """One liveness report: ``rank`` was alive at ``when`` (coordinator
+    clock), optionally annotated with the step it was executing."""
+
+    rank: int
+    when: float
+    step: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochBump:
+    """Why the grid moved to ``epoch``.
+
+    ``cause`` is ``"form"`` (initial seal), ``"join"`` (a rank registered
+    mid-run), or ``"loss"`` (missed heartbeats).  The epoch value is what
+    gets stamped into :class:`~repro.core.transport.ScheduleInfo` /
+    persistent plan keys so stale plans can never deliver into the
+    re-formed mesh.
+    """
+
+    epoch: int
+    cause: str
+
+    def __post_init__(self):
+        assert self.cause in ("form", "join", "loss"), self.cause
+
+
+class HeartbeatLedger:
+    """Last-beat table with a miss window — the detection half of in-grid
+    recovery.  :class:`repro.launch.membership.MembershipService` drives
+    one of these; it is separate so timeout logic is testable with a fake
+    clock and no sockets."""
+
+    def __init__(self, timeout: float):
+        self.timeout = float(timeout)
+        self._last: dict[int, Heartbeat] = {}
+
+    def beat(self, rank: int, when: float, step: int | None = None) -> None:
+        self._last[rank] = Heartbeat(rank=rank, when=when, step=step)
+
+    def last(self, rank: int) -> Heartbeat | None:
+        return self._last.get(rank)
+
+    def missing(self, now: float) -> tuple[int, ...]:
+        """Ranks whose last beat is older than the window, sorted."""
+        return tuple(sorted(
+            r for r, hb in self._last.items()
+            if now - hb.when > self.timeout
+        ))
+
+    def evict(self, rank: int) -> bool:
+        return self._last.pop(rank, None) is not None
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        return tuple(sorted(self._last))
+
+    def __contains__(self, rank: int) -> bool:
+        return rank in self._last
+
+    def __len__(self) -> int:
+        return len(self._last)
+
+
 @dataclasses.dataclass
 class FailureInjector:
     """Deterministically fail at the given steps (or with probability p).
@@ -39,6 +110,14 @@ class FailureInjector:
     so a restart that replays the same step never refires: without the
     dedup the probability path is seeded by ``seed + step`` and a resumed
     run would deterministically hit the same failure forever.
+
+    Transient phases (a JOIN window, a recovery barrier) must be tagged
+    through :meth:`phase_scope`, not by threading the tag into every
+    ``check`` call: the scope restores the previous tag on exit, so an
+    injector armed for ``phases=("join",)`` can structurally never fire
+    during steady-state steps of the grown grid — the "join" tag cannot
+    outlive the window it names.  Inside a scope, untagged checks inherit
+    the scoped phase; explicitly-tagged checks keep their own tag.
     """
 
     fail_at_steps: tuple[int, ...] = ()
@@ -47,10 +126,23 @@ class FailureInjector:
     enabled: bool = True
     phases: tuple[str, ...] = ()
     _fired: set = dataclasses.field(default_factory=set)
+    _active_phase: str | None = dataclasses.field(default=None, repr=False)
+
+    @contextlib.contextmanager
+    def phase_scope(self, phase: str):
+        """Tag every untagged ``check`` inside the block with ``phase``."""
+        prev = self._active_phase
+        self._active_phase = phase
+        try:
+            yield self
+        finally:
+            self._active_phase = prev
 
     def check(self, step: int, phase: str | None = None) -> None:
         if not self.enabled:
             return
+        if phase is None:
+            phase = self._active_phase
         if self.phases and phase not in self.phases:
             return
         key = (step, phase)

@@ -56,6 +56,9 @@ def _record(strategy, n_devices, size, n_parts, us, base_us,
         "selected_by": selected_by,
         "predicted_us": us if selected_by else None,
         "calibration_us": 0.0,
+        "recovery_mode": "none",
+        "join_us": 0.0,
+        "warm_ranks": 0,
         "n_cycles": 3,
         "repeats": 1,
         "checksum": 0.25,

@@ -327,3 +327,64 @@ def test_launch_grid_check_raises_with_stderr_tail(tmp_path):
              "AssertionError: genuinely broken", "1"],
             processes=1, local_devices=1, timeout=120.0, attempts=2,
         )
+
+
+# ---------------------------------------------------------------------------
+# satellite: zombie workers reaped when the coordinator dies before binding
+# ---------------------------------------------------------------------------
+
+
+_ZOMBIE_PROG = textwrap.dedent("""
+    import os, sys, time
+    if os.environ["REPRO_PROCESS_ID"] == "0":
+        print("coordinator died before binding", file=sys.stderr)
+        sys.exit(1)
+    time.sleep(600)  # a worker blocked in jax.distributed init
+""")
+
+
+def test_launch_grid_reaps_workers_blocked_on_dead_coordinator(tmp_path):
+    """Rank 0 dying before the coordinator binds used to strand the other
+    ranks in init for the full grid timeout; the reap reports them in
+    failed_ranks within the grace window instead."""
+    import time as _time
+
+    from repro.launch.stencil import launch_grid
+
+    prog = tmp_path / "prog.py"
+    prog.write_text(_ZOMBIE_PROG)
+    t0 = _time.monotonic()
+    result = launch_grid(
+        [sys.executable, str(prog)],
+        processes=2, local_devices=1, timeout=120.0, check=False,
+        attempts=1, reap_grace=1.0,
+    )
+    elapsed = _time.monotonic() - t0
+    assert elapsed < 60.0, f"reap did not bound the hang ({elapsed:.0f}s)"
+    assert not result.ok
+    # BOTH ranks are reported: the dead coordinator and the reaped zombie
+    assert result.failed_ranks == (0, 1), result.returncodes
+    assert result.returncodes[0] == 1
+    assert result.returncodes[1] < 0, "zombie worker was not reaped"
+    assert "coordinator died" in result.errs[0]
+
+
+def test_worker_env_stamps_connect_timeout_and_membership():
+    """The REPRO_* grid protocol carries the connect bound and membership
+    endpoint alongside the coordinator coordinates — and scrubs both when
+    a launch does not provide them (no stale inheritance)."""
+    from repro.launch.membership import MEMBERSHIP_VAR
+    from repro.launch.stencil import CONNECT_TIMEOUT_VAR, worker_env
+
+    env = worker_env(
+        local_devices=2, coordinator="127.0.0.1:9999", num_processes=2,
+        process_id=1, base={}, connect_timeout=45.0,
+        membership="127.0.0.1:8888",
+    )
+    assert env[CONNECT_TIMEOUT_VAR] == "45.0"
+    assert env[MEMBERSHIP_VAR] == "127.0.0.1:8888"
+
+    stale = {CONNECT_TIMEOUT_VAR: "7", MEMBERSHIP_VAR: "10.0.0.1:1"}
+    clean = worker_env(local_devices=2, base=stale)
+    assert CONNECT_TIMEOUT_VAR not in clean
+    assert MEMBERSHIP_VAR not in clean

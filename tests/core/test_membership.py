@@ -1,0 +1,244 @@
+"""Membership service unit tests: epochs, heartbeats, barrier, wire.
+
+The state machine is transport-free and takes an injectable clock, so the
+heartbeat-timeout logic is tested without sleeping; the TCP wire is
+exercised over a real localhost socket (the same path the chaos CI legs
+use); the epoch-stamping rule is pinned down at every layer it crosses
+(ScheduleInfo tag -> HaloSpec -> plan key -> stale-epoch invalidation).
+"""
+
+import pytest
+
+from repro.launch.membership import (
+    MEMBERSHIP_VAR,
+    CoordinatorLost,
+    MembershipClient,
+    MembershipServer,
+    MembershipService,
+    MemberView,
+    client_from_env,
+    membership_env,
+    serve_from_env,
+)
+from repro.train.fault_tolerance import EpochBump, Heartbeat, HeartbeatLedger
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _sealed(n=2, timeout=1.0):
+    clock = FakeClock()
+    svc = MembershipService(heartbeat_timeout=timeout, clock=clock)
+    for r in range(n):
+        svc.register(r)
+    svc.seal()
+    return svc, clock
+
+
+# ---------------------------------------------------------------------------
+# heartbeat + epoch types (train.fault_tolerance)
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_ledger_timeout_window():
+    ledger = HeartbeatLedger(timeout=1.0)
+    ledger.beat(0, 0.0)
+    ledger.beat(1, 0.0, step=4)
+    assert ledger.missing(0.5) == ()
+    ledger.beat(0, 1.0)
+    # rank 1 last beat 0.0: at t=1.5 it is 1.5s stale > 1.0s window
+    assert ledger.missing(1.5) == (1,)
+    assert ledger.last(1) == Heartbeat(rank=1, when=0.0, step=4)
+    assert ledger.evict(1) and not ledger.evict(1)
+    assert ledger.ranks == (0,)
+    assert 0 in ledger and 1 not in ledger
+
+
+def test_epoch_bump_rejects_unknown_causes():
+    EpochBump(epoch=1, cause="join")
+    with pytest.raises(AssertionError):
+        EpochBump(epoch=1, cause="oops")
+
+
+# ---------------------------------------------------------------------------
+# the coordinator state machine (fake clock — no sleeps)
+# ---------------------------------------------------------------------------
+
+
+def test_formation_then_seal_is_epoch_zero():
+    svc, _ = _sealed(3)
+    assert svc.view == MemberView(epoch=0, members=(0, 1, 2), cause="form")
+
+
+def test_register_after_seal_is_a_join_bump():
+    svc, _ = _sealed(2)
+    view = svc.register(7)
+    assert view.epoch == 1 and view.cause == "join"
+    assert view.members == (0, 1, 7)
+    # re-registering an existing member is a heartbeat-ish no-op, not a bump
+    assert svc.register(7).epoch == 1
+
+
+def test_missed_heartbeats_detected_and_loss_bumps_epoch():
+    svc, clock = _sealed(2, timeout=1.0)
+    clock.t = 0.9
+    svc.heartbeat(0)
+    clock.t = 1.5  # rank 1 never beat: 1.5s stale > 1.0s window
+    assert svc.detect_losses() == (1,)
+    view = svc.mark_lost(1)
+    assert view == MemberView(epoch=1, members=(0,), cause="loss")
+    # marking an already-gone rank must not bump again
+    assert svc.mark_lost(1).epoch == 1
+
+
+def test_barrier_requires_every_current_member():
+    svc, _ = _sealed(3)
+    svc.mark_lost(2)
+    assert not svc.barrier_complete(1)
+    svc.ack(0, epoch=1)
+    assert not svc.barrier_complete(1)
+    svc.ack(1, epoch=1)
+    assert svc.barrier_complete(1)
+    # acks for a superseded epoch are dropped on the floor
+    svc.register(9)  # epoch 2
+    assert not svc.barrier_complete(1)
+    assert not svc.barrier_complete(2)
+
+
+def test_heartbeat_returns_the_current_view():
+    """Workers learn of epoch bumps from the heartbeat return value —
+    no push channel exists."""
+    svc, _ = _sealed(2)
+    assert svc.heartbeat(0).epoch == 0
+    svc.register(5)
+    view = svc.heartbeat(0, step=12)
+    assert view.epoch == 1 and view.cause == "join"
+
+
+def test_dead_coordinator_raises_everywhere():
+    svc, _ = _sealed(2)
+    svc.fail()
+    assert not svc.alive
+    for call in (lambda: svc.heartbeat(0), lambda: svc.register(3),
+                 lambda: svc.detect_losses(), lambda: svc.mark_lost(1),
+                 lambda: svc.ack(0, 0), lambda: svc.seal()):
+        with pytest.raises(CoordinatorLost):
+            call()
+
+
+def test_successor_coordinator_seeds_a_later_epoch():
+    svc = MembershipService(start_epoch=4)
+    svc.register(0)
+    assert svc.seal().epoch == 4
+    assert svc.register(1).epoch == 5  # bumps continue past the seed
+
+
+# ---------------------------------------------------------------------------
+# the TCP wire (real localhost socket, JSON per line)
+# ---------------------------------------------------------------------------
+
+
+def test_tcp_round_trip_mirrors_the_service():
+    svc, clock = _sealed(2, timeout=1.0)
+    with MembershipServer(svc) as srv:
+        cli = MembershipClient(srv.address, timeout=5.0)
+        assert cli.view() == svc.view
+        assert cli.heartbeat(0, step=3).epoch == 0
+        view = cli.register(9)
+        assert view.epoch == 1 and view.cause == "join"
+        clock.t = 2.0
+        cli.heartbeat(0)
+        assert cli.detect_losses() == (1, 9)
+        view = cli.mark_lost(1, 9)
+        assert view.members == (0,) and view.epoch == 2
+        cli.ack(0, 2)
+        assert cli.barrier_complete(2)
+
+
+def test_tcp_surfaces_coordinator_death_and_refused_connect():
+    svc, _ = _sealed(2)
+    srv = MembershipServer(svc)
+    cli = MembershipClient(srv.address, timeout=5.0)
+    svc.fail()
+    with pytest.raises(CoordinatorLost):
+        cli.heartbeat(0)
+    srv.close()
+    # the endpoint is gone entirely: same failure from the worker's view
+    with pytest.raises(CoordinatorLost):
+        MembershipClient(srv.address, timeout=0.5).view()
+
+
+def test_env_plumbing_round_trip():
+    env = membership_env("127.0.0.1:7777", base={"OTHER": "x"})
+    assert env[MEMBERSHIP_VAR] == "127.0.0.1:7777" and env["OTHER"] == "x"
+    cli = client_from_env(env)
+    assert (cli.host, cli.port) == ("127.0.0.1", 7777)
+    assert client_from_env({}) is None
+    assert serve_from_env(MembershipService(), {}) is None
+    svc = MembershipService()
+    srv = serve_from_env(svc, membership_env("127.0.0.1:0"))
+    try:
+        assert MembershipClient(srv.address).view().epoch == 0
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# the epoch-stamping rule across the plan layers
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_info_tag_gains_epoch_component():
+    from repro.core.transport import ScheduleInfo
+
+    bare = ScheduleInfo(kind="fused", mesh_axes=("px",))
+    assert "!e" not in bare.tag()  # epoch-free callers: byte-identical tags
+    stamped = ScheduleInfo(kind="fused", mesh_axes=("px",), epoch=3)
+    assert stamped.tag().endswith("!e3")
+    formation = ScheduleInfo(kind="fused", mesh_axes=("px",), epoch=0)
+    assert "!e0" in formation.tag()  # 0 is a STAMPED epoch, not "none"
+
+
+def test_halo_spec_forwards_epoch_into_schedule_info():
+    from repro.core.halo import HaloSpec
+
+    spec = HaloSpec(mesh_axes=("px",), array_axes=(0,), epoch=2)
+    assert spec.schedule_info("fused").epoch == 2
+    assert HaloSpec(mesh_axes=("px",),
+                    array_axes=(0,)).schedule_info("fused").epoch is None
+
+
+def test_stale_epoch_invalidation_drops_only_older_stamps():
+    from repro.core.halo import HaloSpec
+    from repro.core.plan import PlanCache, stale_epoch
+
+    def spec(epoch):
+        return HaloSpec(mesh_axes=("px",), array_axes=(0,), epoch=epoch)
+
+    assert stale_epoch(("k", spec(0)), live_epoch=1)
+    assert not stale_epoch(("k", spec(1)), live_epoch=1)
+    assert not stale_epoch(("k", spec(None)), live_epoch=1)
+    assert not stale_epoch(("k", "no-spec", 3), live_epoch=1)
+    # nested tuples are walked
+    assert stale_epoch(("k", ("inner", spec(0))), live_epoch=2)
+
+    cache = PlanCache()
+
+    class _Plan:
+        def free(self):
+            pass
+
+    cache._plans = {  # three resident plans across the epoch domains
+        ("a", spec(0)): _Plan(),
+        ("b", spec(1)): _Plan(),
+        ("c", spec(None)): _Plan(),
+    }
+    dropped = cache.invalidate_stale_epochs(1)
+    assert dropped == 1
+    assert set(cache.keys()) == {("b", spec(1)), ("c", spec(None))}
+    assert cache.stats.invalidations == 1

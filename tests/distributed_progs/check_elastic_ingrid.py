@@ -1,0 +1,132 @@
+"""In-grid recovery chaos check over the REAL membership wire.
+
+The in-process unit tests (tests/stencil/test_elastic.py) drive the
+MembershipService directly; this program is the CI leg that routes every
+membership operation through a live localhost TCP coordinator
+(MembershipServer + MembershipClient) — the same wire a multi-process
+grid would use — and holds the phase-2 acceptance criteria:
+
+- a mid-exchange rank loss under ``recovery_mode="in-grid"`` shrinks the
+  mesh WITHOUT a relaunch: the run resumes in the same process;
+- survivors stay WARM — an unrelated pre-warmed plan stays resident in
+  the cache, the invalidation is surgical (exactly the dead topology's
+  epoch-stamped plan), and ``plan_cache_inits`` keeps growing instead of
+  resetting to zero;
+- the resumed trajectory is bitwise equal to the 1-device oracle
+  (exact-wire packer);
+- the BENCH row lands on disk for the artifact upload.
+"""
+
+import os
+
+# 8 virtual host devices, pinned BEFORE jax initializes (standalone
+# program: the repo conftest does this for pytest, not for us)
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import json
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.launch.elastic import ElasticConfig, ElasticStencilRunner
+from repro.launch.membership import (
+    MembershipClient,
+    MembershipServer,
+    MembershipService,
+)
+from repro.train.fault_tolerance import FailureInjector
+
+BENCH_VAR = "REPRO_ELASTIC_BENCH"
+FAIL_STEP = 3
+
+PASS = []
+
+
+def ok(name):
+    print(f"OK {name}")
+    PASS.append(name)
+
+
+def prewarm_unrelated_plan(cache):
+    """An epoch-FREE persistent plan for an unrelated geometry — the
+    warmth probe in-grid recovery must leave resident."""
+    from repro.core.compat import make_mesh
+    from repro.stencil.domain import Domain
+    from repro.stencil.strategies import StrategyConfig, make_driver
+
+    mesh = make_mesh((2,), ("px",), devices=jax.devices()[:2])
+    dom = Domain(mesh, global_interior=(8, 4), mesh_axes=("px", None),
+                 halo=1)
+    drv = make_driver(
+        StrategyConfig(name="persistent", plan_cache=cache),
+        mesh, dom.halo_spec, ndim=2,
+    )
+    drv.init(jax.ShapeDtypeStruct(dom.stored_global, np.dtype(dom.dtype),
+                                  sharding=dom.sharding()))
+    drv.free()
+    return set(cache.keys())
+
+
+cfg = ElasticConfig(
+    global_interior=(16, 8), n_steps=6, checkpoint_every=1,
+    recovery_mode="in-grid", heartbeat_timeout=30.0,
+)
+
+svc = MembershipService(heartbeat_timeout=cfg.heartbeat_timeout)
+with MembershipServer(svc) as srv:
+    cli = MembershipClient(srv.address, timeout=10.0)
+    runner = ElasticStencilRunner(
+        cfg, tempfile.mkdtemp(prefix="elastic_ingrid_ckpt_"),
+        injector=FailureInjector(fail_at_steps=(FAIL_STEP,),
+                                 phases=("mid-exchange",)),
+        devices=jax.devices()[:4],
+        membership=cli,  # every membership op crosses the TCP wire
+    )
+    warm_keys = prewarm_unrelated_plan(runner.cache)
+    inits_before = runner.cache.stats.inits
+    result = runner.run()
+    # the coordinator's view (read fresh over the wire) agrees with the
+    # runner's adopted epoch: one "loss" bump, two members evicted
+    view = cli.view()
+    assert view.epoch == 1 and view.cause == "loss", view
+    assert len(view.members) == 2, view
+
+assert result.recovery_mode == "in-grid"
+assert [e.cause for e in result.events] == ["initial", "loss-ingrid"], (
+    result.events)
+assert (result.events[0].n_devices, result.events[1].n_devices) == (4, 2)
+assert result.final_epoch == 1, result.final_epoch
+ok("mid-exchange loss recovered IN-GRID over the TCP wire "
+   "(4 -> 2 devices, epoch 0 -> 1, no relaunch)")
+
+assert result.warm_ranks == 2, result.warm_ranks
+assert result.events[1].plan_invalidations == 1, result.events
+assert result.plan_cache_invalidations == 1, result.plan_cache_invalidations
+assert warm_keys <= set(runner.cache.keys()), "pre-warmed plan was dropped"
+assert result.plan_cache_inits == inits_before + 2, (
+    result.plan_cache_inits, inits_before)
+ok("survivors stayed warm: unrelated plan retained, exactly one "
+   "epoch-stale invalidation, init counter monotone")
+
+oracle = ElasticStencilRunner(
+    dataclasses.replace(cfg, checkpoint_every=0, recovery_mode="relaunch"),
+    None, devices=jax.devices()[:1],
+).run()
+assert np.array_equal(result.final_interior, oracle.final_interior), (
+    "in-grid resumed run diverged from the single-device oracle"
+)
+ok("resumed trajectory bitwise == 1-device oracle")
+
+bench_path = os.environ.get(BENCH_VAR, "BENCH_elastic_loss_ingrid.json")
+rec = dict(result.bench_record(), mode="loss-ingrid")
+with open(bench_path, "w") as f:
+    json.dump(rec, f, indent=1)
+    f.write("\n")
+ok(f"BENCH row written to {bench_path}")
+
+print(f"ALL {len(PASS)} ELASTIC-INGRID CHECKS PASSED")
+sys.exit(0)

@@ -1,0 +1,97 @@
+"""Rank-JOIN chaos check over the REAL membership wire.
+
+The CI leg for mid-run growth: a run starts on 2 devices, a joining rank
+registers with the live localhost TCP coordinator at step 3, and the
+mesh grows to 4 devices — with NO checkpoint anywhere (``ckpt_dir=None``,
+``checkpoint_every=0``), so bitwise equality to the 1-device oracle
+proves the grown topology computed on the survivors' LIVE iterate moved
+through ``reshard_state``, not on anything restored from disk.  Also
+asserted: the JOIN bumps the membership epoch per registered member, the
+founding members never go cold, and ``join_us`` lands in the BENCH row.
+"""
+
+import os
+
+# 8 virtual host devices, pinned BEFORE jax initializes (standalone
+# program: the repo conftest does this for pytest, not for us)
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.launch.elastic import ElasticConfig, ElasticStencilRunner
+from repro.launch.membership import (
+    MembershipClient,
+    MembershipServer,
+    MembershipService,
+)
+
+BENCH_VAR = "REPRO_ELASTIC_BENCH"
+JOIN_STEP = 3
+
+PASS = []
+
+
+def ok(name):
+    print(f"OK {name}")
+    PASS.append(name)
+
+
+cfg = ElasticConfig(
+    global_interior=(16, 8), n_steps=6, checkpoint_every=0,
+    recovery_mode="in-grid", heartbeat_timeout=30.0,
+)
+
+svc = MembershipService(heartbeat_timeout=cfg.heartbeat_timeout)
+with MembershipServer(svc) as srv:
+    cli = MembershipClient(srv.address, timeout=10.0)
+    runner = ElasticStencilRunner(
+        cfg, None,  # NO checkpoint directory: nothing to restore from
+        devices=jax.devices()[:2],
+        joins=[(JOIN_STEP, jax.devices()[2:4])],
+        membership=cli,  # every membership op crosses the TCP wire
+    )
+    result = runner.run()
+    view = cli.view()
+    # two joining devices = two registrations = two "join" epoch bumps,
+    # visible on the coordinator over the wire
+    assert view.epoch == 2 and view.cause == "join", view
+    assert len(view.members) == 4, view
+
+assert result.replans == 0, result.replans  # growth, not failure recovery
+assert [e.cause for e in result.events] == ["initial", "join"], result.events
+assert (result.events[0].n_devices, result.events[1].n_devices) == (2, 4)
+assert result.final_epoch == 2, result.final_epoch
+ok("rank JOIN grew the mesh 2 -> 4 mid-run over the TCP wire "
+   "(epoch 0 -> 2, one bump per registered member)")
+
+assert result.warm_ranks == 2, result.warm_ranks
+assert result.join_us > 0.0, result.join_us
+assert result.checkpoint_step is None, result.checkpoint_step
+ok("survivors stayed warm and no checkpoint was ever written or "
+   "restored — the JOIN moved live state")
+
+oracle = ElasticStencilRunner(
+    dataclasses.replace(cfg, recovery_mode="relaunch"), None,
+    devices=jax.devices()[:1],
+).run()
+assert np.array_equal(result.final_interior, oracle.final_interior), (
+    "grown-topology run diverged from the single-device oracle"
+)
+ok("joined topology's trajectory bitwise == 1-device oracle")
+
+bench_path = os.environ.get(BENCH_VAR, "BENCH_elastic_join.json")
+rec = dict(result.bench_record(), mode="join")
+assert rec["join_us"] > 0.0, rec
+with open(bench_path, "w") as f:
+    json.dump(rec, f, indent=1)
+    f.write("\n")
+ok(f"BENCH row written to {bench_path} (join_us={rec['join_us']:.0f})")
+
+print(f"ALL {len(PASS)} ELASTIC-JOIN CHECKS PASSED")
+sys.exit(0)

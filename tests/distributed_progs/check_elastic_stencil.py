@@ -30,6 +30,7 @@ import sys
 CKPT_VAR = "REPRO_ELASTIC_CKPT"
 FAIL_VAR = "REPRO_ELASTIC_FAIL_STEP"
 RESUME_VAR = "REPRO_ELASTIC_RESUME"
+BENCH_VAR = "REPRO_ELASTIC_BENCH"  # where phase B writes its BENCH row
 
 FAIL_STEP = 3
 N_STEPS = 6
@@ -103,6 +104,14 @@ if os.environ.get(RESUME_VAR) is not None:
     assert np.array_equal(result.final_interior, oracle.final_interior), (
         "resumed run diverged from the single-device oracle"
     )
+    if os.environ.get(BENCH_VAR):
+        import json
+
+        rec = dict(result.bench_record(), mode="loss-relaunch",
+                   resumed_at=fail_step)
+        with open(os.environ[BENCH_VAR], "w") as f:
+            json.dump(rec, f, indent=1)
+            f.write("\n")
     print(f"RESUME-BITWISE-OK resumed_at={fail_step} "
           f"replan_us={result.events[0].replan_us:.0f}", flush=True)
     sys.exit(0)
@@ -122,7 +131,9 @@ def ok(name):
 
 
 ckpt_dir = tempfile.mkdtemp(prefix="elastic_grid_ckpt_")
-chaos_env = dict(os.environ, **{CKPT_VAR: ckpt_dir, FAIL_VAR: str(FAIL_STEP)})
+bench_path = os.environ.get(BENCH_VAR, "BENCH_elastic_loss_relaunch.json")
+chaos_env = dict(os.environ, **{CKPT_VAR: ckpt_dir, FAIL_VAR: str(FAIL_STEP),
+                                BENCH_VAR: bench_path})
 
 # phase A: the grid is EXPECTED to die mid-exchange at FAIL_STEP
 grid = launch_grid(
@@ -156,5 +167,8 @@ assert "RESUME-BITWISE-OK" in out.stdout, out.stdout[-2000:]
 print(out.stdout, end="")
 ok("survivor relaunch resumed from the checkpoint and matched the "
    "1-device oracle bitwise")
+
+assert os.path.exists(bench_path), bench_path
+ok(f"BENCH row written to {bench_path}")
 
 print(f"ALL {len(PASS)} ELASTIC-STENCIL CHECKS PASSED")

@@ -209,3 +209,134 @@ def test_initial_interior_is_deterministic():
     np.testing.assert_array_equal(initial_interior(CFG),
                                   initial_interior(CFG))
     assert initial_interior(CFG).dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# phase 2: in-grid recovery, JOIN, coordinator fallback, stragglers
+# ---------------------------------------------------------------------------
+
+
+def _prewarm_unrelated_plan(cache):
+    """Park an epoch-FREE persistent plan for an unrelated geometry in the
+    runner's cache — the warmth probe: in-grid recovery must leave it
+    resident (a relaunch would drop it with everything else)."""
+    from repro.core.compat import make_mesh
+    from repro.stencil.domain import Domain
+    from repro.stencil.strategies import StrategyConfig, make_driver
+
+    mesh = make_mesh((2,), ("px",), devices=jax.devices()[:2])
+    dom = Domain(mesh, global_interior=(8, 4), mesh_axes=("px", None),
+                 halo=1)
+    drv = make_driver(
+        StrategyConfig(name="persistent", plan_cache=cache),
+        mesh, dom.halo_spec, ndim=2,
+    )
+    drv.init(jax.ShapeDtypeStruct(dom.stored_global, np.dtype(dom.dtype),
+                                  sharding=dom.sharding()))
+    drv.free()  # drops the reference; the plan stays resident in the cache
+    return set(cache.keys())
+
+
+def test_in_grid_recovery_keeps_survivors_warm(tmp_path):
+    """The phase-2 acceptance test: a mid-exchange loss under
+    ``recovery_mode="in-grid"`` shrinks 4 -> 2 WITHOUT relaunching —
+    survivors keep their processes and their plan cache.  Only the dead
+    topology's epoch-stamped plan is invalidated; the unrelated pre-warmed
+    plan stays resident, the init counter keeps growing (never resets),
+    and the resumed trajectory is still bitwise == oracle."""
+    cfg = dataclasses.replace(CFG, recovery_mode="in-grid")
+    runner = ElasticStencilRunner(
+        cfg, str(tmp_path / "ckpt"),
+        injector=FailureInjector(fail_at_steps=(3,),
+                                 phases=("mid-exchange",)),
+        devices=jax.devices()[:4],
+    )
+    warm_keys = _prewarm_unrelated_plan(runner.cache)
+    inits_before = runner.cache.stats.inits
+    assert inits_before == 1
+    result = runner.run()
+    assert result.recovery_mode == "in-grid"
+    assert [e.cause for e in result.events] == ["initial", "loss-ingrid"]
+    assert (result.events[0].n_devices, result.events[1].n_devices) == (4, 2)
+    # the loss bumped the membership epoch and the new plan carries it
+    assert result.final_epoch == 1 and result.events[1].epoch == 1
+    assert result.warm_ranks == 2
+    # surgical invalidation: ONLY the dead topology's epoch-0 plan dropped
+    assert result.events[1].plan_invalidations == 1
+    assert result.plan_cache_invalidations == 1
+    assert warm_keys <= set(runner.cache.keys())
+    # warmth: inits stayed monotone across the loss — nobody went cold
+    assert result.plan_cache_inits == inits_before + 2
+    np.testing.assert_array_equal(result.final_interior, _oracle(CFG))
+
+
+def test_join_grows_mesh_and_moves_live_state():
+    """A JOIN at step 3 grows 2 -> 4 devices mid-run with NO checkpoint
+    anywhere (``ckpt_dir=None``, ``checkpoint_every=0``): bitwise equality
+    to the oracle proves the grown topology computed on the survivors'
+    LIVE iterate, moved through ``reshard_state`` — there was nothing on
+    disk to restore."""
+    cfg = dataclasses.replace(CFG, checkpoint_every=0,
+                              recovery_mode="in-grid")
+    runner = ElasticStencilRunner(
+        cfg, None, devices=jax.devices()[:2],
+        joins=[(3, jax.devices()[2:4])],
+    )
+    result = runner.run()
+    assert result.replans == 0  # a JOIN is growth, not failure recovery
+    assert [e.cause for e in result.events] == ["initial", "join"]
+    assert (result.events[0].n_devices, result.events[1].n_devices) == (2, 4)
+    # two joining devices = two registrations = two "join" epoch bumps
+    assert result.final_epoch == 2 and result.events[1].epoch == 2
+    assert result.warm_ranks == 2  # the founding members never went cold
+    assert result.join_us > 0.0
+    assert result.checkpoint_step is None  # nothing was ever saved
+    rec = result.bench_record()
+    assert rec["join_us"] == result.join_us
+    assert rec["recovery_mode"] == "in-grid"
+    assert rec["warm_ranks"] == 2 and rec["final_epoch"] == 2
+    np.testing.assert_array_equal(result.final_interior, _oracle(cfg))
+
+
+def test_coordinator_death_falls_back_to_relaunch(tmp_path):
+    """Heartbeats against a dead coordinator surface ``CoordinatorLost``;
+    in-grid recovery is impossible, so the runner takes the PR 6 path —
+    full invalidation, everyone cold — and re-forms membership under a
+    successor whose epoch starts past every old stamp."""
+    cfg = dataclasses.replace(CFG, recovery_mode="in-grid")
+    runner = ElasticStencilRunner(
+        cfg, str(tmp_path / "ckpt"),
+        devices=jax.devices()[:4], fail_coordinator_at=2,
+    )
+    result = runner.run()
+    assert [e.cause for e in result.events] == ["initial",
+                                                "coordinator-lost"]
+    assert result.warm_ranks == 0  # relaunch semantics: everyone cold
+    assert result.final_epoch == 1 and result.events[1].epoch == 1
+    assert result.plan_cache_invalidations == 1  # full invalidate
+    # the successor coordinator is live and sealed at the bumped epoch
+    assert runner.membership.alive
+    assert runner.membership.view.epoch == 1
+    np.testing.assert_array_equal(result.final_interior, _oracle(CFG))
+
+
+def test_straggler_monitor_wired_into_runner():
+    """Satellite: the dormant StragglerMonitor now rides the step loop.
+    factor=0.0 deterministically flags every post-first step; factor=1e9
+    flags none — and the flags land in ElasticResult + the BENCH row."""
+    from repro.train.fault_tolerance import StragglerMonitor
+
+    cfg = dataclasses.replace(CFG, checkpoint_every=0)
+    eager = StragglerMonitor(factor=0.0)
+    result = ElasticStencilRunner(
+        cfg, None, devices=jax.devices()[:2], straggler=eager,
+    ).run()
+    assert [s for s, _, _ in result.straggler_flags] == list(
+        range(1, cfg.n_steps))
+    assert result.bench_record()["straggler_flags"] == [
+        list(f) for f in result.straggler_flags]
+    lax = StragglerMonitor(factor=1e9)
+    result2 = ElasticStencilRunner(
+        cfg, None, devices=jax.devices()[:2], straggler=lax,
+    ).run()
+    assert result2.straggler_flags == []

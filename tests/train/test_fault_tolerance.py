@@ -149,3 +149,109 @@ def test_elastic_reshard_roundtrip():
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     out = reshard_state(state, mesh, {"w": P(None, None)})
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(state["w"]))
+
+
+# ---------------------------------------------------------------------------
+# satellite: phase scoping — a "join"-armed injector cannot leak into
+# steady state (regression alongside the (step, phase) dedup tests above)
+# ---------------------------------------------------------------------------
+
+
+def test_join_phase_scope_cannot_fire_in_steady_state():
+    """probability=1.0 armed for the "join" phase: fires inside the JOIN
+    window, and NEVER during steady-state steps of the grown grid — the
+    scope restores the tag on exit, so it cannot leak forward."""
+    inj = FailureInjector(probability=1.0, phases=("join",), seed=3)
+    for step in range(3):  # steady state before the join: untagged
+        inj.check(step)
+    with pytest.raises(SimulatedFailure):
+        with inj.phase_scope("join"):
+            inj.check(3)  # untagged check inherits the scoped phase
+    # the grown grid's steady-state steps: same injector, still armed,
+    # but the "join" tag died with its window
+    for step in range(4, 50):
+        inj.check(step)
+    assert inj._fired == {(3, "join")}
+    assert inj._active_phase is None  # restored even though check raised
+
+
+def test_phase_scope_explicit_tags_win_and_scopes_nest():
+    inj = FailureInjector(fail_at_steps=(5,), phases=("mid-exchange",))
+    with pytest.raises(SimulatedFailure):
+        with inj.phase_scope("join"):
+            inj.check(5, phase="mid-exchange")  # explicit tag, not "join"
+    assert (5, "mid-exchange") in inj._fired
+    inj2 = FailureInjector(fail_at_steps=(1,), phases=("inner",))
+    with inj2.phase_scope("outer"):
+        with pytest.raises(SimulatedFailure):
+            with inj2.phase_scope("inner"):
+                inj2.check(1)
+        assert inj2._active_phase == "outer"  # inner scope restored outer
+        inj2.check(1)  # outer tag filtered out; nothing fires
+    assert inj2._fired == {(1, "inner")}
+
+
+# ---------------------------------------------------------------------------
+# satellite: reshard_state across unequal old/new meshes
+# ---------------------------------------------------------------------------
+
+
+def _data_mesh(n):
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()[:n]), ("data",))
+
+
+def _assert_matches_fresh_shard(resharded, global_np, new_mesh, spec):
+    """Bitwise equality to a fresh shard of the same global array — both
+    the reassembled value and every per-device shard."""
+    from jax.sharding import NamedSharding
+
+    fresh = jax.device_put(global_np, NamedSharding(new_mesh, spec))
+    np.testing.assert_array_equal(np.asarray(resharded), global_np)
+    shards = {s.device: s for s in resharded.addressable_shards}
+    for ref in fresh.addressable_shards:
+        got = shards[ref.device]
+        assert got.index == ref.index
+        np.testing.assert_array_equal(
+            np.asarray(got.data), np.asarray(ref.data))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 virtual devices (conftest)")
+@pytest.mark.parametrize("n_old,n_new", [(4, 8), (8, 6), (2, 6)])
+def test_reshard_state_across_unequal_meshes(n_old, n_new):
+    """Grow 4->8, shrink 8->6, and 2->6: every leaf lands exactly where a
+    fresh shard of the same global array would."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rng = np.random.default_rng(7)
+    tree_np = {
+        "w": rng.normal(size=(24, 4)).astype(np.float32),
+        "b": rng.normal(size=(24,)).astype(np.float32),
+    }
+    specs = {"w": P("data", None), "b": P("data")}
+    old = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(_data_mesh(n_old), s)),
+        tree_np, specs)
+    new_mesh = _data_mesh(n_new)
+    out = reshard_state(old, new_mesh, specs)
+    for key in tree_np:
+        _assert_matches_fresh_shard(out[key], tree_np[key],
+                                    new_mesh, specs[key])
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 virtual devices (conftest)")
+def test_reshard_state_non_dividing_shard_sizes():
+    """Old and new shard sizes that do NOT divide each other (12 rows:
+    3-row shards over 4 devices -> 2-row shards over 6): every shard
+    boundary moves, so the reshard is a genuine all-to-all, and the
+    result still matches the fresh placement bitwise."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    x = np.arange(12 * 5, dtype=np.float32).reshape(12, 5)
+    old = jax.device_put(x, NamedSharding(_data_mesh(4), P("data", None)))
+    new_mesh = _data_mesh(6)
+    out = reshard_state(old, new_mesh, P("data", None))
+    _assert_matches_fresh_shard(out, x, new_mesh, P("data", None))
